@@ -1,0 +1,160 @@
+"""Fig 6 reproduction: identical training, three data paths —
+
+  (a) local            — data already on the machine
+  (b) AWS File Mode    — one synchronous GET per sample from object storage
+  (c) Fast File Mode   — threaded per-sample GETs (starts fast, no chunking)
+  (d) Deep Lake stream — chunked columnar + parallel fetch + prefetch overlap
+
+Workload mirrors the paper's: an image model (MLP classifier stands in for
+the conv net; per-step compute ~tens of ms like a real accelerator step)
+over 64x64 images.  Remote timing uses the SimulatedS3 cost model
+(cross-region: 30ms TTFB, 50MB/s per connection); sim seconds are reported
+at full scale.  Paper's claim to match: (d) ~= (a); (b) is several x slower.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as dl
+
+from .common import (Timer, build_lake, file_store_read, file_store_write,
+                     make_images, row)
+
+N_IMAGES = 600
+BATCH = 32
+STEPS = 36
+LAT, BW = 0.030, 50e6     # cross-region object store
+TIME_SCALE = 0.0          # pure accounting; wall = compute, sim = IO
+
+
+def _train_step_fn():
+    key = jax.random.PRNGKey(0)
+    d, h, classes = 64 * 64 * 3, 1024, 10
+    w1 = jax.random.normal(key, (d, h), jnp.float32) * 0.01
+    w2 = jax.random.normal(key, (h, classes), jnp.float32) * 0.01
+    params = {"w1": w1, "w2": w2}
+
+    @jax.jit
+    def step(params, x, y):
+        def loss_fn(p):
+            z = jnp.tanh(x.reshape(x.shape[0], -1) @ p["w1"]) @ p["w2"]
+            lse = jax.nn.logsumexp(z, -1)
+            return (lse - jnp.take_along_axis(z, y[:, None], 1)[:, 0]).mean()
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        return {k: params[k] - 0.01 * g[k] for k in params}, loss
+
+    return params, step
+
+
+def _consume(params, step, batch_iter, steps=STEPS):
+    compute = 0.0
+    it = iter(batch_iter)
+    for _ in range(steps):
+        x, y = next(it)
+        t0 = time.perf_counter()
+        params, loss = step(params, jnp.asarray(x, jnp.float32) / 255.0,
+                            jnp.asarray(y))
+        jax.block_until_ready(loss)
+        compute += time.perf_counter() - t0
+    return compute
+
+
+def main() -> List[str]:
+    lines = []
+    images = make_images(N_IMAGES, (64, 64))
+    labels = [i % 10 for i in range(N_IMAGES)]
+    rng = np.random.default_rng(0)
+    order = lambda: rng.permutation(N_IMAGES)
+
+    # ---------------- (a) local
+    params, step = _train_step_fn()
+    imgs_arr = np.stack(images)
+    labs_arr = np.asarray(labels)
+
+    def local_batches():
+        while True:
+            idx = order()
+            for i in range(0, N_IMAGES - BATCH, BATCH):
+                sel = idx[i:i + BATCH]
+                yield imgs_arr[sel], labs_arr[sel]
+
+    compute = _consume(params, step, local_batches())
+    local_wall = compute
+    lines.append(row("fig6_local", local_wall / STEPS * 1e6, "baseline"))
+
+    # ---------------- (b) file mode: sequential GET per sample
+    s3 = dl.SimulatedS3Provider(time_scale=TIME_SCALE, latency_s=LAT,
+                                bandwidth_bps=BW)
+    file_store_write(s3.base, images, labels)
+
+    def filemode_batches():
+        while True:
+            idx = order()
+            for i in range(0, N_IMAGES - BATCH, BATCH):
+                sel = idx[i:i + BATCH]
+                xs = np.stack([file_store_read(s3, int(j)) for j in sel])
+                yield xs, labs_arr[sel]
+
+    s3.reset_stats()
+    params, step = _train_step_fn()
+    compute = _consume(params, step, filemode_batches())
+    wall_b = compute + s3.stats["sim_seconds"]   # sequential: IO adds up
+    lines.append(row("fig6_s3_filemode", wall_b / STEPS * 1e6,
+                     f"slowdown{wall_b / local_wall:.1f}x"))
+
+    # ---------------- (c) fast file mode: threaded GETs, still per-sample
+    s3.reset_stats()
+    pool = cf.ThreadPoolExecutor(8)
+
+    def fastfile_batches():
+        while True:
+            idx = order()
+            for i in range(0, N_IMAGES - BATCH, BATCH):
+                sel = idx[i:i + BATCH]
+                xs = np.stack(list(pool.map(
+                    lambda j: file_store_read(s3, int(j)), sel)))
+                yield xs, labs_arr[sel]
+
+    params, step = _train_step_fn()
+    compute = _consume(params, step, fastfile_batches())
+    wall_c = compute + s3.stats["sim_seconds"] / 8   # 8-way overlapped IO
+    lines.append(row("fig6_s3_fastfile", wall_c / STEPS * 1e6,
+                     f"slowdown{wall_c / local_wall:.1f}x"))
+
+    # ---------------- (d) deep lake streaming
+    s3b = dl.SimulatedS3Provider(time_scale=TIME_SCALE, latency_s=LAT,
+                                 bandwidth_bps=BW)
+    build_lake(images, codec="quant8", storage=s3b, chunk_mb=2)
+    s3b.reset_stats()
+    dsr = dl.Dataset(dl.chain(dl.MemoryProvider(), s3b,
+                              capacity_bytes=64 << 20))
+    loader = dsr.dataloader(batch_size=BATCH, shuffle=True, num_workers=8,
+                            drop_last=True)
+
+    def lake_batches():
+        while True:
+            for b in loader:
+                yield b["images"], b["labels"]
+
+    params, step = _train_step_fn()
+    compute = _consume(params, step, lake_batches())
+    # chunked fetch overlaps compute through the prefetch queue: the critical
+    # path is max(compute, per-connection IO), plus residual handoff
+    wall_d = max(compute, s3b.stats["sim_seconds"] / 8) \
+        + 0.1 * min(compute, s3b.stats["sim_seconds"] / 8)
+    lines.append(row("fig6_deeplake_stream", wall_d / STEPS * 1e6,
+                     f"slowdown{wall_d / local_wall:.2f}x_"
+                     f"reqs{s3b.stats['requests']}"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,76 @@
+"""Kernel microbenchmarks (interpret mode = correctness-grade timing only;
+real perf comes from the §Roofline analysis of the lowered programs)."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Timer, row
+
+
+def main() -> List[str]:
+    lines = []
+    rng = np.random.default_rng(0)
+
+    # flash attention vs jnp oracle (quality + wall)
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.flash_attention.ref import ref_attention
+    q = jnp.asarray(rng.standard_normal((1, 512, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 512, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 512, 2, 64)), jnp.float32)
+    want = ref_attention(q, k, v, causal=True)
+    got = flash_attention(q, k, v, True, 0, None, 128, 128, True)
+    err = float(jnp.max(jnp.abs(got - want)))
+    ref_jit = jax.jit(lambda q_: ref_attention(q_, k, v, causal=True))
+    jax.block_until_ready(ref_jit(q))
+    with Timer() as t:
+        for _ in range(5):
+            jax.block_until_ready(ref_jit(q))
+    lines.append(row("kern_attn_xla_ref", t.elapsed / 5 * 1e6,
+                     f"maxerr{err:.1e}"))
+
+    # ssd chunked (XLA path) vs naive recurrence
+    from repro.models.ssm import ssd_chunked, ssd_reference
+    x = jnp.asarray(rng.standard_normal((2, 512, 8, 64)) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(1e-3, 0.1, (2, 512, 8)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 4.0, (8,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((2, 512, 1, 64)) * 0.3, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((2, 512, 1, 64)) * 0.3, jnp.float32)
+    f_naive = jax.jit(lambda *a: ssd_reference(*a)[0])
+    f_chunk = jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0])
+    y1 = jax.block_until_ready(f_naive(x, dt, A, Bm, Cm))
+    y2 = jax.block_until_ready(f_chunk(x, dt, A, Bm, Cm))
+    err = float(jnp.max(jnp.abs(y1 - y2)))
+    with Timer() as t:
+        for _ in range(5):
+            jax.block_until_ready(f_naive(x, dt, A, Bm, Cm))
+    naive_us = t.elapsed / 5 * 1e6
+    with Timer() as t:
+        for _ in range(5):
+            jax.block_until_ready(f_chunk(x, dt, A, Bm, Cm))
+    lines.append(row("kern_ssd_chunked_vs_naive", t.elapsed / 5 * 1e6,
+                     f"speedup{naive_us / (t.elapsed / 5 * 1e6):.1f}x_"
+                     f"maxerr{err:.1e}"))
+
+    # decode attention kernel allclose (interpret)
+    from repro.kernels.decode_attention import decode_attention
+    from repro.kernels.decode_attention.ref import ref_decode_attention
+    qd = jnp.asarray(rng.standard_normal((2, 8, 64)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((2, 2048, 2, 64)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((2, 2048, 2, 64)), jnp.float32)
+    with Timer() as t:
+        got = decode_attention(qd, ck, cv, pos=jnp.int32(1500), block_t=512,
+                               interpret=True)
+    err = float(jnp.max(jnp.abs(
+        got - ref_decode_attention(qd, ck, cv, pos=1500))))
+    lines.append(row("kern_decode_attn_interp", t.elapsed * 1e6,
+                     f"maxerr{err:.1e}"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

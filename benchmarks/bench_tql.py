@@ -1,0 +1,64 @@
+"""TQL engine benchmark (§4.3): query latency, numpy engine vs XLA (jax)
+delegation, and the fused-preprocess kernel as the device-side query tail."""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+import repro.core as dl
+
+from .common import Timer, row
+
+
+def main() -> List[str]:
+    lines = []
+    rng = np.random.default_rng(0)
+    ds = dl.dataset()
+    ds.create_tensor("v", dtype="float32", min_chunk_size=1 << 18,
+                     max_chunk_size=1 << 20)
+    ds.create_tensor("lab", htype="class_label")
+    for i in range(4000):
+        ds.append({"v": rng.standard_normal(64).astype(np.float32),
+                   "lab": np.int64(i % 13)})
+    ds.commit("bench")
+    q = ("SELECT * FROM dataset WHERE MEAN(v) > 0.02 AND lab != 3 "
+         "ORDER BY MEAN(v) DESC LIMIT 256")
+    from repro.core.tql import execute_query
+    execute_query(ds, q, engine="numpy")  # warm caches
+    with Timer() as t:
+        for _ in range(3):
+            v1 = execute_query(ds, q, engine="numpy")
+    lines.append(row("tql_numpy_engine", t.elapsed / 3 * 1e6,
+                     f"rows{len(v1)}"))
+    execute_query(ds, q, engine="jax")    # compile
+    with Timer() as t:
+        for _ in range(3):
+            v2 = execute_query(ds, q, engine="jax")
+    lines.append(row("tql_jax_engine", t.elapsed / 3 * 1e6,
+                     f"rows{len(v2)}_match{int(np.array_equal(v1.indices, v2.indices))}"))
+
+    # device-side tail: crop+normalize of a TQL projection, fused vs unfused
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.fused_preprocess import fused_preprocess
+    from repro.kernels.fused_preprocess.ref import ref_preprocess
+    imgs = jnp.asarray(rng.integers(0, 255, (32, 128, 128, 3)), jnp.uint8)
+    crop, mean, std = (16, 16, 96, 96), (0.5, 0.5, 0.5), (0.25, 0.25, 0.25)
+    ref_jit = jax.jit(lambda x: ref_preprocess(x, crop, mean, std))
+    jax.block_until_ready(ref_jit(imgs))
+    with Timer() as t:
+        for _ in range(10):
+            jax.block_until_ready(ref_jit(imgs))
+    lines.append(row("tql_postop_xla", t.elapsed / 10 * 1e6, "unfused"))
+    jax.block_until_ready(fused_preprocess(imgs, crop, mean, std, True))
+    with Timer() as t:
+        jax.block_until_ready(fused_preprocess(imgs, crop, mean, std, True))
+    lines.append(row("tql_postop_pallas_interp", t.elapsed * 1e6,
+                     "fused_interpret_mode"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

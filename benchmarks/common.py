@@ -1,0 +1,79 @@
+"""Shared benchmark plumbing: dataset builders + a 'file storage' baseline
+(one compressed object per sample — the paper's raw-JPEG-files layout; zlib
+stands in for JPEG since no libjpeg ships offline)."""
+
+from __future__ import annotations
+
+import io
+import time
+import zlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import repro.core as dl
+
+
+def make_images(n: int, hw: Tuple[int, int], seed: int = 0) -> List[np.ndarray]:
+    """Smooth random fields: compress like photos (pure noise wouldn't)."""
+    rng = np.random.default_rng(seed)
+    h, w = hw
+    out = []
+    for _ in range(n):
+        base = rng.integers(0, 255, (h // 16 + 2, w // 16 + 2, 3)).astype(
+            np.float32)
+        img = np.kron(base, np.ones((16, 16, 1)))[:h, :w]
+        img = (img + np.linspace(0, 30, w)[None, :, None]) % 255
+        out.append(img.astype(np.uint8))
+    return out
+
+
+def file_store_write(provider: dl.StorageProvider, images: List[np.ndarray],
+                     labels: Optional[List[int]] = None) -> None:
+    """Baseline layout: one compressed (JPEG-class) object per sample."""
+    for i, img in enumerate(images):
+        provider.put(f"files/img_{i:06d}.z",
+                     zlib.compress(img.tobytes(), 1))
+        provider.put(f"files/img_{i:06d}.meta",
+                     np.asarray(img.shape, np.int32).tobytes())
+        if labels is not None:
+            provider.put(f"files/img_{i:06d}.txt", str(labels[i]).encode())
+
+
+def file_store_read(provider: dl.StorageProvider, i: int) -> np.ndarray:
+    shape = np.frombuffer(provider.get(f"files/img_{i:06d}.meta"), np.int32)
+    raw = provider.get(f"files/img_{i:06d}.z")
+    return np.frombuffer(zlib.decompress(raw), np.uint8).reshape(shape)
+
+
+def build_lake(images: List[np.ndarray], *, codec: str,
+               storage: Optional[dl.StorageProvider] = None,
+               chunk_mb: float = 8.0) -> dl.Dataset:
+    ds = dl.Dataset(storage)
+    c = int(chunk_mb * (1 << 20))
+    ds.create_tensor("images", htype="image", dtype="uint8",
+                     sample_compression=codec, min_chunk_size=c // 2,
+                     max_chunk_size=c)
+    ds.create_tensor("labels", htype="class_label")
+    for i, img in enumerate(images):
+        ds.append({"images": img, "labels": np.int64(i % 10)})
+    ds.commit("bench")
+    return ds
+
+
+@dataclass
+class Timer:
+    t0: float = 0.0
+    elapsed: float = 0.0
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.perf_counter() - self.t0
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

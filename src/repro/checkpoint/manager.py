@@ -1,0 +1,148 @@
+"""Checkpointing INTO a Deep Lake dataset — the lakehouse applied to the
+framework itself.
+
+Every save is a *commit* on a Deep Lake dataset whose columns are the
+flattened state leaves: time travel across checkpoints, lineage (which data
+view trained this step — see views.save), and branch-per-experiment come for
+free from §4.1.  Leaves are chunked by the format, so object-storage writes
+are parallel-friendly; saves run on a background thread (training never
+blocks on storage, matching the paper's async-ingest ethos).
+
+Elastic restore: leaves come back as host numpy and are re-device_put with
+the *target* mesh's shardings, so restoring onto a different topology
+(elastic rescale after failures) is the same code path as same-mesh restore.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.dataset import Dataset
+from repro.core.storage import StorageProvider
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, storage: StorageProvider | str | None = None, *,
+                 keep: int = 3, async_save: bool = True) -> None:
+        self.ds = Dataset(storage)
+        if "leaves" not in self.ds.tensor_names:
+            self.ds.create_tensor("leaves", htype="generic", dtype="uint8",
+                                  strict=False, sample_compression="raw",
+                                  min_chunk_size=1 << 20, max_chunk_size=8 << 20)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.saved_steps: List[int] = self._scan_steps()
+
+    # ------------------------------------------------------------------ save
+    def _scan_steps(self) -> List[int]:
+        steps = []
+        for node in self.ds.log():
+            if node.message and node.message.startswith("step="):
+                steps.append(int(node.message.split("=")[1]))
+        return sorted(set(steps))
+
+    def save(self, state, step: int, *, blocking: Optional[bool] = None) -> None:
+        self.wait()
+        if self._error:
+            raise self._error
+        host_leaves = [(k, np.asarray(jax.device_get(v)))
+                       for k, v in _flatten_with_paths(state)]
+        if blocking or not self.async_save:
+            self._write(host_leaves, step)
+        else:
+            self._thread = threading.Thread(
+                target=self._write_safe, args=(host_leaves, step), daemon=True)
+            self._thread.start()
+
+    def _write_safe(self, leaves, step):
+        try:
+            self._write(leaves, step)
+        except BaseException as e:  # surfaced on next save/wait
+            self._error = e
+
+    def _write(self, leaves, step: int) -> None:
+        t = self.ds["leaves"]
+        manifest = []
+        base = len(t)
+        for i, (key, arr) in enumerate(leaves):
+            t.append(np.frombuffer(arr.tobytes(), dtype=np.uint8).copy())
+            manifest.append({"key": key, "dtype": str(arr.dtype),
+                             "shape": list(arr.shape), "row": base + i})
+        self.ds.storage.put(f"manifests/step_{step}.json",
+                            json.dumps({"step": step, "leaves": manifest,
+                                        "time": time.time()}).encode())
+        self.ds.commit(f"step={step}")
+        self.saved_steps.append(step)
+        self._gc()
+
+    def _gc(self) -> None:
+        # retention: drop manifests beyond `keep` (chunks stay version-owned)
+        while len(self.saved_steps) > self.keep:
+            old = self.saved_steps.pop(0)
+            self.ds.storage.delete(f"manifests/step_{old}.json")
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            err, self._error = self._error, None
+            raise err
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        self.wait()
+        return self.saved_steps[-1] if self.saved_steps else None
+
+    def restore(self, like, step: Optional[int] = None,
+                shardings=None):
+        """Rebuild the state pytree. ``like`` provides structure (pytree of
+        arrays or ShapeDtypeStructs); ``shardings`` (optional pytree) places
+        leaves on the *current* mesh — elastic restore is just a different
+        shardings argument."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoints saved")
+        raw = self.ds.storage.get_or_none(f"manifests/step_{step}.json")
+        if raw is None:
+            raise FileNotFoundError(f"no manifest for step {step}")
+        manifest = json.loads(raw.decode())
+        by_key: Dict[str, dict] = {m["key"]: m for m in manifest["leaves"]}
+        t = self.ds["leaves"]
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves_out = []
+        if shardings is not None:
+            shard_flat = jax.tree_util.tree_leaves(shardings)
+        else:
+            shard_flat = [None] * len(flat)
+        for (path, leaf), shard in zip(flat, shard_flat):
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            meta = by_key[key]
+            buf = t.read(meta["row"])
+            arr = np.frombuffer(buf.tobytes(), dtype=np.dtype(meta["dtype"]))
+            arr = arr.reshape(meta["shape"])
+            if shard is not None:
+                leaves_out.append(jax.device_put(arr, shard))
+            else:
+                leaves_out.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves_out)

@@ -1,0 +1,23 @@
+"""Deep Lake core: the paper's contribution (storage format C1, version
+control C2, TQL C3, materialization C4, streaming dataloader C5)."""
+
+from .chunk_encoder import ChunkEncoder
+from .chunks import ChunkBuilder, parse_header, read_all_samples
+from .codecs import available as available_codecs, get_codec
+from .dataset import Dataset, Group, MergeConflict, dataset, empty_like
+from .htypes import available_htypes, get_htype, parse_htype
+from .storage import (LocalProvider, LRUCacheProvider, MemoryProvider,
+                      SimulatedS3Provider, StorageError, StorageProvider,
+                      chain, storage_from_path)
+from .tensor import Tensor, TensorMeta
+from .version_control import VersionControl
+from .views import DatasetView, TensorView
+
+__all__ = [
+    "ChunkBuilder", "ChunkEncoder", "Dataset", "DatasetView", "Group",
+    "LRUCacheProvider", "LocalProvider", "MemoryProvider", "MergeConflict",
+    "SimulatedS3Provider", "StorageError", "StorageProvider", "Tensor",
+    "TensorMeta", "TensorView", "VersionControl", "available_codecs",
+    "available_htypes", "chain", "dataset", "empty_like", "get_codec",
+    "get_htype", "parse_htype", "read_all_samples", "storage_from_path",
+]

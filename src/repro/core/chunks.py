@@ -1,0 +1,193 @@
+"""Chunk binary format (§3.4).
+
+A chunk is a binary blob holding a contiguous run of samples of one tensor:
+
+    magic      4s   b"DLC1"
+    header_sz  u32  byte offset where the data section begins
+    n_samples  u32
+    max_ndim   u8 + 3 pad bytes
+    dtype      16s  zero-padded numpy dtype string
+    codec      16s  zero-padded codec name
+    offsets    u64[n+1]       encoded-payload offsets *within the data section*
+    flags      u8[n]          bit0: payload is a tile descriptor, not data
+    ndims      u8[n]
+    shapes     u32[n*max_ndim] row-major, zero-padded to max_ndim
+    data       bytes          concatenated per-sample codec payloads
+
+Byte ranges for a single sample are therefore
+``[header_sz + offsets[i], header_sz + offsets[i+1])`` — this is what the
+streaming loader's range requests use (§3.5).  Shapes live in the header so
+shape-only queries (TQL ``SHAPE(x)``) never touch payload bytes.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .codecs import Codec, get_codec
+
+MAGIC = b"DLC1"
+FLAG_TILED = 0x01
+_FIXED = struct.Struct("<4sIIB3x16s16s")  # magic, header_sz, n, max_ndim, dtype, codec
+
+
+def _pad16(s: str) -> bytes:
+    b = s.encode()
+    if len(b) > 16:
+        raise ValueError(f"name too long: {s}")
+    return b.ljust(16, b"\x00")
+
+
+@dataclass
+class ChunkHeader:
+    num_samples: int
+    max_ndim: int
+    dtype: str
+    codec: str
+    offsets: np.ndarray  # (n+1,) u64
+    flags: np.ndarray    # (n,)  u8
+    shapes: List[Tuple[int, ...]]
+    header_size: int
+
+    def byte_range(self, i: int) -> Tuple[int, int]:
+        """Absolute [start, end) byte range of sample ``i`` inside the chunk."""
+        return (self.header_size + int(self.offsets[i]),
+                self.header_size + int(self.offsets[i + 1]))
+
+    def is_tiled(self, i: int) -> bool:
+        return bool(self.flags[i] & FLAG_TILED)
+
+    def nbytes_data(self) -> int:
+        return int(self.offsets[-1])
+
+
+def header_size_of(raw_prefix: bytes) -> int:
+    """Given ≥12 leading bytes of a chunk, return its header size."""
+    magic, header_sz, _n, _ndim, _dt, _cd = _FIXED.unpack_from(
+        raw_prefix[:_FIXED.size].ljust(_FIXED.size, b"\x00"))
+    if magic != MAGIC:
+        raise ValueError("not a Deep Lake chunk")
+    return header_sz
+
+
+def parse_header(raw: bytes) -> ChunkHeader:
+    magic, header_sz, n, max_ndim, dtype_b, codec_b = _FIXED.unpack_from(raw)
+    if magic != MAGIC:
+        raise ValueError("not a Deep Lake chunk")
+    off = _FIXED.size
+    offsets = np.frombuffer(raw, dtype="<u8", count=n + 1, offset=off)
+    off += 8 * (n + 1)
+    flags = np.frombuffer(raw, dtype="u1", count=n, offset=off)
+    off += n
+    ndims = np.frombuffer(raw, dtype="u1", count=n, offset=off)
+    off += n
+    shp = np.frombuffer(raw, dtype="<u4", count=n * max_ndim, offset=off)
+    shp = shp.reshape(n, max_ndim) if n else shp.reshape(0, max(max_ndim, 1))
+    shapes = [tuple(int(x) for x in shp[i, : ndims[i]]) for i in range(n)]
+    return ChunkHeader(
+        num_samples=n,
+        max_ndim=max_ndim,
+        dtype=dtype_b.rstrip(b"\x00").decode(),
+        codec=codec_b.rstrip(b"\x00").decode(),
+        offsets=offsets,
+        flags=flags,
+        shapes=shapes,
+        header_size=header_sz,
+    )
+
+
+class ChunkBuilder:
+    """Accumulates samples, then serializes to the chunk wire format.
+
+    The builder tracks its *serialized* size so the tensor can honor the
+    [min_chunk_size, max_chunk_size] policy from §3.4 while appending.
+    """
+
+    def __init__(self, dtype: str, codec: str) -> None:
+        self.dtype = np.dtype(dtype)
+        self.codec_name = codec
+        self._codec: Codec = get_codec(codec)
+        self.payloads: List[bytes] = []
+        self.shapes: List[Tuple[int, ...]] = []
+        self.flags: List[int] = []
+        self._data_bytes = 0
+
+    # -- building ------------------------------------------------------------
+    def append_array(self, arr: np.ndarray) -> int:
+        """Encode + append an ndarray sample; returns its encoded size."""
+        if arr.dtype != self.dtype:
+            raise TypeError(f"chunk dtype {self.dtype} != sample dtype {arr.dtype}")
+        payload = self._codec.encode(arr)
+        self._append_payload(payload, tuple(arr.shape), 0)
+        return len(payload)
+
+    def append_raw(self, payload: bytes, shape: Tuple[int, ...], flags: int = 0) -> int:
+        """Append a pre-encoded payload (used for tile descriptors / copies)."""
+        self._append_payload(bytes(payload), shape, flags)
+        return len(payload)
+
+    def _append_payload(self, payload: bytes, shape: Tuple[int, ...], flags: int) -> None:
+        self.payloads.append(payload)
+        self.shapes.append(shape)
+        self.flags.append(flags)
+        self._data_bytes += len(payload)
+
+    # -- inspection ------------------------------------------------------------
+    @property
+    def num_samples(self) -> int:
+        return len(self.payloads)
+
+    @property
+    def max_ndim(self) -> int:
+        return max((len(s) for s in self.shapes), default=1)
+
+    def nbytes_serialized(self) -> int:
+        n = self.num_samples
+        return (_FIXED.size + 8 * (n + 1) + 2 * n + 4 * n * self.max_ndim
+                + self._data_bytes)
+
+    # -- wire ------------------------------------------------------------
+    def serialize(self) -> bytes:
+        n = self.num_samples
+        max_ndim = self.max_ndim
+        offsets = np.zeros(n + 1, dtype="<u8")
+        np.cumsum([len(p) for p in self.payloads], out=offsets[1:])
+        ndims = np.array([len(s) for s in self.shapes], dtype="u1")
+        shp = np.zeros((n, max_ndim), dtype="<u4")
+        for i, s in enumerate(self.shapes):
+            shp[i, : len(s)] = s
+        header_sz = _FIXED.size + 8 * (n + 1) + 2 * n + 4 * n * max_ndim
+        parts = [
+            _FIXED.pack(MAGIC, header_sz, n, max_ndim,
+                        _pad16(self.dtype.str if self.dtype.names is None else self.dtype.name),
+                        _pad16(self.codec_name)),
+            offsets.tobytes(),
+            np.asarray(self.flags, dtype="u1").tobytes(),
+            ndims.tobytes(),
+            shp.tobytes(),
+        ]
+        parts.extend(self.payloads)
+        return b"".join(parts)
+
+
+def decode_sample(header: ChunkHeader, payload: bytes, i: int) -> np.ndarray:
+    """Decode sample ``i``'s payload bytes (already range-read) to ndarray."""
+    codec = get_codec(header.codec)
+    return codec.decode(payload, header.shapes[i], np.dtype(header.dtype))
+
+
+def read_sample_from_bytes(raw: bytes, i: int,
+                           header: Optional[ChunkHeader] = None) -> np.ndarray:
+    """Decode sample ``i`` from a fully-fetched chunk blob."""
+    h = header or parse_header(raw)
+    s, e = h.byte_range(i)
+    return decode_sample(h, raw[s:e], i)
+
+
+def read_all_samples(raw: bytes) -> List[np.ndarray]:
+    h = parse_header(raw)
+    return [read_sample_from_bytes(raw, i, h) for i in range(h.num_samples)]

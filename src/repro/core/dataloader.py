@@ -1,0 +1,360 @@
+"""Streaming dataloader (§4.5): chunk-aware parallel fetch + decode + shuffle
+buffer + collate, designed so the *training step*, not the pipeline, is the
+bottleneck.
+
+Pipeline per epoch:
+
+ 1. **Order plan** — view positions, shuffled chunk-group-wise: samples are
+    grouped by the chunk (of the largest "primary" tensor) they live in; chunk
+    groups are visited in random order, samples shuffled within group.  Each
+    chunk is therefore fetched ~once per epoch while the emission stream is
+    still well mixed — the paper's "shuffled stream access ... without a
+    separate shuffle cluster" (§3.5), with the sample-level shuffle buffer
+    providing the final decorrelation.
+ 2. **Fetch units** — contiguous runs of planned positions are work items on
+    the :class:`SmartScheduler`.  A pool of threads (the C++-worker analogue:
+    numpy/zlib decode releases the GIL) fetches each needed chunk ONCE per
+    unit, decodes only the needed samples in place, applies the user
+    transform, and deposits samples under a :class:`MemoryBudget` gate.
+ 3. **Emission** — shuffle mode draws uniformly from the ready buffer once it
+    reaches ``shuffle_buffer`` samples; sequential mode emits in exact plan
+    order via a reorder buffer.  Samples are collated (stack / list) into
+    batch dicts.
+
+The loader is re-iterable; every epoch reshuffles with ``seed + epoch``.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from . import chunks as chunklib
+from .scheduler import CostModel, MemoryBudget, SmartScheduler
+from .views import DatasetView
+
+
+@dataclass
+class LoaderStats:
+    samples: int = 0
+    batches: int = 0
+    bytes_fetched: int = 0
+    fetch_seconds: float = 0.0
+    decode_seconds: float = 0.0
+    wait_seconds: float = 0.0   # consumer blocked on pipeline
+    wall_seconds: float = 0.0
+
+    def throughput(self) -> float:
+        return self.samples / self.wall_seconds if self.wall_seconds else 0.0
+
+    def utilization(self, step_seconds_per_batch: float) -> float:
+        """Fraction of wall time the consumer would be busy given a fixed
+        per-batch compute time — the Fig-7 'GPU utilization' analogue."""
+        busy = self.batches * step_seconds_per_batch
+        total = busy + self.wait_seconds
+        return busy / total if total else 0.0
+
+
+class _Unit:
+    __slots__ = ("positions", "needed_at")
+
+    def __init__(self, positions: List[int], needed_at: float) -> None:
+        self.positions = positions
+        self.needed_at = needed_at
+
+
+class DeepLakeLoader:
+    def __init__(
+        self,
+        view: DatasetView,
+        *,
+        batch_size: int = 32,
+        shuffle: bool = False,
+        shuffle_buffer: int = 1024,
+        num_workers: int = 8,
+        tensors: Optional[Sequence[str]] = None,
+        transform: Optional[Callable[[Dict[str, Any]], Dict[str, Any]]] = None,
+        collate: str = "stack",            # stack | list | callable
+        drop_last: bool = False,
+        seed: int = 0,
+        prefetch_units: int = 8,
+        unit_size: int = 16,
+        memory_budget_bytes: int = 512 << 20,
+        ranged_reads: Optional[bool] = None,
+    ) -> None:
+        self.view = view
+        self.batch_size = batch_size
+        self.shuffle = shuffle
+        self.shuffle_buffer = max(1, shuffle_buffer)
+        self.num_workers = max(1, num_workers)
+        self.tensor_names = list(tensors) if tensors else list(view.tensor_names)
+        self.transform = transform
+        self.collate = collate
+        self.drop_last = drop_last
+        self.seed = seed
+        self.prefetch_units = prefetch_units
+        self.unit_size = max(1, unit_size)
+        self.memory = MemoryBudget(memory_budget_bytes)
+        self.ranged_reads = ranged_reads
+        self.costs = CostModel()
+        self.stats = LoaderStats()
+        self._epoch = 0
+        for t in self.tensor_names:
+            if t not in view.tensor_names:
+                raise KeyError(f"loader tensor {t!r} not in view")
+
+    # ------------------------------------------------------------- planning
+    def _primary_tensor(self) -> Optional[str]:
+        best, best_bytes = None, -1
+        for name in self.tensor_names:
+            if name in self.view.derived:
+                continue
+            t = self.view._base_tensor(name)
+            if t.meta.max_shape is None:
+                continue
+            nb = int(np.prod(t.meta.max_shape)) * np.dtype(t.meta.dtype).itemsize
+            if nb > best_bytes:
+                best, best_bytes = name, nb
+        return best
+
+    def _plan(self, rng: np.random.Generator) -> List[int]:
+        n = len(self.view)
+        if not self.shuffle:
+            return list(range(n))
+        primary = self._primary_tensor()
+        if primary is None:
+            order = np.arange(n)
+            rng.shuffle(order)
+            return order.tolist()
+        enc = self.view._base_tensor(primary).encoder
+        groups: Dict[int, List[int]] = defaultdict(list)
+        for pos in range(n):
+            groups[enc.chunk_ord_of(int(self.view.indices[pos]))].append(pos)
+        keys = list(groups)
+        rng.shuffle(keys)
+        plan: List[int] = []
+        for k in keys:
+            g = groups[k]
+            rng.shuffle(g)
+            plan.extend(g)
+        return plan
+
+    # ------------------------------------------------------------ fetch unit
+    def _estimate_sample_bytes(self) -> int:
+        total = 0
+        for name in self.tensor_names:
+            if name in self.view.derived:
+                continue
+            t = self.view._base_tensor(name)
+            if t.meta.max_shape:
+                total += int(np.prod(t.meta.max_shape)) * np.dtype(t.meta.dtype).itemsize
+        return max(total, 1024)
+
+    def _fetch_unit(self, unit: _Unit) -> List[tuple]:
+        """Fetch+decode all samples of a unit. Returns [(pos, sample_dict)]."""
+        t_io = 0.0
+        t_cpu = 0.0
+        out: Dict[int, Dict[str, Any]] = {p: {} for p in unit.positions}
+        for name in self.tensor_names:
+            if name in self.view.derived:
+                for p in unit.positions:
+                    out[p][name] = self.view.derived[name][p]
+                continue
+            tensor = self.view._base_tensor(name)
+            # group unit rows by chunk so each chunk is fetched exactly once
+            by_chunk: Dict[str, List[tuple]] = defaultdict(list)
+            for p in unit.positions:
+                gidx = int(self.view.indices[p])
+                cname, local = tensor.encoder.lookup(gidx)
+                by_chunk[cname].append((p, local, gidx))
+            for cname, rows in by_chunk.items():
+                if tensor._builder is not None and cname == tensor._open_name:
+                    for p, local, gidx in rows:
+                        out[p][name] = tensor.read(gidx)
+                    continue
+                key = tensor._chunk_key(cname)
+                t0 = time.perf_counter()
+                use_ranges = (self.ranged_reads if self.ranged_reads is not None
+                              else (tensor.vc.storage.kind == "s3"
+                                    and len(rows) <= 2))
+                if use_ranges:
+                    header = tensor._header_of(key, True)
+                    payloads = {}
+                    for p, local, _g in rows:
+                        s, e = header.byte_range(local)
+                        payloads[p] = tensor.vc.storage.get_range(key, s, e)
+                        self.stats.bytes_fetched += e - s
+                else:
+                    raw = tensor.vc.storage.get(key)
+                    self.stats.bytes_fetched += len(raw)
+                    header = chunklib.parse_header(raw)
+                    payloads = {}
+                    for p, local, _g in rows:
+                        s, e = header.byte_range(local)
+                        payloads[p] = raw[s:e]
+                t_io += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                for p, local, gidx in rows:
+                    if header.is_tiled(local):
+                        out[p][name] = tensor.read(gidx)  # tiled: dedicated path
+                    else:
+                        out[p][name] = chunklib.decode_sample(header, payloads[p], local)
+                t_cpu += time.perf_counter() - t1
+        t2 = time.perf_counter()
+        result = []
+        for p in unit.positions:
+            sample = out[p]
+            if self.transform is not None:
+                sample = self.transform(sample)
+            result.append((p, sample))
+        t_cpu += time.perf_counter() - t2
+        self.costs.observe("unit", t_io, t_cpu)
+        self.stats.fetch_seconds += t_io
+        self.stats.decode_seconds += t_cpu
+        return result
+
+    # -------------------------------------------------------------- iterate
+    def __iter__(self) -> Iterator[Dict[str, Any]]:
+        rng = np.random.default_rng(self.seed + self._epoch)
+        self._epoch += 1
+        plan = self._plan(rng)
+        n = len(plan)
+        if n == 0:
+            return
+        units = [
+            _Unit(plan[i: i + self.unit_size], needed_at=float(i))
+            for i in range(0, n, self.unit_size)
+        ]
+        sched = SmartScheduler(self.costs)
+        ready: "queue.Queue[Optional[List[tuple]]]" = queue.Queue()
+        est_bytes = self._estimate_sample_bytes()
+        inflight = threading.Semaphore(self.prefetch_units)
+        stop = threading.Event()
+
+        for u in units:
+            sched.submit(u, u.needed_at, "unit")
+        sched.close()
+
+        def worker() -> None:
+            while not stop.is_set():
+                u = sched.take(timeout=0.1)
+                if u is None:
+                    break
+                inflight.acquire()
+                if stop.is_set():
+                    inflight.release()
+                    break
+                if not self.memory.acquire(est_bytes * len(u.positions), timeout=30):
+                    inflight.release()
+                    continue
+                try:
+                    ready.put(self._fetch_unit(u))
+                except Exception as e:  # surface worker errors to consumer
+                    ready.put(e)  # type: ignore[arg-type]
+
+        threads = [threading.Thread(target=worker, daemon=True)
+                   for _ in range(self.num_workers)]
+        t_start = time.perf_counter()
+        for t in threads:
+            t.start()
+
+        emitted = 0
+        batch: List[Dict[str, Any]] = []
+        buffer: List[Dict[str, Any]] = []          # shuffle mode
+        reorder: Dict[int, Dict[str, Any]] = {}    # sequential mode
+        next_pos_i = 0
+        plan_rank = {p: i for i, p in enumerate(plan)}
+
+        def drain_one(block: bool) -> bool:
+            """Move one completed unit into the emission buffers."""
+            nonlocal emitted
+            try:
+                t0 = time.perf_counter()
+                item = ready.get(timeout=60 if block else 0.001)
+                self.stats.wait_seconds += time.perf_counter() - t0
+            except queue.Empty:
+                return False
+            if isinstance(item, Exception):
+                stop.set()
+                raise item
+            inflight.release()
+            self.memory.release(est_bytes * len(item))
+            for pos, sample in item:
+                if self.shuffle:
+                    buffer.append(sample)
+                else:
+                    reorder[plan_rank[pos]] = sample
+            return True
+
+        try:
+            while emitted < n:
+                if self.shuffle:
+                    target = min(self.shuffle_buffer, n - emitted)
+                    while len(buffer) < target and emitted + len(buffer) < n:
+                        if not drain_one(block=True):
+                            break
+                    while not drain_one(block=False):
+                        break
+                    if not buffer:
+                        continue
+                    j = int(rng.integers(len(buffer)))
+                    buffer[j], buffer[-1] = buffer[-1], buffer[j]
+                    sample = buffer.pop()
+                else:
+                    while next_pos_i not in reorder:
+                        drain_one(block=True)
+                    sample = reorder.pop(next_pos_i)
+                    next_pos_i += 1
+                emitted += 1
+                self.stats.samples += 1
+                batch.append(sample)
+                if len(batch) == self.batch_size:
+                    self.stats.batches += 1
+                    yield self._collate(batch)
+                    batch = []
+            if batch and not self.drop_last:
+                self.stats.batches += 1
+                yield self._collate(batch)
+        finally:
+            stop.set()
+            sched.close()
+            # unblock any workers stuck on inflight/memory gates
+            for _ in threads:
+                inflight.release()
+            while not ready.empty():
+                try:
+                    item = ready.get_nowait()
+                    if not isinstance(item, Exception):
+                        self.memory.release(est_bytes * len(item))
+                except queue.Empty:
+                    break
+            for t in threads:
+                t.join(timeout=2)
+            self.stats.wall_seconds += time.perf_counter() - t_start
+
+    # --------------------------------------------------------------- collate
+    def _collate(self, samples: List[Dict[str, Any]]) -> Dict[str, Any]:
+        if callable(self.collate):
+            return self.collate(samples)
+        out: Dict[str, Any] = {}
+        keys = samples[0].keys()
+        for k in keys:
+            vals = [s[k] for s in samples]
+            if self.collate == "stack":
+                shapes = {np.asarray(v).shape for v in vals}
+                out[k] = (np.stack([np.asarray(v) for v in vals])
+                          if len(shapes) == 1 else vals)
+            else:
+                out[k] = vals
+        return out
+
+    def __len__(self) -> int:
+        n = len(self.view)
+        return n // self.batch_size if self.drop_last \
+            else (n + self.batch_size - 1) // self.batch_size

@@ -1,0 +1,400 @@
+"""Storage providers for the Deep Lake format.
+
+The paper (§3.6) requires pluggable storage: object stores (S3/GCS), POSIX file
+systems, and in-memory stores, composable behind an LRU cache chain.  In this
+container there is no network, so remote object storage is modeled by
+:class:`SimulatedS3Provider`, which wraps any base provider with a calibrated
+latency + bandwidth cost model (per-request latency, per-byte transfer time,
+bounded connection concurrency).  Benchmarks use it to reproduce the paper's
+Fig 5d / Fig 6 remote-vs-local experiments.
+
+All providers speak the same byte-level protocol:
+
+    get(key) -> bytes                  full object read
+    get_range(key, start, end)         ranged read (the format's streaming
+                                       primitive; §3.5 "range-based requests")
+    put(key, data)                     atomic object write
+    delete(key), exists(key), list_keys(prefix), num_bytes(key)
+
+Keys are '/'-separated strings (object-store semantics, no directories).
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Callable, Dict, Iterator, List, Optional
+
+
+class StorageError(KeyError):
+    """Raised when a key is missing or a provider operation fails."""
+
+
+class StorageProvider:
+    """Abstract provider. Subclasses implement the five byte-level primitives."""
+
+    #: human-readable provider kind, used by the scheduler's cost model
+    kind: str = "abstract"
+
+    def get(self, key: str) -> bytes:
+        raise NotImplementedError
+
+    def get_range(self, key: str, start: int, end: int) -> bytes:
+        """Return ``obj[start:end]``. ``end`` is exclusive; may exceed len."""
+        raise NotImplementedError
+
+    def put(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+    def exists(self, key: str) -> bool:
+        raise NotImplementedError
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        raise NotImplementedError
+
+    def num_bytes(self, key: str) -> int:
+        return len(self.get(key))
+
+    def clear(self) -> None:
+        for key in list(self.list_keys()):
+            self.delete(key)
+
+    # -- convenience -------------------------------------------------------
+    def get_or_none(self, key: str) -> Optional[bytes]:
+        try:
+            return self.get(key)
+        except StorageError:
+            return None
+
+    def __contains__(self, key: str) -> bool:
+        return self.exists(key)
+
+
+class MemoryProvider(StorageProvider):
+    """Dict-backed provider; thread-safe. Used for tests and as cache tier."""
+
+    kind = "memory"
+
+    def __init__(self) -> None:
+        self._store: Dict[str, bytes] = {}
+        self._lock = threading.RLock()
+
+    def get(self, key: str) -> bytes:
+        with self._lock:
+            try:
+                return self._store[key]
+            except KeyError:
+                raise StorageError(key) from None
+
+    def get_range(self, key: str, start: int, end: int) -> bytes:
+        return self.get(key)[start:end]
+
+    def put(self, key: str, data: bytes) -> None:
+        with self._lock:
+            self._store[key] = bytes(data)
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._store.pop(key, None)
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            return key in self._store
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        with self._lock:
+            return sorted(k for k in self._store if k.startswith(prefix))
+
+    def num_bytes(self, key: str) -> int:
+        with self._lock:
+            try:
+                return len(self._store[key])
+            except KeyError:
+                raise StorageError(key) from None
+
+    def total_bytes(self) -> int:
+        with self._lock:
+            return sum(len(v) for v in self._store.values())
+
+
+class LocalProvider(StorageProvider):
+    """POSIX filesystem provider. Keys map to paths under ``root``."""
+
+    kind = "local"
+
+    def __init__(self, root: str) -> None:
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        path = os.path.normpath(os.path.join(self.root, key))
+        if not path.startswith(self.root):
+            raise StorageError(f"key escapes root: {key}")
+        return path
+
+    def get(self, key: str) -> bytes:
+        try:
+            with open(self._path(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            raise StorageError(key) from None
+
+    def get_range(self, key: str, start: int, end: int) -> bytes:
+        try:
+            with open(self._path(key), "rb") as f:
+                f.seek(start)
+                return f.read(max(0, end - start))
+        except FileNotFoundError:
+            raise StorageError(key) from None
+
+    def put(self, key: str, data: bytes) -> None:
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)  # atomic on POSIX
+
+    def delete(self, key: str) -> None:
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def exists(self, key: str) -> bool:
+        return os.path.isfile(self._path(key))
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        keys = []
+        for dirpath, _dirnames, filenames in os.walk(self.root):
+            for name in filenames:
+                rel = os.path.relpath(os.path.join(dirpath, name), self.root)
+                rel = rel.replace(os.sep, "/")
+                if rel.startswith(prefix):
+                    keys.append(rel)
+        return sorted(keys)
+
+    def num_bytes(self, key: str) -> int:
+        try:
+            return os.path.getsize(self._path(key))
+        except FileNotFoundError:
+            raise StorageError(key) from None
+
+
+class SimulatedS3Provider(StorageProvider):
+    """Object-storage cost model over a base provider.
+
+    Models the three effects that matter for the paper's experiments:
+
+    * per-request latency (TTFB): ``latency_s`` seconds per GET/PUT, i.e. why
+      iterating many small files is slow (§2.3);
+    * bandwidth: ``bandwidth_bps`` bytes/sec per connection for the payload;
+    * bounded concurrency: at most ``max_connections`` in-flight requests —
+      more threads than connections queue up.
+
+    ``time_scale`` compresses simulated seconds into real sleep so benchmarks
+    finish quickly while preserving ratios; accounting (``stats``) always
+    records *unscaled* simulated seconds.  With ``time_scale=0`` no real sleep
+    happens at all (pure accounting), which is what unit tests use.
+    """
+
+    kind = "s3"
+
+    def __init__(
+        self,
+        base: Optional[StorageProvider] = None,
+        *,
+        latency_s: float = 0.015,
+        bandwidth_bps: float = 95e6,
+        max_connections: int = 64,
+        time_scale: float = 1.0,
+        clock: Optional[Callable[[], float]] = None,
+    ) -> None:
+        self.base = base if base is not None else MemoryProvider()
+        self.latency_s = float(latency_s)
+        self.bandwidth_bps = float(bandwidth_bps)
+        self.time_scale = float(time_scale)
+        self._sem = threading.BoundedSemaphore(max_connections)
+        self._lock = threading.Lock()
+        self._clock = clock or time.monotonic
+        self.stats = {
+            "requests": 0,
+            "bytes_down": 0,
+            "bytes_up": 0,
+            "sim_seconds": 0.0,
+        }
+
+    # -- cost model --------------------------------------------------------
+    def _charge(self, nbytes: int, *, upload: bool = False) -> None:
+        sim = self.latency_s + nbytes / self.bandwidth_bps
+        with self._lock:
+            self.stats["requests"] += 1
+            self.stats["bytes_up" if upload else "bytes_down"] += nbytes
+            self.stats["sim_seconds"] += sim
+        if self.time_scale > 0:
+            time.sleep(sim * self.time_scale)
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            for k in self.stats:
+                self.stats[k] = 0 if k != "sim_seconds" else 0.0
+
+    # -- protocol ----------------------------------------------------------
+    def get(self, key: str) -> bytes:
+        with self._sem:
+            data = self.base.get(key)
+            self._charge(len(data))
+            return data
+
+    def get_range(self, key: str, start: int, end: int) -> bytes:
+        with self._sem:
+            data = self.base.get_range(key, start, end)
+            self._charge(len(data))
+            return data
+
+    def put(self, key: str, data: bytes) -> None:
+        with self._sem:
+            self._charge(len(data), upload=True)
+            self.base.put(key, data)
+
+    def delete(self, key: str) -> None:
+        with self._sem:
+            self._charge(0)
+            self.base.delete(key)
+
+    def exists(self, key: str) -> bool:
+        return self.base.exists(key)
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        with self._sem:
+            self._charge(0)
+            return self.base.list_keys(prefix)
+
+    def num_bytes(self, key: str) -> int:
+        return self.base.num_bytes(key)
+
+
+class LRUCacheProvider(StorageProvider):
+    """LRU cache chained in front of a slower provider (§3.6).
+
+    Reads fill the cache; writes go through to the base (write-through) so the
+    base is always authoritative.  ``capacity_bytes`` bounds resident bytes.
+    Range reads are served from a cached full object when present; otherwise
+    they pass through *without* filling (streaming reads should not evict the
+    working set — matches the paper's "buffer of fetched and unutilized data"
+    being managed by the loader, not the cache).
+    """
+
+    kind = "lru"
+
+    def __init__(self, base: StorageProvider, capacity_bytes: int = 256 << 20,
+                 cache: Optional[StorageProvider] = None) -> None:
+        self.base = base
+        self.capacity_bytes = int(capacity_bytes)
+        self._cache: Dict[str, bytes] = {}
+        self._order: Dict[str, int] = {}  # key -> tick (monotone)
+        self._tick = 0
+        self._size = 0
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+
+    # -- cache mechanics ----------------------------------------------------
+    def _touch(self, key: str) -> None:
+        self._tick += 1
+        self._order[key] = self._tick
+
+    def _admit(self, key: str, data: bytes) -> None:
+        if len(data) > self.capacity_bytes:
+            return
+        with self._lock:
+            if key in self._cache:
+                self._size -= len(self._cache[key])
+            self._cache[key] = data
+            self._size += len(data)
+            self._touch(key)
+            while self._size > self.capacity_bytes and self._cache:
+                victim = min(self._order, key=self._order.get)
+                self._size -= len(self._cache.pop(victim))
+                del self._order[victim]
+
+    def _evict(self, key: str) -> None:
+        with self._lock:
+            if key in self._cache:
+                self._size -= len(self._cache.pop(key))
+                self._order.pop(key, None)
+
+    # -- protocol ----------------------------------------------------------
+    def get(self, key: str) -> bytes:
+        with self._lock:
+            if key in self._cache:
+                self.hits += 1
+                self._touch(key)
+                return self._cache[key]
+            self.misses += 1
+        data = self.base.get(key)
+        self._admit(key, data)
+        return data
+
+    def get_range(self, key: str, start: int, end: int) -> bytes:
+        with self._lock:
+            if key in self._cache:
+                self.hits += 1
+                self._touch(key)
+                return self._cache[key][start:end]
+            self.misses += 1
+        return self.base.get_range(key, start, end)
+
+    def put(self, key: str, data: bytes) -> None:
+        self.base.put(key, data)
+        self._admit(key, bytes(data))
+
+    def delete(self, key: str) -> None:
+        self._evict(key)
+        self.base.delete(key)
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            if key in self._cache:
+                return True
+        return self.base.exists(key)
+
+    def list_keys(self, prefix: str = "") -> List[str]:
+        return self.base.list_keys(prefix)
+
+    def num_bytes(self, key: str) -> int:
+        with self._lock:
+            if key in self._cache:
+                return len(self._cache[key])
+        return self.base.num_bytes(key)
+
+
+def chain(*providers: StorageProvider, capacity_bytes: int = 256 << 20) -> StorageProvider:
+    """Chain providers into a cache hierarchy, fastest first.
+
+    ``chain(mem, s3)`` returns an LRU over ``s3``; mirrors the paper's
+    "LRU cache of remote S3 storage with local in-memory data".
+    """
+    if not providers:
+        raise ValueError("need at least one provider")
+    if len(providers) == 1:
+        return providers[0]
+    out = providers[-1]
+    for _faster in reversed(providers[:-1]):
+        out = LRUCacheProvider(out, capacity_bytes=capacity_bytes)
+    return out
+
+
+def storage_from_path(path: str, **kwargs) -> StorageProvider:
+    """URL-ish constructor: ``mem://``, ``s3sim://``, or a filesystem path."""
+    if path.startswith("mem://"):
+        return MemoryProvider()
+    if path.startswith("s3sim://"):
+        return SimulatedS3Provider(MemoryProvider(), **kwargs)
+    if path.startswith("file://"):
+        path = path[len("file://"):]
+    return LocalProvider(path)

@@ -1,0 +1,475 @@
+"""Tensor column API (§3.2): typed, append-only + in-place-editable, ragged.
+
+A Tensor owns:
+  * a :class:`ChunkEncoder` (index map) snapshot for the current version,
+  * an open in-memory :class:`ChunkBuilder` absorbing appends,
+  * per-sample ids (u64) for merge identity,
+  * meta (htype, dtype, codec, chunk-size bounds, min/max shapes).
+
+Chunking policy (§3.4): appends accumulate in the open chunk until its
+*serialized* size would exceed ``max_chunk_size``; a chunk smaller than
+``min_chunk_size`` left behind by an earlier version is reopened copy-on-write.
+Samples whose encoded payload alone exceeds ``max_chunk_size`` are tiled
+(:mod:`.tiling`).  All mutation is routed through the version-control layer so
+time travel stays correct.
+"""
+
+from __future__ import annotations
+
+import json
+import uuid
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from . import chunks as chunklib
+from .chunk_encoder import ChunkEncoder
+from .chunks import FLAG_TILED, ChunkBuilder, ChunkHeader
+from .codecs import get_codec
+from .htypes import get_htype
+from .storage import StorageError
+from .tiling import (TileDescriptor, assemble_from_tiles, assemble_region,
+                     plan_tile_shape, split_into_tiles, tiles_for_region)
+from .version_control import VersionControl
+
+DEFAULT_MIN_CHUNK = 8 << 20
+DEFAULT_MAX_CHUNK = 16 << 20
+
+
+def _new_chunk_name(prefix: str = "c") -> str:
+    return f"{prefix}{uuid.uuid4().hex[:12]}"
+
+
+@dataclass
+class TensorMeta:
+    htype: str = "generic"
+    dtype: Optional[str] = None
+    codec: str = "raw"
+    min_chunk_size: int = DEFAULT_MIN_CHUNK
+    max_chunk_size: int = DEFAULT_MAX_CHUNK
+    strict: bool = True
+    min_shape: Optional[List[int]] = None
+    max_shape: Optional[List[int]] = None
+    links: List[str] = field(default_factory=list)  # storage providers for link[...]
+
+    def to_json(self) -> dict:
+        return self.__dict__.copy()
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TensorMeta":
+        m = cls()
+        for k, v in d.items():
+            setattr(m, k, v)
+        return m
+
+    def update_shape_bounds(self, shape: Tuple[int, ...]) -> None:
+        s = list(shape)
+        if self.min_shape is None:
+            self.min_shape, self.max_shape = list(s), list(s)
+            return
+        if len(s) != len(self.min_shape):
+            # ragged ndim: collapse to unconstrained
+            n = max(len(s), len(self.min_shape))
+            self.min_shape = [0] * n
+            self.max_shape = [max(max(self.max_shape, default=0),
+                                  max(s, default=0))] * n
+            return
+        self.min_shape = [min(a, b) for a, b in zip(self.min_shape, s)]
+        self.max_shape = [max(a, b) for a, b in zip(self.max_shape, s)]
+
+
+class Tensor:
+    """One column of a dataset, bound to a version-control node."""
+
+    def __init__(self, name: str, vc: VersionControl, meta: Optional[TensorMeta] = None,
+                 node_id: Optional[str] = None) -> None:
+        self.name = name
+        self.vc = vc
+        self.node_id = node_id          # None => follow vc.current (writable)
+        self._header_cache: dict = {}
+        self._builder: Optional[ChunkBuilder] = None
+        self._open_name: Optional[str] = None
+        self._dirty = False
+        if meta is not None:
+            self.meta = meta
+            self.encoder = ChunkEncoder()
+            self.sample_ids: List[int] = []
+            self._dirty = True
+        else:
+            self._load_state()
+
+    # ------------------------------------------------------------ state I/O
+    def _skey(self, fname: str) -> str:
+        return self.vc.state_key(self.name, fname, self.node_id)
+
+    def _load_state(self) -> None:
+        raw = self.vc.storage.get_or_none(self._skey("meta.json"))
+        if raw is None:
+            raise StorageError(f"tensor {self.name!r} has no state at this version")
+        self.meta = TensorMeta.from_json(json.loads(raw.decode()))
+        enc = self.vc.storage.get_or_none(self._skey("chunk_encoder"))
+        self.encoder = ChunkEncoder.deserialize(enc) if enc else ChunkEncoder()
+        ids = self.vc.storage.get_or_none(self._skey("sample_ids"))
+        self.sample_ids = (
+            [int(x) for x in np.frombuffer(zlib.decompress(ids), dtype="<u8")]
+            if ids else [])
+
+    def flush(self) -> None:
+        """Persist open chunk + encoder + ids + meta + chunk_set + diff."""
+        if self.node_id is not None:
+            return  # read-only binding
+        if self._builder is not None and self._builder.num_samples:
+            key = self.vc.register_new_chunk(self.name, self._open_name)
+            self.vc.storage.put(key, self._builder.serialize())
+        if not self._dirty:
+            return
+        st = self.vc.storage
+        st.put(self._skey("chunk_encoder"), self.encoder.serialize())
+        st.put(self._skey("sample_ids"),
+               zlib.compress(np.asarray(self.sample_ids, dtype="<u8").tobytes(), 1))
+        st.put(self._skey("meta.json"), json.dumps(self.meta.to_json()).encode())
+        self.vc.flush_chunk_set(self.name)
+        self.vc.flush_diff(self.name)
+        self._dirty = False
+
+    # --------------------------------------------------------------- basics
+    def __len__(self) -> int:
+        return self.encoder.num_samples
+
+    @property
+    def num_chunks(self) -> int:
+        return self.encoder.num_chunks
+
+    @property
+    def dtype(self) -> Optional[np.dtype]:
+        return np.dtype(self.meta.dtype) if self.meta.dtype else None
+
+    @property
+    def htype(self) -> str:
+        return self.meta.htype
+
+    @property
+    def shape(self) -> Tuple[Optional[int], ...]:
+        """(len, *dims) with None for ragged dims."""
+        if self.meta.min_shape is None:
+            return (len(self),)
+        dims = tuple(a if a == b else None
+                     for a, b in zip(self.meta.min_shape, self.meta.max_shape))
+        return (len(self),) + dims
+
+    @property
+    def is_link(self) -> bool:
+        return self.meta.htype.startswith("link[")
+
+    @property
+    def is_sequence(self) -> bool:
+        return self.meta.htype.startswith("sequence[")
+
+    # -------------------------------------------------------------- writing
+    def _coerce(self, sample: Any) -> np.ndarray:
+        if self.is_link and isinstance(sample, str):
+            sample = np.frombuffer(sample.encode(), dtype=np.uint8).copy()
+        arr = np.asarray(sample)
+        if self.meta.dtype is None:
+            # first sample locks the dtype (schema inference)
+            spec = get_htype(self.meta.htype)
+            self.meta.dtype = spec.default_dtype or arr.dtype.str
+            self._dirty = True
+        want = np.dtype(self.meta.dtype)
+        if arr.dtype != want:
+            if self.meta.strict and arr.dtype.kind != want.kind and arr.size:
+                # allow int->float style promotion only when not strict
+                if not np.can_cast(arr.dtype, want, casting="same_kind"):
+                    raise TypeError(
+                        f"tensor {self.name!r} ({want}) got {arr.dtype} sample")
+            arr = arr.astype(want)
+        if self.meta.strict:
+            get_htype(self.meta.htype).validate(arr, self.meta.dtype)
+        return arr
+
+    def _fresh_builder(self) -> ChunkBuilder:
+        return ChunkBuilder(self.meta.dtype, self.meta.codec)
+
+    def _ensure_open(self, incoming_bytes: int) -> ChunkBuilder:
+        """Return a builder with room for ``incoming_bytes`` more payload."""
+        if self._builder is not None:
+            if (self._builder.num_samples
+                    and self._builder.nbytes_serialized() + incoming_bytes
+                    > self.meta.max_chunk_size):
+                self._finalize_open()
+            else:
+                return self._builder
+        if self._builder is None:
+            # copy-on-write reopen of an undersized trailing chunk (§3.4)
+            if (self.encoder.num_chunks
+                    and incoming_bytes < self.meta.max_chunk_size):
+                last_ord = self.encoder.num_chunks - 1
+                last_name = self.encoder.name_of(last_ord)
+                key = self.vc.resolve_chunk_key(self.name, last_name, self.node_id)
+                size = self.vc.storage.num_bytes(key) if self.vc.storage.exists(key) else 0
+                if 0 < size < self.meta.min_chunk_size \
+                        and size + incoming_bytes <= self.meta.max_chunk_size:
+                    raw = self.vc.storage.get(key)
+                    header = chunklib.parse_header(raw)
+                    b = self._fresh_builder()
+                    for i in range(header.num_samples):
+                        s, e = header.byte_range(i)
+                        b.append_raw(raw[s:e], header.shapes[i], int(header.flags[i]))
+                    n = self.encoder.samples_in(last_ord)
+                    self.encoder.pop_last()
+                    self._builder = b
+                    self._open_name = _new_chunk_name()
+                    self.encoder.register_chunk(self._open_name, n)
+                    # drop the superseded chunk if it was born in this version
+                    if last_name in self.vc.chunk_set(self.vc.current_id, self.name):
+                        self.vc.forget_chunk(self.name, last_name)
+                        self.vc.storage.delete(key)
+                    self._header_cache.pop(key, None)
+                    return self._builder
+            self._builder = self._fresh_builder()
+            self._open_name = _new_chunk_name()
+        return self._builder
+
+    def _finalize_open(self) -> None:
+        if self._builder is None or not self._builder.num_samples:
+            self._builder, self._open_name = None, None
+            return
+        key = self.vc.register_new_chunk(self.name, self._open_name)
+        self.vc.storage.put(key, self._builder.serialize())
+        self._builder, self._open_name = None, None
+
+    def _append_encoded(self, payload: bytes, shape: Tuple[int, ...], flags: int,
+                        sample_id: Optional[int]) -> int:
+        b = self._ensure_open(len(payload))
+        was_empty = b.num_samples == 0
+        b.append_raw(payload, shape, flags)
+        if was_empty and (self.encoder.num_chunks == 0
+                          or self.encoder.name_of(self.encoder.num_chunks - 1)
+                          != self._open_name):
+            self.encoder.register_chunk(self._open_name, 1)
+        else:
+            self.encoder.extend_last(1)
+        idx = self.encoder.num_samples - 1
+        self.sample_ids.append(sample_id if sample_id is not None
+                               else int(uuid.uuid4().int & ((1 << 64) - 1)))
+        self.meta.update_shape_bounds(shape)
+        self.vc.record_append(self.name, idx, 1)
+        self._dirty = True
+        return idx
+
+    def append(self, sample: Any, sample_id: Optional[int] = None) -> int:
+        """Append one sample; returns its global index."""
+        if self.node_id is not None:
+            raise PermissionError("tensor bound to a sealed version is read-only")
+        self.vc.require_writable()
+        arr = self._coerce(sample)
+        codec = get_codec(self.meta.codec)
+        payload = codec.encode(arr)
+        if len(payload) > self.meta.max_chunk_size:
+            desc = self._write_tiled(arr)
+            return self._append_encoded(desc.to_bytes(), tuple(arr.shape),
+                                        FLAG_TILED, sample_id)
+        return self._append_encoded(payload, tuple(arr.shape), 0, sample_id)
+
+    def extend(self, samples: Sequence[Any]) -> None:
+        for s in samples:
+            self.append(s)
+
+    def _write_tiled(self, arr: np.ndarray) -> TileDescriptor:
+        tile_shape = plan_tile_shape(
+            arr.shape, arr.dtype.itemsize,
+            max(1, int(self.meta.max_chunk_size * 0.8)))
+        grid, tiles = split_into_tiles(arr, tile_shape)
+        codec = get_codec(self.meta.codec)
+        names = []
+        for t in tiles:
+            name = _new_chunk_name("t")
+            key = self.vc.register_new_chunk(self.name, name)
+            self.vc.storage.put(key, codec.encode(t))
+            names.append(name)
+        return TileDescriptor(tuple(arr.shape), tile_shape, grid, names,
+                              self.meta.dtype, self.meta.codec)
+
+    # ------------------------------------------------------------- updating
+    def __setitem__(self, idx: int, sample: Any) -> None:
+        if self.node_id is not None:
+            raise PermissionError("tensor bound to a sealed version is read-only")
+        self.vc.require_writable()
+        n = len(self)
+        if idx < 0:
+            idx += n
+        if idx >= n:
+            if self.meta.strict:
+                raise IndexError(
+                    f"index {idx} out of bounds for strict tensor of length {n}; "
+                    f"create with strict=False for sparse assignment (§3.5)")
+            empty = np.zeros((0,), dtype=self.meta.dtype or np.asarray(sample).dtype)
+            while len(self) < idx:
+                self.append(empty)
+            self.append(sample)
+            return
+        arr = self._coerce(sample)
+        codec = get_codec(self.meta.codec)
+        payload = codec.encode(arr)
+        flags = 0
+        if len(payload) > self.meta.max_chunk_size:
+            desc = self._write_tiled(arr)
+            payload, flags = desc.to_bytes(), FLAG_TILED
+        chunk_name, local = self.encoder.lookup(idx)
+        if self._builder is not None and chunk_name == self._open_name:
+            self._builder.payloads[local] = payload
+            self._builder.shapes[local] = tuple(arr.shape)
+            self._builder.flags[local] = flags
+        else:
+            self._rewrite_chunk(idx, chunk_name, local, payload,
+                                tuple(arr.shape), flags)
+        self.meta.update_shape_bounds(tuple(arr.shape))
+        self.vc.record_update(self.name, idx)
+        self._dirty = True
+
+    def _rewrite_chunk(self, idx: int, chunk_name: str, local: int,
+                       payload: bytes, shape: Tuple[int, ...], flags: int) -> None:
+        """Copy-on-write a sealed/persisted chunk with one sample replaced."""
+        key = self.vc.resolve_chunk_key(self.name, chunk_name, self.node_id)
+        raw = self.vc.storage.get(key)
+        header = chunklib.parse_header(raw)
+        b = self._fresh_builder()
+        for i in range(header.num_samples):
+            if i == local:
+                b.append_raw(payload, shape, flags)
+            else:
+                s, e = header.byte_range(i)
+                b.append_raw(raw[s:e], header.shapes[i], int(header.flags[i]))
+        new_name = _new_chunk_name()
+        new_key = self.vc.register_new_chunk(self.name, new_name)
+        self.vc.storage.put(new_key, b.serialize())
+        ord_ = self.encoder.chunk_ord_of(idx)
+        self.encoder.replace(ord_, new_name)
+        if chunk_name in self.vc.chunk_set(self.vc.current_id, self.name):
+            self.vc.forget_chunk(self.name, chunk_name)
+            self.vc.storage.delete(key)
+        self._header_cache.pop(key, None)
+
+    # --------------------------------------------------------------- reading
+    def _chunk_key(self, chunk_name: str) -> str:
+        return self.vc.resolve_chunk_key(self.name, chunk_name, self.node_id)
+
+    def _header_of(self, key: str, ranged: bool) -> ChunkHeader:
+        h = self._header_cache.get(key)
+        if h is not None:
+            return h
+        if ranged:
+            hs = chunklib.header_size_of(self.vc.storage.get_range(key, 0, 48))
+            h = chunklib.parse_header(self.vc.storage.get_range(key, 0, hs))
+        else:
+            h = chunklib.parse_header(self.vc.storage.get(key))
+        self._header_cache[key] = h
+        return h
+
+    def _payload_of(self, idx: int, *, ranged: Optional[bool] = None
+                    ) -> Tuple[bytes, Tuple[int, ...], bool]:
+        """(payload bytes, shape, is_tiled) for a sample, via open chunk or storage."""
+        chunk_name, local = self.encoder.lookup(idx)
+        if self._builder is not None and chunk_name == self._open_name:
+            b = self._builder
+            return (b.payloads[local], tuple(b.shapes[local]),
+                    bool(b.flags[local] & FLAG_TILED))
+        key = self._chunk_key(chunk_name)
+        if ranged is None:
+            ranged = self.vc.storage.kind in ("s3", "lru")
+        header = self._header_of(key, ranged)
+        s, e = header.byte_range(local)
+        payload = (self.vc.storage.get_range(key, s, e) if ranged
+                   else self.vc.storage.get(key)[s:e])
+        return payload, header.shapes[local], header.is_tiled(local)
+
+    def read(self, idx: int, *, ranged: Optional[bool] = None) -> np.ndarray:
+        n = len(self)
+        if idx < 0:
+            idx += n
+        if not 0 <= idx < n:
+            raise IndexError(f"{idx} out of range [0, {n})")
+        payload, shape, tiled = self._payload_of(idx, ranged=ranged)
+        if tiled:
+            desc = TileDescriptor.from_bytes(payload)
+            tile_payloads = [self.vc.storage.get(self._chunk_key(nm))
+                             for nm in desc.chunk_names]
+            return assemble_from_tiles(desc, tile_payloads)
+        codec = get_codec(self.meta.codec)
+        return codec.decode(payload, shape, np.dtype(self.meta.dtype))
+
+    def read_region(self, idx: int, region: Sequence[slice],
+                    *, ranged: Optional[bool] = None) -> np.ndarray:
+        """Partial sample read (§3.5): tiled samples fetch only needed tiles."""
+        payload, shape, tiled = self._payload_of(idx, ranged=ranged)
+        if tiled:
+            desc = TileDescriptor.from_bytes(payload)
+            need = tiles_for_region(desc, region)
+            payloads = {f: self.vc.storage.get(self._chunk_key(desc.chunk_names[f]))
+                        for f in need}
+            return assemble_region(desc, region, payloads)
+        codec = get_codec(self.meta.codec)
+        arr = codec.decode(payload, shape, np.dtype(self.meta.dtype))
+        return arr[tuple(region)]
+
+    def shape_of(self, idx: int) -> Tuple[int, ...]:
+        """Sample shape without decoding payload (header-only metadata read)."""
+        chunk_name, local = self.encoder.lookup(idx)
+        if self._builder is not None and chunk_name == self._open_name:
+            return tuple(self._builder.shapes[local])
+        key = self._chunk_key(chunk_name)
+        return tuple(self._header_of(key, self.vc.storage.kind == "s3").shapes[local])
+
+    def __getitem__(self, item):
+        if isinstance(item, (int, np.integer)):
+            return self.read(int(item))
+        if isinstance(item, slice):
+            return [self.read(i) for i in range(*item.indices(len(self)))]
+        if isinstance(item, (list, np.ndarray)):
+            return [self.read(int(i)) for i in item]
+        raise TypeError(f"bad index {item!r}")
+
+    def numpy(self) -> np.ndarray:
+        """Stack into one ndarray (requires fixed shape)."""
+        if any(d is None for d in self.shape[1:]):
+            raise ValueError(f"tensor {self.name!r} is ragged; use [] access")
+        if len(self) == 0:
+            return np.zeros((0,), dtype=self.meta.dtype)
+        return np.stack([self.read(i) for i in range(len(self))])
+
+    def text(self, idx: int) -> str:
+        return self.read(idx).tobytes().decode()
+
+    # ---------------------------------------------------------- maintenance
+    def rechunk(self) -> int:
+        """Rewrite all chunks at optimal sizes (§3.5 layout fix); returns #chunks."""
+        self.vc.require_writable()
+        samples = [(self._payload_of(i), self.sample_ids[i]) for i in range(len(self))]
+        # drop current-version chunks we own
+        for name in self.encoder.chunk_names():
+            if name in self.vc.chunk_set(self.vc.current_id, self.name):
+                try:
+                    key = self.vc.resolve_chunk_key(self.name, name, None)
+                    self.vc.storage.delete(key)
+                except StorageError:
+                    pass
+                self.vc.forget_chunk(self.name, name)
+        self.encoder = ChunkEncoder()
+        self._builder, self._open_name = None, None
+        self._header_cache.clear()
+        ids = []
+        for (payload, shape, tiled), sid in samples:
+            b = self._ensure_open(len(payload))
+            was_empty = b.num_samples == 0
+            b.append_raw(payload, shape, FLAG_TILED if tiled else 0)
+            if was_empty:
+                self.encoder.register_chunk(self._open_name, 1)
+            else:
+                self.encoder.extend_last(1)
+            ids.append(sid)
+        self.sample_ids = ids
+        self._dirty = True
+        self.flush()
+        return self.encoder.num_chunks

@@ -1,0 +1,11 @@
+"""Tensor Query Language (§4.3): SQL + NumPy-style tensor ops, compiled to a
+computational graph executed on numpy or delegated to XLA via jax."""
+
+from .ast_nodes import Query
+from .executor import Executor, execute_query
+from .functions import register_function
+from .lexer import TQLSyntaxError
+from .parser import parse, parse_expression
+
+__all__ = ["Executor", "Query", "TQLSyntaxError", "execute_query", "parse",
+           "parse_expression", "register_function"]

@@ -1,0 +1,96 @@
+"""TQL abstract syntax tree (§4.3)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple, Union
+
+
+class Node:
+    def walk(self):
+        yield self
+        for f in self.__dataclass_fields__:  # type: ignore[attr-defined]
+            v = getattr(self, f)
+            for item in (v if isinstance(v, (list, tuple)) else [v]):
+                if isinstance(item, Node):
+                    yield from item.walk()
+
+
+@dataclass
+class Literal(Node):
+    value: Any  # int | float | str | bool | None
+
+
+@dataclass
+class TensorRef(Node):
+    name: str
+
+
+@dataclass
+class ListExpr(Node):
+    items: List[Node]
+
+
+@dataclass
+class UnaryOp(Node):
+    op: str  # '-' | 'not'
+    operand: Node
+
+
+@dataclass
+class BinOp(Node):
+    op: str  # + - * / % == != > >= < <= and or
+    left: Node
+    right: Node
+
+
+@dataclass
+class Call(Node):
+    name: str
+    args: List[Node]
+
+
+@dataclass
+class SliceSpec(Node):
+    start: Optional[Node]
+    stop: Optional[Node]
+    step: Optional[Node]
+    is_slice: bool  # False => single-index subscript
+
+
+@dataclass
+class Index(Node):
+    base: Node
+    parts: List[SliceSpec]
+
+
+@dataclass
+class SelectItem(Node):
+    expr: Node           # may be Literal('*') for star
+    alias: Optional[str]
+
+    @property
+    def is_star(self) -> bool:
+        return isinstance(self.expr, Literal) and self.expr.value == "*"
+
+
+@dataclass
+class Query(Node):
+    items: List[SelectItem]
+    source: str = "dataset"
+    version: Optional[str] = None
+    where: Optional[Node] = None
+    order_by: Optional[Node] = None
+    order_desc: bool = False
+    arrange_by: Optional[Node] = None
+    sample_by: Optional[Node] = None
+    sample_replace: bool = True
+    limit: Optional[int] = None
+    offset: int = 0
+
+    def referenced_tensors(self) -> List[str]:
+        names = []
+        for n in self.walk():
+            if isinstance(n, TensorRef) and n.name not in names:
+                names.append(n.name)
+        return names

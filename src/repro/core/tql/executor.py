@@ -1,0 +1,367 @@
+"""TQL execution (§4.3).
+
+The parsed query becomes a computational graph of tensor operations evaluated
+over a dataset view.  Two engines:
+
+* **vectorized** — when every referenced tensor is fixed-shape, columns are
+  stacked once and the whole WHERE/ORDER expression evaluates as array math.
+  With ``engine="jax"`` the expression graph is jitted through XLA — this is
+  the paper's "execution of the query can be delegated to external tensor
+  computation frameworks" (§4.3).
+* **row-wise** — always-correct fallback (ragged tensors, UDFs without a
+  batched form, CONTAINS over text, ...).
+
+Pipeline order matches the paper's example: WHERE → ORDER BY → ARRANGE BY
+(stable regroup) → SAMPLE BY → LIMIT/OFFSET → SELECT projections.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from ..views import DatasetView
+from .ast_nodes import (BinOp, Call, Index, ListExpr, Literal, Node, Query,
+                        SelectItem, SliceSpec, TensorRef, UnaryOp)
+from .functions import get_function
+from .parser import parse
+
+
+class Unvectorizable(Exception):
+    pass
+
+
+def _truthy(x: Any) -> bool:
+    a = np.asarray(x)
+    if a.size == 0:
+        return False
+    return bool(np.all(a))
+
+
+def _query_seed(text: str) -> int:
+    return zlib.crc32(text.encode()) & 0xFFFFFFFF
+
+
+# --------------------------------------------------------------------- row
+class RowContext:
+    def __init__(self, view: DatasetView, executor: "Executor") -> None:
+        self.view = view
+        self.executor = executor
+        self.i = -1
+        self._cache: Dict[str, Any] = {}
+
+    def bind(self, i: int) -> "RowContext":
+        self.i = i
+        self._cache.clear()
+        return self
+
+    def get(self, name: str) -> Any:
+        if name not in self._cache:
+            if name in self.view.derived:
+                self._cache[name] = self.view.derived[name][self.i]
+            else:
+                self._cache[name] = self.view._base_tensor(name).read(
+                    int(self.view.indices[self.i]))
+        return self._cache[name]
+
+    def has_tensor(self, name: str) -> bool:
+        return name in self.view.derived or name in self.view.tensor_names
+
+
+def eval_row(node: Node, ctx: RowContext) -> Any:
+    if isinstance(node, Literal):
+        return node.value
+    if isinstance(node, TensorRef):
+        return ctx.get(node.name)
+    if isinstance(node, ListExpr):
+        return np.asarray([eval_row(e, ctx) for e in node.items])
+    if isinstance(node, UnaryOp):
+        v = eval_row(node.operand, ctx)
+        return (not _truthy(v)) if node.op == "not" else -np.asarray(v)
+    if isinstance(node, BinOp):
+        if node.op == "and":
+            return _truthy(eval_row(node.left, ctx)) and _truthy(eval_row(node.right, ctx))
+        if node.op == "or":
+            return _truthy(eval_row(node.left, ctx)) or _truthy(eval_row(node.right, ctx))
+        l, r = eval_row(node.left, ctx), eval_row(node.right, ctx)
+        if node.op == "in":
+            return bool(np.isin(np.asarray(l), np.asarray(r)).all())
+        return _APPLY[node.op](np.asarray(l), np.asarray(r))
+    if isinstance(node, Index):
+        base = np.asarray(eval_row(node.base, ctx))
+        return base[tuple(_subscript(p, ctx) for p in node.parts)]
+    if isinstance(node, Call):
+        if node.name == "RANDOM":
+            return float(ctx.executor.rng.random())
+        spec = get_function(node.name)
+        args = []
+        for a in node.args:
+            v = eval_row(a, ctx)
+            # the paper's Fig-4 passes tensor paths as string literals:
+            # IOU(boxes, "training/boxes") — resolve to the row's value.
+            if isinstance(v, str) and isinstance(a, Literal) and ctx.has_tensor(v):
+                v = ctx.get(v)
+            args.append(v)
+        return spec.row(*args)
+    raise TypeError(f"cannot evaluate {node!r}")
+
+
+def _subscript(p: SliceSpec, ctx: RowContext):
+    if p.is_slice:
+        f = lambda e: None if e is None else int(np.asarray(eval_row(e, ctx)))
+        return slice(f(p.start), f(p.stop), f(p.step))
+    return int(np.asarray(eval_row(p.start, ctx)))
+
+
+_APPLY = {
+    "+": lambda a, b: a + b, "-": lambda a, b: a - b, "*": lambda a, b: a * b,
+    "/": lambda a, b: a / b, "%": lambda a, b: a % b,
+    "==": lambda a, b: a == b, "!=": lambda a, b: a != b,
+    ">": lambda a, b: a > b, ">=": lambda a, b: a >= b,
+    "<": lambda a, b: a < b, "<=": lambda a, b: a <= b,
+}
+
+
+# ---------------------------------------------------------------- vectorized
+class VectorEval:
+    """Batched evaluation over stacked columns; raises Unvectorizable to
+    signal fallback.  ``xp`` is numpy or jax.numpy."""
+
+    def __init__(self, view: DatasetView, seed: int, engine: str = "numpy") -> None:
+        self.view = view
+        self.engine = engine
+        self.seed = seed
+        self._cols: Dict[str, np.ndarray] = {}
+        if engine == "jax":
+            import jax.numpy as jnp  # deferred; numpy engine has no jax dep
+            self.xp = jnp
+        else:
+            self.xp = np
+
+    def column(self, name: str) -> np.ndarray:
+        if name not in self._cols:
+            if name in self.view.derived:
+                vals = self.view.derived[name]
+                shapes = {np.asarray(v).shape for v in vals}
+                if len(shapes) > 1:
+                    raise Unvectorizable(name)
+                self._cols[name] = np.stack([np.asarray(v) for v in vals]) \
+                    if vals else np.zeros((0,))
+            else:
+                t = self.view._base_tensor(name)
+                if any(d is None for d in t.shape[1:]):
+                    raise Unvectorizable(f"ragged tensor {name}")
+                vals = [t.read(int(g)) for g in self.view.indices]
+                self._cols[name] = (np.stack(vals) if vals
+                                    else np.zeros((0,) + tuple(t.shape[1:]),
+                                                  dtype=t.meta.dtype))
+        return self._cols[name]
+
+    def eval(self, node: Node) -> np.ndarray:
+        cols = {r.name: self.column(r.name) for r in node.walk()
+                if isinstance(r, TensorRef)}
+        if self.engine == "jax":
+            import jax
+
+            @jax.jit
+            def run(cs):
+                return self._eval(node, cs, self.xp)
+
+            return np.asarray(run({k: self.xp.asarray(v) for k, v in cols.items()}))
+        return np.asarray(self._eval(node, cols, np))
+
+    def _eval(self, node: Node, cols: Dict[str, Any], xp) -> Any:
+        if isinstance(node, Literal):
+            if isinstance(node.value, str):
+                raise Unvectorizable("string literal")
+            return node.value
+        if isinstance(node, TensorRef):
+            return cols[node.name]
+        if isinstance(node, ListExpr):
+            vals = [self._eval(e, cols, xp) for e in node.items]
+            if any(hasattr(v, "ndim") and getattr(v, "ndim", 0) > 0 for v in vals):
+                raise Unvectorizable("list of arrays")
+            return xp.asarray(vals)
+        if isinstance(node, UnaryOp):
+            v = self._eval(node.operand, cols, xp)
+            return xp.logical_not(v) if node.op == "not" else -v
+        if isinstance(node, BinOp):
+            l = self._eval(node.left, cols, xp)
+            r = self._eval(node.right, cols, xp)
+            if node.op == "and":
+                return xp.logical_and(l, r)
+            if node.op == "or":
+                return xp.logical_or(l, r)
+            if node.op == "in":
+                raise Unvectorizable("IN")
+            return _APPLY[node.op](l, r)
+        if isinstance(node, Index):
+            base = self._eval(node.base, cols, xp)
+            has_batch = isinstance(node.base, (TensorRef, Index, Call))
+            subs: List[Any] = [slice(None)] if has_batch else []
+            for p in node.parts:
+                subs.append(self._subscript(p, cols, xp))
+            return base[tuple(subs)]
+        if isinstance(node, Call):
+            if node.name == "RANDOM":
+                n = len(self.view.indices)
+                return xp.asarray(np.random.default_rng(self.seed).random(n))
+            spec = get_function(node.name)
+            if spec.batched is None:
+                raise Unvectorizable(node.name)
+            args = [self._eval(a, cols, xp) for a in node.args]
+            return spec.batched(*args, xp=xp)
+        raise Unvectorizable(str(node))
+
+    def _subscript(self, p: SliceSpec, cols, xp):
+        def const(e):
+            if e is None:
+                return None
+            v = self._eval(e, cols, xp)
+            if hasattr(v, "ndim") and getattr(v, "ndim", 0) > 0:
+                raise Unvectorizable("non-scalar subscript")
+            return int(v)
+        if p.is_slice:
+            return slice(const(p.start), const(p.stop), const(p.step))
+        return const(p.start)
+
+
+# ------------------------------------------------------------------ executor
+def _substitute(node: Node, aliases: Dict[str, Node]) -> Node:
+    """SQL alias support: replace TensorRef(alias) with its SELECT expr."""
+    if isinstance(node, TensorRef) and node.name in aliases:
+        return aliases[node.name]
+    for f in getattr(node, "__dataclass_fields__", {}):
+        v = getattr(node, f)
+        if isinstance(v, Node):
+            setattr(node, f, _substitute(v, aliases))
+        elif isinstance(v, list):
+            setattr(node, f, [_substitute(x, aliases) if isinstance(x, Node)
+                              else x for x in v])
+    return node
+
+
+class Executor:
+    def __init__(self, query: Query, engine: str = "auto") -> None:
+        self.query = query
+        self.engine = engine
+        self.seed = _query_seed(repr(query))
+        self.rng = np.random.default_rng(self.seed)
+        aliases = {it.alias: it.expr for it in query.items
+                   if it.alias and not it.is_star}
+        if aliases:
+            for attr in ("where", "order_by", "arrange_by", "sample_by"):
+                node = getattr(query, attr)
+                if node is not None:
+                    setattr(query, attr, _substitute(node, aliases))
+
+    # evaluate an expression for every row of `view`, preferring vector path
+    def eval_all(self, view: DatasetView, node: Node) -> np.ndarray:
+        if self.engine in ("auto", "numpy", "jax"):
+            try:
+                ve = VectorEval(view, self.seed,
+                                "jax" if self.engine == "jax" else "numpy")
+                out = ve.eval(node)
+                if out.ndim == 0:
+                    out = np.broadcast_to(out, (len(view),))
+                if len(out) == len(view):
+                    return out
+            except Unvectorizable:
+                pass
+            except Exception:
+                if self.engine == "jax":
+                    raise
+        ctx = RowContext(view, self)
+        return np.asarray([eval_row(node, ctx.bind(i)) for i in range(len(view))],
+                          dtype=object if node is None else None)
+
+    def run(self, base: DatasetView) -> DatasetView:
+        q = self.query
+        view = base
+        # WHERE ------------------------------------------------------------
+        if q.where is not None:
+            if len(view):
+                mask = self.eval_all(view, q.where)
+                keep = np.asarray([_truthy(m) for m in np.asarray(mask, dtype=object)]) \
+                    if mask.dtype == object else mask.astype(bool)
+                view = view[np.nonzero(keep)[0]]
+        # ORDER BY ----------------------------------------------------------
+        if q.order_by is not None and len(view):
+            keys = np.asarray(self.eval_all(view, q.order_by), dtype=np.float64)
+            order = np.argsort(keys, kind="stable")
+            if q.order_desc:
+                order = order[::-1]
+            view = view[order]
+        # ARRANGE BY (stable regroup; §4.3 example) ---------------------------
+        if q.arrange_by is not None and len(view):
+            keys = self.eval_all(view, q.arrange_by)
+            try:
+                karr = np.asarray(keys, dtype=np.float64)
+            except (TypeError, ValueError):
+                karr = np.asarray([str(k) for k in keys])
+            view = view[np.argsort(karr, kind="stable")]
+        # SAMPLE BY (weighted; deeplake-style) -------------------------------
+        if q.sample_by is not None and len(view):
+            w = np.clip(np.asarray(self.eval_all(view, q.sample_by),
+                                   dtype=np.float64), 0, None)
+            w = np.nan_to_num(w)
+            n = q.limit if q.limit is not None else len(view)
+            if w.sum() <= 0:
+                w = np.ones(len(view))
+            idx = self.rng.choice(len(view), size=n, replace=q.sample_replace,
+                                  p=w / w.sum())
+            view = view[idx]
+            q = Query(**{**q.__dict__, "limit": None, "offset": 0})
+        # LIMIT/OFFSET --------------------------------------------------------
+        if q.offset:
+            view = view[q.offset:]
+        if q.limit is not None:
+            view = view[: q.limit]
+        # SELECT ---------------------------------------------------------------
+        return self._project(view)
+
+    def _project(self, view: DatasetView) -> DatasetView:
+        items = self.query.items
+        if len(items) == 1 and items[0].is_star:
+            return view
+        keep_raw: List[str] = []
+        derived: Dict[str, List[Any]] = {}
+        for k, item in enumerate(items):
+            if item.is_star:
+                keep_raw = list(view.tensor_names)
+                continue
+            if isinstance(item.expr, TensorRef) and item.alias in (None,
+                                                                   item.expr.name):
+                keep_raw.append(item.expr.name)
+                continue
+            name = item.alias or f"col_{k}"
+            if len(view):
+                vals = self.eval_all(view, item.expr)
+                derived[name] = ([v for v in vals] if vals.dtype != object
+                                 else list(vals))
+            else:
+                derived[name] = []
+        merged = dict(view.derived)
+        merged.update(derived)
+        return DatasetView(view.dataset, view.indices, view.node_id,
+                           tensors=keep_raw, derived=merged)
+
+
+def execute_query(source: Union["Dataset", DatasetView], text: str,
+                  engine: str = "auto") -> DatasetView:
+    q = parse(text)
+    if isinstance(source, DatasetView):
+        if q.version:
+            raise ValueError("VERSION not allowed when querying a view")
+        base = source
+    else:
+        node_id = source.vc.resolve_ref(q.version) if q.version else None
+        base = DatasetView.full(source, node_id=node_id)
+    aliases = {it.alias for it in q.items if it.alias}
+    missing = [t for t in q.referenced_tensors()
+               if t not in base.tensor_names and t not in aliases]
+    if missing:
+        raise KeyError(f"query references unknown tensors: {missing}")
+    return Executor(q, engine=engine).run(base)

@@ -1,0 +1,246 @@
+"""TQL recursive-descent parser (§4.3).
+
+Grammar (SQL subset + tensor extensions):
+
+    query      := SELECT items FROM IDENT [VERSION STRING]
+                  [WHERE expr] [ORDER BY expr [ASC|DESC]] [ARRANGE BY expr]
+                  [SAMPLE BY expr [REPLACE (TRUE|FALSE)]]
+                  [LIMIT NUMBER [OFFSET NUMBER]]
+    items      := '*' | expr [AS IDENT] (',' expr [AS IDENT])*
+    expr       := or_expr
+    or_expr    := and_expr (OR and_expr)*
+    and_expr   := not_expr (AND not_expr)*
+    not_expr   := NOT not_expr | cmp_expr
+    cmp_expr   := add_expr ((==|!=|>|>=|<|<=|IN) add_expr)?
+    add_expr   := mul_expr (('+'|'-') mul_expr)*
+    mul_expr   := unary (('*'|'/'|'%') unary)*
+    unary      := '-' unary | postfix
+    postfix    := primary ('[' subscripts ']')*
+    primary    := NUMBER | STRING | TRUE|FALSE|NULL | list | call | tensor | '(' expr ')'
+    subscripts := sub (',' sub)* ; sub := expr | [expr]':'[expr][':'[expr]]
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+from .ast_nodes import (BinOp, Call, Index, ListExpr, Literal, Node, Query,
+                        SelectItem, SliceSpec, TensorRef, UnaryOp)
+from .lexer import Token, TQLSyntaxError, tokenize
+
+
+class Parser:
+    def __init__(self, text: str) -> None:
+        self.tokens = tokenize(text)
+        self.i = 0
+
+    # ------------------------------------------------------------- plumbing
+    @property
+    def cur(self) -> Token:
+        return self.tokens[self.i]
+
+    def advance(self) -> Token:
+        tok = self.cur
+        self.i += 1
+        return tok
+
+    def accept(self, kind: str, value: Optional[str] = None) -> Optional[Token]:
+        if self.cur.kind == kind and (value is None or self.cur.value == value):
+            return self.advance()
+        return None
+
+    def expect(self, kind: str, value: Optional[str] = None) -> Token:
+        tok = self.accept(kind, value)
+        if tok is None:
+            raise TQLSyntaxError(
+                f"expected {value or kind} at pos {self.cur.pos}, got "
+                f"{self.cur.value!r}")
+        return tok
+
+    def kw(self, word: str) -> Optional[Token]:
+        return self.accept("KEYWORD", word)
+
+    # --------------------------------------------------------------- query
+    def parse_query(self) -> Query:
+        self.expect("KEYWORD", "SELECT")
+        items = self.parse_select_items()
+        q = Query(items=items)
+        if self.kw("FROM"):
+            q.source = self.expect("IDENT").value
+            if self.kw("VERSION"):
+                q.version = self.expect("STRING").value
+        if self.kw("WHERE"):
+            q.where = self.parse_expr()
+        if self.kw("GROUP"):
+            # GROUP BY is aliased to ARRANGE BY (TQL has no aggregation joins)
+            self.expect("KEYWORD", "BY")
+            q.arrange_by = self.parse_expr()
+        if self.kw("ORDER"):
+            self.expect("KEYWORD", "BY")
+            q.order_by = self.parse_expr()
+            if self.kw("DESC"):
+                q.order_desc = True
+            else:
+                self.kw("ASC")
+        if self.kw("ARRANGE"):
+            self.expect("KEYWORD", "BY")
+            q.arrange_by = self.parse_expr()
+        if self.kw("SAMPLE"):
+            self.expect("KEYWORD", "BY")
+            q.sample_by = self.parse_expr()
+            if self.kw("REPLACE"):
+                tok = self.expect("KEYWORD")
+                if tok.value not in ("TRUE", "FALSE"):
+                    raise TQLSyntaxError("REPLACE expects TRUE or FALSE")
+                q.sample_replace = tok.value == "TRUE"
+        if self.kw("LIMIT"):
+            q.limit = int(float(self.expect("NUMBER").value))
+            if self.kw("OFFSET"):
+                q.offset = int(float(self.expect("NUMBER").value))
+        self.expect("EOF")
+        return q
+
+    def parse_select_items(self) -> List[SelectItem]:
+        if self.accept("OP", "*"):
+            return [SelectItem(Literal("*"), None)]
+        items = [self.parse_select_item()]
+        while self.accept("OP", ","):
+            items.append(self.parse_select_item())
+        return items
+
+    def parse_select_item(self) -> SelectItem:
+        expr = self.parse_expr()
+        alias = None
+        if self.kw("AS"):
+            alias = self.expect("IDENT").value
+        return SelectItem(expr, alias)
+
+    # ----------------------------------------------------------- expressions
+    def parse_expr(self) -> Node:
+        return self.parse_or()
+
+    def parse_or(self) -> Node:
+        left = self.parse_and()
+        while self.kw("OR"):
+            left = BinOp("or", left, self.parse_and())
+        return left
+
+    def parse_and(self) -> Node:
+        left = self.parse_not()
+        while self.kw("AND"):
+            left = BinOp("and", left, self.parse_not())
+        return left
+
+    def parse_not(self) -> Node:
+        if self.kw("NOT"):
+            return UnaryOp("not", self.parse_not())
+        return self.parse_cmp()
+
+    def parse_cmp(self) -> Node:
+        left = self.parse_add()
+        for op in ("==", "!=", ">=", "<=", ">", "<"):
+            if self.accept("OP", op):
+                return BinOp(op, left, self.parse_add())
+        if self.kw("IN"):
+            return BinOp("in", left, self.parse_add())
+        return left
+
+    def parse_add(self) -> Node:
+        left = self.parse_mul()
+        while True:
+            if self.accept("OP", "+"):
+                left = BinOp("+", left, self.parse_mul())
+            elif self.accept("OP", "-"):
+                left = BinOp("-", left, self.parse_mul())
+            else:
+                return left
+
+    def parse_mul(self) -> Node:
+        left = self.parse_unary()
+        while True:
+            if self.accept("OP", "*"):
+                left = BinOp("*", left, self.parse_unary())
+            elif self.accept("OP", "/"):
+                left = BinOp("/", left, self.parse_unary())
+            elif self.accept("OP", "%"):
+                left = BinOp("%", left, self.parse_unary())
+            else:
+                return left
+
+    def parse_unary(self) -> Node:
+        if self.accept("OP", "-"):
+            return UnaryOp("-", self.parse_unary())
+        return self.parse_postfix()
+
+    def parse_postfix(self) -> Node:
+        node = self.parse_primary()
+        while self.accept("OP", "["):
+            parts = [self.parse_subscript()]
+            while self.accept("OP", ","):
+                parts.append(self.parse_subscript())
+            self.expect("OP", "]")
+            node = Index(node, parts)
+        return node
+
+    def parse_subscript(self) -> SliceSpec:
+        start = stop = step = None
+        if self.cur.kind == "OP" and self.cur.value == ":":
+            pass
+        else:
+            start = self.parse_expr()
+        if self.accept("OP", ":"):
+            if not (self.cur.kind == "OP" and self.cur.value in (":", "]", ",")):
+                stop = self.parse_expr()
+            if self.accept("OP", ":"):
+                if not (self.cur.kind == "OP" and self.cur.value in ("]", ",")):
+                    step = self.parse_expr()
+            return SliceSpec(start, stop, step, True)
+        return SliceSpec(start, None, None, False)
+
+    def parse_primary(self) -> Node:
+        tok = self.cur
+        if tok.kind == "NUMBER":
+            self.advance()
+            text = tok.value
+            return Literal(float(text) if any(c in text for c in ".eE") else int(text))
+        if tok.kind == "STRING":
+            self.advance()
+            return Literal(tok.value)
+        if tok.kind == "KEYWORD" and tok.value in ("TRUE", "FALSE", "NULL"):
+            self.advance()
+            return Literal({"TRUE": True, "FALSE": False, "NULL": None}[tok.value])
+        if self.accept("OP", "("):
+            e = self.parse_expr()
+            self.expect("OP", ")")
+            return e
+        if self.accept("OP", "["):
+            items = []
+            if not (self.cur.kind == "OP" and self.cur.value == "]"):
+                items.append(self.parse_expr())
+                while self.accept("OP", ","):
+                    items.append(self.parse_expr())
+            self.expect("OP", "]")
+            return ListExpr(items)
+        if tok.kind == "IDENT":
+            self.advance()
+            if self.accept("OP", "("):
+                args = []
+                if not (self.cur.kind == "OP" and self.cur.value == ")"):
+                    args.append(self.parse_expr())
+                    while self.accept("OP", ","):
+                        args.append(self.parse_expr())
+                self.expect("OP", ")")
+                return Call(tok.value.upper(), args)
+            return TensorRef(tok.value)
+        raise TQLSyntaxError(f"unexpected {tok.value!r} at pos {tok.pos}")
+
+
+def parse(text: str) -> Query:
+    return Parser(text).parse_query()
+
+
+def parse_expression(text: str) -> Node:
+    p = Parser(text)
+    node = p.parse_expr()
+    p.expect("EOF")
+    return node

@@ -1,0 +1,365 @@
+"""Version control built into the storage format (§4.1).
+
+Design follows the paper:
+
+* the dataset directory holds a *version tree* file (``version_control_info.json``)
+  with branches and commit nodes;
+* each version (node) has its own sub-directory with per-tensor state —
+  chunk-encoder snapshot, sample ids, ``chunk_set`` (names of chunks CREATED
+  in that version) and ``commit_diff`` (what changed);
+* chunks never move: reading a chunk traverses the commit chain from the
+  current node toward the root and stops at the first version whose
+  chunk_set contains the chunk name;
+* every branch head is a *writable, uncommitted* node.  ``commit`` seals the
+  head and opens a fresh child node (state files copied, chunk_set empty);
+* sample ids (random u64 per appended row) keep identity across branches so
+  ``merge`` can align rows.
+
+Storage layout (keys relative to dataset root):
+
+    version_control_info.json
+    versions/{node}/schema.json                      # tensor list at this version
+    versions/{node}/tensors/{t}/meta.json
+    versions/{node}/tensors/{t}/chunk_encoder
+    versions/{node}/tensors/{t}/sample_ids
+    versions/{node}/tensors/{t}/chunk_set.json
+    versions/{node}/tensors/{t}/commit_diff.json
+    versions/{node}/tensors/{t}/chunks/{chunk_name}
+"""
+
+from __future__ import annotations
+
+import json
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .storage import StorageError, StorageProvider
+
+VC_INFO_KEY = "version_control_info.json"
+
+
+def _new_id() -> str:
+    return uuid.uuid4().hex[:16]
+
+
+@dataclass
+class CommitNode:
+    id: str
+    parent: Optional[str]
+    branch: str
+    message: Optional[str] = None
+    committed: bool = False
+    timestamp: float = 0.0
+    children: List[str] = field(default_factory=list)
+
+    def to_json(self) -> dict:
+        return {"id": self.id, "parent": self.parent, "branch": self.branch,
+                "message": self.message, "committed": self.committed,
+                "timestamp": self.timestamp, "children": self.children}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "CommitNode":
+        return cls(d["id"], d["parent"], d["branch"], d.get("message"),
+                   d.get("committed", False), d.get("timestamp", 0.0),
+                   list(d.get("children", [])))
+
+
+@dataclass
+class CommitDiff:
+    """What changed for one tensor within one version."""
+    added_first: int = -1      # first appended global index (-1: none)
+    added_count: int = 0
+    updated: Set[int] = field(default_factory=set)
+    created: bool = False      # tensor created in this version
+
+    def record_append(self, first_idx: int, count: int) -> None:
+        if self.added_count == 0:
+            self.added_first = first_idx
+        self.added_count += count
+
+    def record_update(self, idx: int) -> None:
+        # an update to a row appended in this same version is not a cross-
+        # version update — it is still part of the "added" set
+        if self.added_first != -1 and idx >= self.added_first:
+            return
+        self.updated.add(int(idx))
+
+    def is_empty(self) -> bool:
+        return self.added_count == 0 and not self.updated and not self.created
+
+    def to_json(self) -> dict:
+        return {"added_first": self.added_first, "added_count": self.added_count,
+                "updated": sorted(self.updated), "created": self.created}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "CommitDiff":
+        return cls(d.get("added_first", -1), d.get("added_count", 0),
+                   set(d.get("updated", [])), d.get("created", False))
+
+
+class VersionControl:
+    """Owns the version tree and per-node tensor state for one dataset."""
+
+    STATE_FILES = ("meta.json", "chunk_encoder", "sample_ids")
+
+    def __init__(self, storage: StorageProvider) -> None:
+        self.storage = storage
+        self.branches: Dict[str, str] = {}
+        self.commits: Dict[str, CommitNode] = {}
+        self.current_id: str = ""
+        # per current-node mutable state (flushed by save_info / tensor flush)
+        self._chunk_sets: Dict[Tuple[str, str], Set[str]] = {}   # (node, tensor)
+        self._diffs: Dict[str, CommitDiff] = {}                  # tensor -> diff (current node)
+        self._load_or_init()
+
+    # ------------------------------------------------------------------ setup
+    def _load_or_init(self) -> None:
+        raw = self.storage.get_or_none(VC_INFO_KEY)
+        if raw is None:
+            root = CommitNode(id=_new_id(), parent=None, branch="main")
+            self.commits = {root.id: root}
+            self.branches = {"main": root.id}
+            self.current_id = root.id
+            self._put_json(self._schema_key(root.id), {"tensors": []})
+            self.save_info()
+        else:
+            d = json.loads(raw.decode())
+            self.branches = dict(d["branches"])
+            self.commits = {k: CommitNode.from_json(v) for k, v in d["commits"].items()}
+            self.current_id = d["current"]
+            self._load_current_diffs()
+
+    def save_info(self) -> None:
+        self._put_json(VC_INFO_KEY, {
+            "branches": self.branches,
+            "commits": {k: v.to_json() for k, v in self.commits.items()},
+            "current": self.current_id,
+        })
+
+    # ------------------------------------------------------------- key helpers
+    @staticmethod
+    def node_dir(node_id: str) -> str:
+        return f"versions/{node_id}"
+
+    def _schema_key(self, node_id: str) -> str:
+        return f"{self.node_dir(node_id)}/schema.json"
+
+    def tensor_dir(self, node_id: str, tensor: str) -> str:
+        return f"{self.node_dir(node_id)}/tensors/{tensor}"
+
+    def state_key(self, tensor: str, fname: str, node_id: Optional[str] = None) -> str:
+        return f"{self.tensor_dir(node_id or self.current_id, tensor)}/{fname}"
+
+    def chunk_key(self, node_id: str, tensor: str, chunk_name: str) -> str:
+        return f"{self.tensor_dir(node_id, tensor)}/chunks/{chunk_name}"
+
+    def _put_json(self, key: str, obj) -> None:
+        self.storage.put(key, json.dumps(obj).encode())
+
+    def _get_json(self, key: str, default=None):
+        raw = self.storage.get_or_none(key)
+        return default if raw is None else json.loads(raw.decode())
+
+    # ------------------------------------------------------------ node state
+    @property
+    def current(self) -> CommitNode:
+        return self.commits[self.current_id]
+
+    def writable(self) -> bool:
+        return not self.current.committed
+
+    def require_writable(self) -> None:
+        if not self.writable():
+            raise PermissionError(
+                f"HEAD {self.current_id} is a sealed commit; checkout a branch "
+                f"(or create one) before writing")
+
+    def schema_tensors(self, node_id: Optional[str] = None) -> List[str]:
+        d = self._get_json(self._schema_key(node_id or self.current_id), {"tensors": []})
+        return list(d["tensors"])
+
+    def set_schema_tensors(self, tensors: List[str]) -> None:
+        self._put_json(self._schema_key(self.current_id), {"tensors": tensors})
+
+    # ----------------------------------------------------------- chunk lookup
+    def chunk_set(self, node_id: str, tensor: str) -> Set[str]:
+        key = (node_id, tensor)
+        if key not in self._chunk_sets:
+            d = self._get_json(self.state_key(tensor, "chunk_set.json", node_id),
+                               {"chunks": []})
+            self._chunk_sets[key] = set(d["chunks"])
+        return self._chunk_sets[key]
+
+    def resolve_chunk_key(self, tensor: str, chunk_name: str,
+                          node_id: Optional[str] = None) -> str:
+        """Paper §4.1 traversal: walk current -> root, first chunk_set hit wins."""
+        nid = node_id or self.current_id
+        while nid is not None:
+            if chunk_name in self.chunk_set(nid, tensor):
+                return self.chunk_key(nid, tensor, chunk_name)
+            nid = self.commits[nid].parent
+        raise StorageError(f"chunk {chunk_name!r} of tensor {tensor!r} not found "
+                           f"in any ancestor of {node_id or self.current_id}")
+
+    def register_new_chunk(self, tensor: str, chunk_name: str) -> str:
+        """Record a chunk created in the current (writable) version."""
+        self.require_writable()
+        self.chunk_set(self.current_id, tensor).add(chunk_name)
+        return self.chunk_key(self.current_id, tensor, chunk_name)
+
+    def forget_chunk(self, tensor: str, chunk_name: str) -> None:
+        self.chunk_set(self.current_id, tensor).discard(chunk_name)
+
+    def flush_chunk_set(self, tensor: str) -> None:
+        cs = sorted(self.chunk_set(self.current_id, tensor))
+        self._put_json(self.state_key(tensor, "chunk_set.json"), {"chunks": cs})
+
+    # ------------------------------------------------------------ diff state
+    def diff_of(self, tensor: str) -> CommitDiff:
+        if tensor not in self._diffs:
+            d = self._get_json(self.state_key(tensor, "commit_diff.json"), None)
+            self._diffs[tensor] = CommitDiff.from_json(d) if d else CommitDiff()
+        return self._diffs[tensor]
+
+    def record_append(self, tensor: str, first_idx: int, count: int) -> None:
+        self.diff_of(tensor).record_append(first_idx, count)
+
+    def record_update(self, tensor: str, idx: int) -> None:
+        self.diff_of(tensor).record_update(idx)
+
+    def record_created(self, tensor: str) -> None:
+        self.diff_of(tensor).created = True
+
+    def flush_diff(self, tensor: str) -> None:
+        self._put_json(self.state_key(tensor, "commit_diff.json"),
+                       self.diff_of(tensor).to_json())
+
+    def _load_current_diffs(self) -> None:
+        self._diffs = {}
+        for t in self.schema_tensors():
+            self.diff_of(t)
+
+    def has_uncommitted_changes(self) -> bool:
+        return any(not d.is_empty() for d in self._diffs.values())
+
+    # --------------------------------------------------------------- commit
+    def commit(self, message: str = "") -> str:
+        """Seal the current head; open a fresh writable child on the branch."""
+        self.require_writable()
+        head = self.current
+        head.committed = True
+        head.message = message
+        head.timestamp = time.time()
+        sealed_id = head.id
+        child = CommitNode(id=_new_id(), parent=sealed_id, branch=head.branch)
+        head.children.append(child.id)
+        self.commits[child.id] = child
+        self.branches[head.branch] = child.id
+        self._copy_state(sealed_id, child.id)
+        self.current_id = child.id
+        self._load_current_diffs()
+        self.save_info()
+        return sealed_id
+
+    def _copy_state(self, src_id: str, dst_id: str) -> None:
+        """Copy small per-tensor state files; chunks stay where created."""
+        tensors = self.schema_tensors(src_id)
+        self._put_json(self._schema_key(dst_id), {"tensors": tensors})
+        for t in tensors:
+            for fname in self.STATE_FILES:
+                raw = self.storage.get_or_none(self.state_key(t, fname, src_id))
+                if raw is not None:
+                    self.storage.put(self.state_key(t, fname, dst_id), raw)
+            self._put_json(self.state_key(t, "chunk_set.json", dst_id), {"chunks": []})
+            self._put_json(self.state_key(t, "commit_diff.json", dst_id),
+                           CommitDiff().to_json())
+
+    # -------------------------------------------------------------- checkout
+    def resolve_ref(self, ref: str) -> str:
+        if ref in self.branches:
+            return self.branches[ref]
+        if ref in self.commits:
+            return ref
+        raise KeyError(f"unknown branch or commit: {ref!r}")
+
+    def checkout(self, ref: str, create: bool = False) -> str:
+        if create:
+            if ref in self.branches:
+                raise ValueError(f"branch {ref!r} exists")
+            base = self.current
+            if not base.committed and self.has_uncommitted_changes():
+                # paper/deeplake behavior: branching with dirty head auto-commits
+                self.commit(f"auto-commit before branch {ref!r}")
+                base = self.commits[self.current.parent]  # the sealed node
+            parent_id = base.id if base.committed else base.parent
+            node = CommitNode(id=_new_id(), parent=parent_id, branch=ref)
+            self.commits[node.id] = node
+            if parent_id is not None:
+                self.commits[parent_id].children.append(node.id)
+                self._copy_state(parent_id, node.id)
+            else:
+                self._put_json(self._schema_key(node.id), {"tensors": []})
+            self.branches[ref] = node.id
+            self.current_id = node.id
+        else:
+            self.current_id = self.resolve_ref(ref)
+        self._load_current_diffs()
+        self.save_info()
+        return self.current_id
+
+    # ------------------------------------------------------------------ log
+    def log(self, ref: Optional[str] = None) -> List[CommitNode]:
+        nid: Optional[str] = self.resolve_ref(ref) if ref else self.current_id
+        out: List[CommitNode] = []
+        while nid is not None:
+            node = self.commits[nid]
+            if node.committed:
+                out.append(node)
+            nid = node.parent
+        return out
+
+    def ancestry(self, node_id: str) -> List[str]:
+        out = []
+        nid: Optional[str] = node_id
+        while nid is not None:
+            out.append(nid)
+            nid = self.commits[nid].parent
+        return out
+
+    def lowest_common_ancestor(self, a: str, b: str) -> Optional[str]:
+        anc_a = set(self.ancestry(a))
+        for nid in self.ancestry(b):
+            if nid in anc_a:
+                return nid
+        return None
+
+    # ----------------------------------------------------------------- diff
+    def diff_between(self, ref_a: str, ref_b: str) -> Dict[str, Dict[str, dict]]:
+        """Per-tensor changes on each side since the LCA: {'a': {...}, 'b': {...}}."""
+        a, b = self.resolve_ref(ref_a), self.resolve_ref(ref_b)
+        lca = self.lowest_common_ancestor(a, b)
+
+        def path_diffs(nid: str) -> Dict[str, dict]:
+            acc: Dict[str, CommitDiff] = {}
+            cur: Optional[str] = nid
+            while cur is not None and cur != lca:
+                for t in self.schema_tensors(cur):
+                    d = self._get_json(self.state_key(t, "commit_diff.json", cur))
+                    if d:
+                        cd = CommitDiff.from_json(d)
+                        if cd.is_empty():
+                            continue
+                        tgt = acc.setdefault(t, CommitDiff())
+                        if cd.added_count:
+                            if tgt.added_count == 0 or cd.added_first < tgt.added_first:
+                                tgt.added_first = cd.added_first if tgt.added_count == 0 \
+                                    else min(tgt.added_first, cd.added_first)
+                            tgt.added_count += cd.added_count
+                        tgt.updated |= cd.updated
+                        tgt.created |= cd.created
+                cur = self.commits[cur].parent
+            return {t: d.to_json() for t, d in acc.items()}
+
+        return {"a": path_diffs(a), "b": path_diffs(b), "lca": lca}

@@ -1,0 +1,166 @@
+"""Dataset views (§4.3/§4.4): an index subset of a dataset at a version.
+
+Query results are views; views stream into the dataloader or materialize into
+a new optimally-chunked dataset.  Views can be persisted (id -> indices) so a
+training run can record exactly which rows it consumed (data lineage).
+"""
+
+from __future__ import annotations
+
+import json
+import uuid
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .tensor import Tensor
+
+
+class TensorView:
+    def __init__(self, tensor: Tensor, indices: np.ndarray) -> None:
+        self.tensor = tensor
+        self.indices = indices
+
+    def __len__(self) -> int:
+        return len(self.indices)
+
+    def read(self, i: int) -> np.ndarray:
+        return self.tensor.read(int(self.indices[i]))
+
+    def __getitem__(self, item):
+        if isinstance(item, (int, np.integer)):
+            return self.read(int(item))
+        return [self.read(int(i)) for i in np.arange(len(self))[item]]
+
+    def numpy(self) -> np.ndarray:
+        return np.stack([self.read(i) for i in range(len(self))]) if len(self) \
+            else np.zeros((0,), dtype=self.tensor.meta.dtype)
+
+    @property
+    def name(self) -> str:
+        return self.tensor.name
+
+
+class DatasetView:
+    """Row subset of a dataset (optionally at a non-head version)."""
+
+    def __init__(self, dataset, indices: np.ndarray,
+                 node_id: Optional[str] = None,
+                 tensors: Optional[Sequence[str]] = None,
+                 derived: Optional[Dict[str, List[Any]]] = None) -> None:
+        self.dataset = dataset
+        self.indices = np.asarray(indices, dtype=np.int64)
+        self.node_id = node_id
+        self._tensor_names = list(tensors) if tensors is not None else None
+        # computed columns produced by a query's SELECT expressions
+        self.derived = derived or {}
+        self._bound: Dict[str, Tensor] = {}
+
+    # ------------------------------------------------------------- factory
+    @classmethod
+    def full(cls, dataset, node_id: Optional[str] = None) -> "DatasetView":
+        if node_id is None:
+            n = dataset.min_len if dataset.tensor_names else 0
+        else:
+            names = dataset.vc.schema_tensors(node_id)
+            n = min((len(Tensor(t, dataset.vc, node_id=node_id)) for t in names),
+                    default=0)
+        return cls(dataset, np.arange(n), node_id=node_id)
+
+    # ------------------------------------------------------------- tensors
+    @property
+    def tensor_names(self) -> List[str]:
+        base = (self._tensor_names if self._tensor_names is not None
+                else self.dataset.vc.schema_tensors(self.node_id))
+        return base + [d for d in self.derived if d not in base]
+
+    def _base_tensor(self, name: str) -> Tensor:
+        if name not in self._bound:
+            if self.node_id is None:
+                self._bound[name] = self.dataset._tensor(name)
+            else:
+                self._bound[name] = Tensor(name, self.dataset.vc, node_id=self.node_id)
+        return self._bound[name]
+
+    def tensor(self, name: str) -> TensorView:
+        return TensorView(self._base_tensor(name), self.indices)
+
+    def __getitem__(self, item):
+        if isinstance(item, str):
+            if item in self.derived:
+                return list(self.derived[item])
+            return self.tensor(item)
+        if isinstance(item, (int, np.integer)):
+            return self.row(int(item))
+        if isinstance(item, slice):
+            sel = np.arange(len(self))[item]
+        else:
+            sel = np.asarray(item, dtype=np.int64)
+        return DatasetView(self.dataset, self.indices[sel], self.node_id,
+                           self._tensor_names,
+                           {k: [v[i] for i in sel] for k, v in self.derived.items()})
+
+    def __len__(self) -> int:
+        return len(self.indices)
+
+    def row(self, i: int, tensors: Optional[Sequence[str]] = None) -> Dict[str, Any]:
+        names = list(tensors) if tensors else self.tensor_names
+        out: Dict[str, Any] = {}
+        for n in names:
+            if n in self.derived:
+                out[n] = self.derived[n][i]
+            else:
+                out[n] = self._base_tensor(n).read(int(self.indices[i]))
+        return out
+
+    def rows(self) -> List[Dict[str, Any]]:
+        return [self.row(i) for i in range(len(self))]
+
+    # --------------------------------------------------------------- persist
+    def save(self, view_id: Optional[str] = None) -> str:
+        """Persist the view (lineage: 'this run trained on exactly these rows')."""
+        vid = view_id or uuid.uuid4().hex[:12]
+        node = self.node_id or self.dataset.vc.current_id
+        self.dataset.storage.put(
+            f"views/{vid}.json",
+            json.dumps({"node": node,
+                        "indices": self.indices.tolist(),
+                        "tensors": self._tensor_names}).encode())
+        return vid
+
+    @classmethod
+    def load(cls, dataset, view_id: str) -> "DatasetView":
+        d = json.loads(dataset.storage.get(f"views/{view_id}.json").decode())
+        return cls(dataset, np.asarray(d["indices"], dtype=np.int64),
+                   node_id=d["node"], tensors=d["tensors"])
+
+    # --------------------------------------------------------------- chaining
+    def query(self, tql: str) -> "DatasetView":
+        from .tql import execute_query
+        return execute_query(self, tql)
+
+    def dataloader(self, **kw):
+        from .dataloader import DeepLakeLoader
+        return DeepLakeLoader(self, **kw)
+
+    def materialize(self, dest=None, **kw):
+        from .materialize import materialize
+        return materialize(self, dest, **kw)
+
+    # ------------------------------------------------------------- locality
+    def chunk_locality(self, tensor: str) -> float:
+        """Fraction of adjacent index pairs living in the same chunk.
+
+        1.0 = perfectly sequential layout; low values = sparse view whose
+        streaming will be chunk-inefficient (§4.4 motivation for materialize).
+        """
+        if len(self.indices) < 2:
+            return 1.0
+        t = self._base_tensor(tensor)
+        same = 0
+        prev = t.encoder.chunk_ord_of(int(self.indices[0]))
+        for i in self.indices[1:]:
+            cur = t.encoder.chunk_ord_of(int(i))
+            same += (cur == prev)
+            prev = cur
+        return same / (len(self.indices) - 1)

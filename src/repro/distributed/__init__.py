@@ -1,0 +1,12 @@
+from .collectives import (collective_wire_bytes, make_quantized_allreduce,
+                          quantized_psum)
+from .fault_tolerance import (FailureInjector, HostFailure, StragglerDetector,
+                              run_resilient)
+from .sharding import (batch_specs, fit_spec, make_rules, make_shard_fn,
+                       pspec_for_specs, sharding_for_specs, spec_for)
+
+__all__ = ["FailureInjector", "HostFailure", "StragglerDetector",
+           "batch_specs", "collective_wire_bytes", "fit_spec", "make_rules",
+           "make_quantized_allreduce", "make_shard_fn", "pspec_for_specs",
+           "quantized_psum", "run_resilient", "sharding_for_specs",
+           "spec_for"]

@@ -1,0 +1,127 @@
+"""Logical-axis -> mesh sharding rules, with divisibility safeguards.
+
+Rules map logical axis names ("batch", "fsdp", "model", "heads", "vocab",
+"ff", "expert", "seq") to mesh axes.  ``fit_spec`` drops a mesh axis when a
+dimension does not divide it (e.g. starcoder2's 24 heads on a 16-wide model
+axis, granite's 49155 vocab) — GQA KV replication and unsharded odd vocabs
+are standard practice, and the roofline table shows their cost honestly.
+
+Per-cell rule selection:
+* train/prefill/decode default: batch+fsdp -> ("pod","data"), tensor axes ->
+  "model", seq unsharded;
+* long_500k (global_batch=1): batch unshardable -> the KV/latent cache's
+  *sequence* axis takes ("pod","data") instead (sequence-parallel decode).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.param import DEFAULT_RULES, ParamSpec, logical_to_spec, tree_map_specs
+
+
+def make_rules(kind: str = "train", *, long_context: bool = False,
+               fsdp: bool = True, seq_shard=None) -> Dict[str, Any]:
+    """``seq_shard``: None | mesh-axis name for the cache sequence dim.
+    Decode with batch on (pod, data) can hand "model" to the cache sequence
+    (beyond-paper H2b: keeps 32k caches sharded when kv_heads < model axis)."""
+    rules = dict(DEFAULT_RULES)
+    if not fsdp:
+        rules["fsdp"] = None
+    if long_context:
+        # batch=1: hand the data axes to the sequence dimension instead
+        rules["batch"] = None
+        rules["seq"] = ("pod", "data")
+    elif seq_shard:
+        rules["seq"] = "data" if seq_shard is True else seq_shard
+    else:
+        rules["seq"] = None
+    return rules
+
+
+def axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+    size = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            size *= mesh.shape[a]
+    return size
+
+
+def fit_spec(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes from dims they don't divide (GSPMD-safe fallback)."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        size = axis_size(mesh, entry)
+        out.append(entry if size and dim % size == 0 else None)
+    return P(*out)
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             mesh: Mesh, rules: Dict[str, Any]) -> P:
+    return fit_spec(shape, logical_to_spec(axes, rules, mesh), mesh)
+
+
+def sharding_for_specs(specs, mesh: Mesh, rules: Dict[str, Any]):
+    """ParamSpec pytree -> NamedSharding pytree (divisibility-safe)."""
+    return tree_map_specs(
+        lambda s: NamedSharding(mesh, spec_for(s.shape, s.axes, mesh, rules)),
+        specs)
+
+
+def pspec_for_specs(specs, mesh: Mesh, rules: Dict[str, Any]):
+    return tree_map_specs(
+        lambda s: spec_for(s.shape, s.axes, mesh, rules), specs)
+
+
+def make_shard_fn(mesh: Optional[Mesh], rules: Dict[str, Any]) -> Callable:
+    """Activation-sharding-constraint callback threaded through the models."""
+    if mesh is None:
+        return lambda x, axes=None: x
+
+    def shard(x, axes=None):
+        if axes is None:
+            return x
+        spec = spec_for(x.shape, tuple(axes), mesh, rules)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return shard
+
+
+def batch_specs(cfg, shape_cfg, mesh: Mesh, rules: Dict[str, Any]):
+    """(ShapeDtypeStruct pytree, NamedSharding pytree) for a train/prefill
+    batch of the given architecture and shape point."""
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    ax: Dict[str, Tuple[Optional[str], ...]] = {}
+    if cfg.num_codebooks:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, cfg.num_codebooks, S), np.int32)
+        ax["tokens"] = ("batch", None, None)
+        if shape_cfg.kind == "train":
+            specs["targets"] = specs["tokens"]
+            ax["targets"] = ax["tokens"]
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), np.int32)
+        ax["tokens"] = ("batch", None)
+        if shape_cfg.kind == "train":
+            specs["targets"] = specs["tokens"]
+            ax["targets"] = ax["tokens"]
+    if shape_cfg.kind == "train":
+        specs["loss_mask"] = jax.ShapeDtypeStruct((B, S), np.float32)
+        ax["loss_mask"] = ("batch", None)
+    if cfg.num_image_tokens:
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, 1024), np.float32)
+        ax["image_embeds"] = ("batch", None, None)
+    shardings = {k: NamedSharding(mesh, spec_for(v.shape, ax[k], mesh, rules))
+                 for k, v in specs.items()}
+    return specs, shardings

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships as <name>/<name>.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd wrapper, custom_vjp where trainable) and ref.py (pure-jnp
+oracle); tests sweep shapes/dtypes and assert allclose vs the oracle in
+interpret mode (this container is CPU-only; TPU is the lowering target).
+"""
+
+from . import decode_attention, flash_attention, fused_preprocess, ssd_scan
+
+__all__ = ["decode_attention", "flash_attention", "fused_preprocess",
+           "ssd_scan"]

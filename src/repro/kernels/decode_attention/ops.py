@@ -1,0 +1,11 @@
+"""Jit'd wrapper for the decode-attention kernel (inference only: no vjp)."""
+
+from __future__ import annotations
+
+from .decode_attention import decode_attention_fwd
+
+
+def decode_attention(q, cache_k, cache_v, *, pos, window: int = 0,
+                     block_t: int = 512, interpret: bool = False):
+    return decode_attention_fwd(q, cache_k, cache_v, pos=pos, window=window,
+                                block_t=block_t, interpret=interpret)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for single-token decode attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_decode_attention(q, cache_k, cache_v, *, pos, window: int = 0):
+    """q (B,H,D); caches (B,T,Hkv,D) -> (B,H,D).
+
+    Valid cache entries: idx <= pos (full cache) or the ring-buffer rule
+    idx < min(pos+1, T) for window caches.
+    """
+    B, H, D = q.shape
+    T, Hkv = cache_k.shape[1], cache_k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bgnd,btgd->bgnt", qg, cache_k.astype(jnp.float32))
+    s = s / np.sqrt(D)
+    idx = jnp.arange(T)
+    limit = jnp.minimum(pos + 1, T) if window else pos + 1
+    s = jnp.where((idx < limit)[None, None, None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bgnt,btgd->bgnd", p, cache_v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

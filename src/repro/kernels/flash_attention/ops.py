@@ -1,0 +1,44 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+Forward runs the Pallas kernel; backward is a custom VJP that recomputes
+attention with the pure-jnp reference formula (activation-recompute bwd —
+the standard pattern while a dedicated bwd kernel lands; on CPU containers
+only the interpret-mode forward is exercised anyway).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_fwd
+from .ref import ref_attention
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 512, interpret: bool = False):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               scale=scale, block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, scale, block_q, block_k, interpret):
+    out = flash_attention(q, k, v, causal, window, scale, block_q, block_k,
+                          interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, scale, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref_attention(q_, k_, v_, causal=causal,
+                                         window=window, scale=scale),
+        q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,4 @@
+from . import ops, ref
+from .ops import fused_preprocess
+
+__all__ = ["fused_preprocess", "ops", "ref"]

@@ -1,0 +1,15 @@
+"""Jit'd wrapper for fused preprocess (data path: no vjp needed)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .fused_preprocess import fused_preprocess_fwd
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def fused_preprocess(images, crop, mean, std, interpret: bool = False):
+    return fused_preprocess_fwd(images, crop, tuple(mean), tuple(std),
+                                interpret=interpret)

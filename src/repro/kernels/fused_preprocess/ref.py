@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for fused crop+normalize."""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+def ref_preprocess(images, crop: Tuple[int, int, int, int],
+                   mean: Sequence[float], std: Sequence[float]):
+    y0, x0, h, w = crop
+    x = images[:, y0:y0 + h, x0:x0 + w, :].astype(jnp.float32) / 255.0
+    mean_a = jnp.asarray(mean, jnp.float32)
+    std_a = jnp.asarray(std, jnp.float32)
+    return (x - mean_a) / std_a

@@ -1,0 +1,5 @@
+from . import ops, ref
+from .ops import ssd
+from .ssd_scan import ssd_fwd
+
+__all__ = ["ops", "ref", "ssd", "ssd_fwd"]

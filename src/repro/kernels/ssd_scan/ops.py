@@ -1,0 +1,36 @@
+"""Jit'd wrapper for the SSD kernel; bwd = recompute via the chunked XLA
+formulation (identical math), standard recompute-vjp pattern."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.models.ssm import ssd_chunked
+
+from .ssd_scan import ssd_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def ssd(x, dt, A, Bm, Cm, chunk: int = 256, interpret: bool = False):
+    return ssd_fwd(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+def _fwd(x, dt, A, Bm, Cm, chunk, interpret):
+    out = ssd(x, dt, A, Bm, Cm, chunk, interpret)
+    return out, (x, dt, A, Bm, Cm)
+
+
+def _bwd(chunk, interpret, res, g):
+    x, dt, A, Bm, Cm = res
+    gy, gstate = g
+
+    def f(x_, dt_, A_, B_, C_):
+        return ssd_chunked(x_, dt_, A_, B_, C_, chunk=chunk)
+
+    _, vjp = jax.vjp(f, x, dt, A, Bm, Cm)
+    return vjp((gy, gstate))
+
+
+ssd.defvjp(_fwd, _bwd)

@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the SSD kernel: the naive per-token recurrence."""
+
+from repro.models.ssm import ssd_reference as ref_ssd  # single source of truth
+
+__all__ = ["ref_ssd"]

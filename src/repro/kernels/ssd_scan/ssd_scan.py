@@ -1,0 +1,110 @@
+"""Mamba2 SSD chunked-scan kernel (TPU Pallas).
+
+The SSD decomposition (DESIGN.md §6, arXiv:2405.21060) maps perfectly onto
+the TPU: the intra-chunk quadratic part is three (Q×Q)/(Q×N)/(Q×P) matmuls
+(MXU), and the inter-chunk recurrence is a sequential state pass that lives
+in VMEM scratch across the innermost grid axis.
+
+Grid (B, n_heads, n_chunks), chunks innermost: for each (batch, head) a core
+walks the chunks left-to-right, carrying the (N, P) state in scratch — the
+HBM traffic is exactly one read of x/dt/B/C and one write of y (+ one final
+state write), vs the XLA path's materialized (nc, N, P) inter-chunk states.
+
+Cumulative sums inside the kernel use a lower-triangular ones matmul
+(MXU-friendly; avoids relying on mosaic scan lowering).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
+                state_acc, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_acc[...] = jnp.zeros_like(state_acc)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)            # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)             # (Q,)
+    A = a_ref[0, 0]                                      # scalar (negative)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)           # (Q, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)           # (Q, N)
+
+    a = dt * A                                           # (Q,) log-decays
+    # inclusive cumsum via lower-triangular ones matmul (MXU)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tril_incl = (ii >= jj).astype(jnp.float32)           # i >= j
+    a_cum = jax.lax.dot_general(tril_incl, a[:, None],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)[:, 0]
+    a_tot = a_cum[-1]
+
+    # intra-chunk: masked-decay attention-like matmuls
+    seg = a_cum[:, None] - a_cum[None, :]                # sum over (j, i]
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    M = scores * L * dt[None, :]
+    y_intra = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of carried state, then state update
+    state = state_acc[...]                               # (N, P)
+    y_inter = jax.lax.dot_general(Cm, state, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(a_cum)[:, None]
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    wts = dt * jnp.exp(a_tot - a_cum)                    # (Q,)
+    upd = jax.lax.dot_general(Bm, x * wts[:, None], (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    state_acc[...] = state * jnp.exp(a_tot) + upd
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        state_ref[0, 0, :, :] = state_acc[...]
+
+
+def ssd_fwd(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool = False):
+    """x (B,S,nh,P), dt (B,S,nh), A (nh,), Bm/Cm (B,S,G,N)
+    -> y (B,S,nh,P), final_state (B,nh,N,P)."""
+    B, S, nh, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hg = nh // G
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    a2 = A.reshape(nh, 1).astype(jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, chunk=Q, n_chunks=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, c: (b, c, h // hg, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, c: (b, c, h // hg, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((B, nh, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt.astype(jnp.float32), a2, Bm, Cm)
+    return y, state

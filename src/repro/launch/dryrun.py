@@ -1,0 +1,182 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent on 512
+placeholder devices (the two lines above MUST precede any jax import).
+
+For every (architecture x input-shape) cell and mesh:
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=...).lower(*abstract_inputs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())    # proves it fits
+        print(compiled.cost_analysis())      # FLOPs/bytes for §Roofline
+
+Results (memory/cost/collective stats) land in experiments/dryrun/*.json,
+which EXPERIMENTS.md §Dry-run and §Roofline are generated from.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-moe-1b-a400m --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both] [--jobs 1]
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, attn_impl: str = "xla",
+             microbatches: int = 1, grad_compress: bool = False,
+             fsdp=None, remat=None, seq_shard: bool = False,
+             tag: str = "", verbose: bool = True) -> dict:
+    import jax  # first jax touch happens AFTER the XLA_FLAGS line
+    from repro.configs import ARCHS, SHAPES, cell_is_runnable
+    from repro.launch.hlo_analysis import analyze
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import (Roofline, active_param_count,
+                                       extract_cost, model_flops)
+    from repro.launch.steps import lower_cell
+    from repro.models.param import count_params
+
+    cfg = ARCHS[arch]
+    if seq_shard:
+        cfg = cfg.with_(seq_shard_attn=True)
+    shape_cfg = SHAPES[shape]
+    if not cell_is_runnable(arch, shape):
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                "status": "SKIP(full-attention)"}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.size
+    t0 = time.time()
+    lowered, model, rules = lower_cell(cfg, shape_cfg, mesh,
+                                       attn_impl=attn_impl,
+                                       microbatches=microbatches,
+                                       grad_compress=grad_compress,
+                                       fsdp=fsdp, remat=remat)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    if verbose:
+        print(mem)
+        print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+               if k in ("flops", "bytes accessed")})
+    flops_ca, nbytes_ca, peak = extract_cost(compiled)
+    # exact per-device accounting: scan bodies x trip count (hlo_analysis);
+    # cost_analysis (counts loop bodies once) kept for cross-reference
+    hlo = analyze(compiled.as_text())
+    n_active = active_param_count(cfg, model)
+    rl = Roofline(
+        arch=arch, shape=shape, mesh=mesh_kind, chips=chips,
+        flops_per_device=hlo.flops, bytes_per_device=hlo.hbm_bytes,
+        collective_bytes=hlo.collective_bytes,
+        collective_breakdown={k: int(v)
+                              for k, v in hlo.collective_by_kind.items()},
+        peak_memory_per_device=peak,
+        model_flops_total=model_flops(cfg, shape_cfg, n_active),
+    )
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "status": "OK",
+        "chips": chips, "kind": shape_cfg.kind,
+        "params_total": count_params(model.param_specs()),
+        "params_active": n_active,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+        },
+        "cost_analysis_raw": {"flops": flops_ca, "bytes": nbytes_ca},
+        "collective_counts": {k: int(v)
+                              for k, v in hlo.collective_count.items()},
+        "roofline": rl.to_json(),
+        "knobs": {"attn_impl": attn_impl, "microbatches": microbatches,
+                  "grad_compress": grad_compress, "fsdp": fsdp,
+                  "remat": remat},
+        "tag": tag,
+    }
+    return result
+
+
+def cell_filename(arch: str, shape: str, mesh_kind: str, tag: str = "") -> Path:
+    suffix = f"__{tag}" if tag else ""
+    return OUT_DIR / f"{arch}__{shape}__{mesh_kind}{suffix}.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--attn-impl", default="xla")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--fsdp", default=None, choices=[None, "on", "off"])
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from repro.configs import ARCHS, SHAPES  # safe: flags already set
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        failures = 0
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for mesh_kind in meshes:
+                    out = cell_filename(arch, shape, mesh_kind, args.tag)
+                    if args.skip_existing and out.exists():
+                        print(f"skip (exists): {out.name}")
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape,
+                           "--mesh", mesh_kind, "--tag", args.tag,
+                           "--attn-impl", args.attn_impl]
+                    print(f"=== {arch} x {shape} x {mesh_kind}", flush=True)
+                    r = subprocess.run(cmd, capture_output=True, text=True,
+                                       timeout=args.timeout)
+                    if r.returncode != 0:
+                        failures += 1
+                        print(f"FAIL rc={r.returncode}\n{r.stdout[-2000:]}"
+                              f"\n{r.stderr[-4000:]}")
+                    else:
+                        print(r.stdout.strip().splitlines()[-1]
+                              if r.stdout.strip() else "(no output)")
+        print(f"dry-run driver done; failures={failures}")
+        return 1 if failures else 0
+
+    fsdp = None if args.fsdp is None else (args.fsdp == "on")
+    try:
+        result = run_cell(args.arch, args.shape, args.mesh,
+                          attn_impl=args.attn_impl,
+                          microbatches=args.microbatches,
+                          grad_compress=args.grad_compress,
+                          fsdp=fsdp, remat=args.remat,
+                          seq_shard=args.seq_shard, tag=args.tag)
+    except Exception:
+        traceback.print_exc()
+        result = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+                  "status": "ERROR", "error": traceback.format_exc()[-2000:],
+                  "tag": args.tag}
+    out = cell_filename(args.arch, args.shape, args.mesh, args.tag)
+    out.write_text(json.dumps(result, indent=2))
+    print(json.dumps({k: result.get(k) for k in
+                      ("arch", "shape", "mesh", "status", "compile_s")}))
+    return 0 if result.get("status", "ERROR") in ("OK",) or \
+        str(result.get("status", "")).startswith("SKIP") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

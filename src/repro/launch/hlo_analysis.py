@@ -1,0 +1,409 @@
+"""Exact roofline accounting from compiled HLO text.
+
+``compiled.cost_analysis()`` visits every computation ONCE — while-loop
+(lax.scan) bodies are not multiplied by trip count, so an 80-layer scanned
+transformer reports ~1 layer of FLOPs.  This analyzer parses the optimized
+HLO, resolves the computation call graph (while bodies x trip count, fusions,
+calls, conditionals), and accumulates:
+
+* flops             — dot ops (2*M*N*K*batch from contracting dims) + a
+                      convolution fallback;
+* hbm_bytes         — per top-level op: result bytes + operand bytes
+                      (operands resolved to their def-site result shapes;
+                      fusion internals don't touch HBM);
+* collective_bytes  — result-shape bytes of all-gather / all-reduce /
+                      reduce-scatter / all-to-all / collective-permute,
+                      multiplied through the loop structure.
+
+Trip counts come from the while condition's comparison constant.  Validated
+against cost_analysis() on scan-free programs (test_hlo_analysis.py).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f8e4m3fn|f8e5m2|[subfc]\d+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*(.*)$")
+_OPND_RE = re.compile(r"%([\w.-]+)")
+_CALLED_RE = re.compile(
+    r"(?:calls=|to_apply=|condition=|body=|branch_computations=\{)%?([\w.-]+)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s*\(([^)]*)\)\s*->")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# Pure layout/precision movement: the CPU backend materializes bf16<->f32
+# converts and relayouts that the TPU backend fuses into consumers.  Charging
+# them would bill CPU-lowering artifacts to the TPU roofline, so fusions made
+# ONLY of these opcodes (plus their slices) count as free.
+_PURE_MOVE = {"convert", "bitcast", "copy", "transpose", "broadcast",
+              "reshape", "parameter", "constant", "iota", "dynamic-slice",
+              "slice", "get-tuple-element", "tuple"}
+
+
+def _shape_info(type_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """-> (total bytes, [(dtype, dims), ...]) for possibly-tuple types."""
+    shapes = []
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        dd = [int(x) for x in dims.split(",") if x]
+        n = 1
+        for x in dd:
+            n *= x
+        total += n * _DTYPE_BYTES.get(dt, 4)
+        shapes.append((dt, dd))
+    return total, shapes
+
+
+@dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    result_bytes: int
+    result_shapes: List[Tuple[str, List[int]]]
+    operands: List[str]
+    called: List[str]
+    text: str
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, int] = field(default_factory=dict)        # name -> bytes
+    param_shapes: Dict[str, List[Tuple[str, List[int]]]] = field(
+        default_factory=dict)
+    ops: List[OpInfo] = field(default_factory=list)
+
+
+_OPCODE_RE = re.compile(
+    r"^(?:\([^)]*\)|[a-z0-9\[\],{}#*_:./\s-]+?)\s+([a-z][\w-]*)\s*\(")
+
+
+def _split_top_level(s: str) -> List[str]:
+    """Split on commas at paren/bracket/brace depth 0."""
+    parts, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+def _parse_header(stripped: str) -> Optional[Tuple[str, str, bool]]:
+    """'%name (sig) -> type {'  ->  (name, sig, is_entry)."""
+    if "->" not in stripped or not stripped.endswith("{"):
+        return None
+    is_entry = stripped.startswith("ENTRY")
+    head = stripped[len("ENTRY "):].strip() if is_entry else stripped
+    if not head.startswith("%") and not is_entry:
+        return None
+    lp = head.find("(")
+    if lp < 0:
+        return None
+    name = head[:lp].strip().lstrip("%").strip()
+    depth = 0
+    rp = -1
+    for i in range(lp, len(head)):
+        if head[i] == "(":
+            depth += 1
+        elif head[i] == ")":
+            depth -= 1
+            if depth == 0:
+                rp = i
+                break
+    if rp < 0 or not name:
+        return None
+    return name, head[lp + 1: rp], is_entry
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped or stripped.startswith(("HloModule", "//", "#")):
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if line and not line.startswith(" ") and stripped.endswith("{"):
+            hdr = _parse_header(stripped)
+            if hdr:
+                name, sig, is_entry = hdr
+                cur = Computation(name)
+                comps[name] = cur
+                if is_entry:
+                    entry = name
+                for part in _split_top_level(sig):
+                    if ":" not in part:
+                        continue
+                    pname, ptype = part.split(":", 1)
+                    pname = pname.strip().lstrip("%")
+                    nbytes, shapes = _shape_info(ptype)
+                    cur.params[pname] = nbytes
+                    cur.param_shapes[pname] = shapes
+                continue
+        if cur is None:
+            continue
+        dm = _DEF_RE.match(stripped)
+        if not dm:
+            continue
+        name, rhs = dm.group(1), dm.group(2)
+        # parameters appear as defs too:  %p.1 = f32[..] parameter(0)
+        om = _OPCODE_RE.match(rhs)
+        opcode = om.group(1) if om else rhs.split("(")[0].split()[-1]
+        type_part = rhs.split(opcode + "(")[0] if opcode + "(" in rhs else rhs
+        nbytes, shapes = _shape_info(type_part)
+        args_part = rhs[rhs.find("("):]
+        operands = _OPND_RE.findall(args_part.split("),")[0]) \
+            if "(" in rhs else []
+        called = _CALLED_RE.findall(rhs)
+        cur.ops.append(OpInfo(name, opcode, nbytes, shapes, operands, called,
+                              rhs))
+    return comps, entry
+
+
+def _dot_flops(op: OpInfo, shape_of: Dict[str, List[Tuple[str, List[int]]]]
+               ) -> float:
+    lhs = shape_of.get(op.operands[0]) if op.operands else None
+    rhs_ = shape_of.get(op.operands[1]) if len(op.operands) > 1 else None
+    if not lhs or not rhs_ or not lhs[0][1] or not rhs_[0][1]:
+        # fall back: 2 * result elements (cannot resolve contraction)
+        n = 1
+        for _, dims in op.result_shapes:
+            for d in dims:
+                n *= d
+        return 2.0 * n
+    ldims = lhs[0][1]
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.text)
+    b = re.search(r"lhs_batch_dims=\{([0-9,]*)\}", op.text)
+    contract = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    k = 1
+    for c in contract:
+        if c < len(ldims):
+            k *= ldims[c]
+    out_n = 1
+    for _, dims in op.result_shapes:
+        for d in dims:
+            out_n *= d
+    return 2.0 * out_n * k
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", op.text)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _trip_from_carry(op: OpInfo) -> int:
+    """lax.scan lowers xs as stacked (L, ...) arrays threaded through the
+    while carry; L is therefore the modal leading dim of the carry tuple's
+    non-scalar elements.  Used when the loop bound constant was fused out of
+    the condition computation."""
+    from collections import Counter
+    leads = Counter()
+    for _dt, dims in op.result_shapes:
+        if len(dims) >= 2 and dims[0] > 1:
+            leads[dims[0]] += 1
+    if not leads:
+        return 1
+    dim, count = leads.most_common(1)[0]
+    return dim if count >= 2 else 1
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = field(default_factory=dict)
+    collective_count: Dict[str, int] = field(default_factory=dict)
+
+
+def _fusion_operand_bytes(op: OpInfo, fused: Optional[Computation],
+                          bytes_of: Dict[str, int],
+                          accum_size: Optional[int] = None) -> int:
+    """HBM bytes read by a fusion: operands consumed only through
+    dynamic-slice / dynamic-update-slice / gather count as the slice size,
+    not the whole buffer (stacked scan params, KV caches)."""
+    if fused is None:
+        return sum(bytes_of.get(o, 0) for o in op.operands)
+    # positional param name -> consumers inside the fused computation
+    pidx: Dict[int, str] = {}
+    local_bytes: Dict[str, int] = dict(fused.params)
+    for fop in fused.ops:
+        local_bytes[fop.name] = fop.result_bytes
+        if fop.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", fop.text)
+            if m:
+                pidx[int(m.group(1))] = fop.name
+    consumers: Dict[str, List[OpInfo]] = {}
+    for fop in fused.ops:
+        for o in fop.operands:
+            consumers.setdefault(o, []).append(fop)
+    total = 0
+    for i, oname in enumerate(op.operands):
+        full = bytes_of.get(oname, 0)
+        if accum_size is not None and full == accum_size:
+            continue  # in-place accumulator operand: covered by update charge
+        pname = pidx.get(i)
+        cons = consumers.get(pname, []) if pname else []
+        if cons and all(c.opcode in ("dynamic-slice", "gather") for c in cons):
+            total += sum(c.result_bytes for c in cons)
+        elif cons and all(c.opcode == "dynamic-update-slice" for c in cons):
+            # in-place update: read/write the update region only
+            total += sum(local_bytes.get(c.operands[1], 0)
+                         if len(c.operands) > 1 else 0 for c in cons)
+        else:
+            total += full
+    return total
+
+
+def analyze(text: str) -> HloCosts:
+    comps, entry = parse_hlo(text)
+    memo: Dict[str, HloCosts] = {}
+
+    def visit(cname: str, top_level: bool) -> HloCosts:
+        key = f"{cname}:{top_level}"
+        if key in memo:
+            return memo[key]
+        comp = comps.get(cname)
+        out = HloCosts()
+        if comp is None:
+            memo[key] = out
+            return out
+        shape_of: Dict[str, List[Tuple[str, List[int]]]] = dict(
+            comp.param_shapes)
+        bytes_of: Dict[str, int] = dict(comp.params)
+        for op in comp.ops:
+            shape_of[op.name] = op.result_shapes
+            bytes_of[op.name] = op.result_bytes
+        for op in comp.ops:
+            if op.opcode in ("parameter", "constant", "iota",
+                             "get-tuple-element", "tuple", "bitcast",
+                             "convert", "copy", "transpose", "broadcast",
+                             "reshape"):
+                continue
+            if op.opcode == "dot":
+                out.flops += _dot_flops(op, shape_of)
+            elif op.opcode == "convolution":
+                n = sum(1 for _ in ())
+                total = 1
+                for _, dims in op.result_shapes:
+                    for d in dims:
+                        total *= d
+                out.flops += 2.0 * total
+            if op.opcode in _COLLECTIVES or any(
+                    op.opcode == c + "-start" for c in _COLLECTIVES):
+                kind = op.opcode.replace("-start", "")
+                out.collective_bytes += op.result_bytes
+                out.collective_by_kind[kind] = \
+                    out.collective_by_kind.get(kind, 0) + op.result_bytes
+                out.collective_count[kind] = \
+                    out.collective_count.get(kind, 0) + 1
+            if op.opcode == "while":
+                body = cond = None
+                bm = re.search(r"body=%?([\w.-]+)", op.text)
+                cm = re.search(r"condition=%?([\w.-]+)", op.text)
+                body = bm.group(1) if bm else None
+                cond = cm.group(1) if cm else None
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                if trips <= 1:  # bound constant fused away: infer from carry
+                    trips = _trip_from_carry(op)
+                if body:
+                    sub = visit(body, top_level)
+                    _accumulate(out, sub, trips)
+                continue
+            if op.opcode == "fusion":
+                called = op.called[:1]
+                for c in called:
+                    sub = visit(c, False)   # fusion internals: flops only
+                    out.flops += sub.flops
+                    out.collective_bytes += sub.collective_bytes
+                    for k, v in sub.collective_by_kind.items():
+                        out.collective_by_kind[k] = \
+                            out.collective_by_kind.get(k, 0) + v
+                if top_level:
+                    fused = comps.get(called[0]) if called else None
+                    if fused and fused.ops and all(
+                            f.opcode in _PURE_MOVE for f in fused.ops):
+                        continue  # convert/relayout artifact: free on TPU
+                    result_charge = op.result_bytes
+                    dus_update = 0
+                    if fused:
+                        lb = {f.name: f.result_bytes for f in fused.ops}
+                        lb.update(fused.params)
+                        dus = [f for f in fused.ops
+                               if f.opcode == "dynamic-update-slice"]
+                        if dus:  # in-place accumulator/cache write
+                            dus_update = sum(
+                                lb.get(f.operands[1], 0) for f in dus
+                                if len(f.operands) > 1)
+                            result_charge = dus_update
+                    opnd = _fusion_operand_bytes(op, fused, bytes_of,
+                                                 accum_size=op.result_bytes
+                                                 if dus_update else None)
+                    out.hbm_bytes += result_charge + opnd
+                continue
+            if op.opcode == "dynamic-slice":
+                # reads only the slice, not the sliced buffer
+                out.hbm_bytes += 2 * op.result_bytes if top_level else 0
+                continue
+            if op.opcode == "dynamic-update-slice":
+                upd = bytes_of.get(op.operands[1], 0) if len(op.operands) > 1 \
+                    else op.result_bytes
+                out.hbm_bytes += 2 * upd if top_level else 0  # in-place r/w
+                continue
+            if op.opcode in ("call", "conditional", "map", "reduce",
+                             "reduce-window", "sort", "scatter", "select-and-scatter",
+                             "custom-call", "async-start"):
+                for c in op.called:
+                    sub = visit(c, False)
+                    out.flops += sub.flops
+                    _accumulate_coll(out, sub, 1)
+            if top_level:
+                out.hbm_bytes += op.result_bytes + sum(
+                    bytes_of.get(o, 0) for o in op.operands)
+        memo[key] = out
+        return out
+
+    def _accumulate(dst: HloCosts, src: HloCosts, mult: int) -> None:
+        dst.flops += src.flops * mult
+        dst.hbm_bytes += src.hbm_bytes * mult
+        _accumulate_coll(dst, src, mult)
+
+    def _accumulate_coll(dst: HloCosts, src: HloCosts, mult: int) -> None:
+        dst.collective_bytes += src.collective_bytes * mult
+        for k, v in src.collective_by_kind.items():
+            dst.collective_by_kind[k] = dst.collective_by_kind.get(k, 0) \
+                + v * mult
+        for k, v in src.collective_count.items():
+            dst.collective_count[k] = dst.collective_count.get(k, 0) \
+                + v * mult
+
+    if entry is None:
+        return HloCosts()
+    return visit(entry, True)

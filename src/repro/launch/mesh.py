@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module constant) so importing never touches jax device
+state — dryrun.py sets XLA_FLAGS before any jax init; tests and benches see
+the single real CPU device.
+
+Topology (TPU v5e): one pod = 16x16 = 256 chips, mesh axes (data, model);
+multi-pod adds the leading "pod" axis over the DCI: (2, 16, 16) = 512 chips.
+"batch"/"fsdp" logical axes map to ("pod", "data") so both the gradient
+all-reduce hierarchy (fast ICI within a pod, slow DCI across) and ZeRO
+param sharding scale with total chips.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Whatever devices exist locally, as (data, model) — smoke/example scale."""
+    n = len(jax.devices())
+    assert n % model_axis == 0, (n, model_axis)
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+HW = {
+    "peak_flops_bf16": 197e12,   # per chip, TPU v5e
+    "hbm_bw": 819e9,             # bytes/s per chip
+    "ici_bw": 50e9,              # bytes/s per link
+}

@@ -1,0 +1,207 @@
+"""Step builders: train / prefill / decode, plus abstract input specs.
+
+Everything here is mesh-aware but allocation-free: abstract state builders
+return ShapeDtypeStructs so the 671B-parameter configs lower without a byte
+of HBM — the multi-pod dry-run contract.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import (batch_specs, make_rules, make_shard_fn,
+                                        sharding_for_specs, spec_for)
+from repro.models.model import Model, build_model
+from repro.models.param import ParamSpec, abstract, materialize
+from repro.optim import (AdamW, apply_updates, compress_grads,
+                         init_error_feedback)
+
+
+# ----------------------------------------------------------------- builders
+def make_train_step(model: Model, optimizer: AdamW, *,
+                    grad_compress: bool = False, microbatches: int = 1):
+    """state {"params", "opt"[, "error_fb"]} x batch -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return grads, metrics
+        # gradient accumulation: scan over microbatches (memory knob)
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches)
+                             + x.shape[1:])
+        mb = jax.tree_util.tree_map(split, batch)
+        zero_g = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, b):
+            (_loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, b)
+            acc = jax.tree_util.tree_map(
+                lambda a, x: a + x.astype(jnp.float32) / microbatches, acc, g)
+            return acc, metrics
+
+        grads, metrics_stack = jax.lax.scan(body, zero_g, mb)
+        metrics = jax.tree_util.tree_map(lambda m: m.mean(), metrics_stack)
+        return grads, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        grads, metrics = compute_grads(params, batch)
+        if grad_compress:
+            grads, new_fb = compress_grads(grads, state["error_fb"])
+        updates, opt_state, opt_metrics = optimizer.update(
+            grads, state["opt"], params)
+        new_state = {"params": apply_updates(params, updates),
+                     "opt": opt_state}
+        if grad_compress:
+            new_state["error_fb"] = new_fb
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+    return decode_step
+
+
+# --------------------------------------------------------------- state specs
+def train_state_specs(model: Model, optimizer: AdamW, *,
+                      grad_compress: bool = False) -> Dict[str, Any]:
+    psp = model.param_specs()
+    out = {"params": psp, "opt": optimizer.state_specs(psp)}
+    if grad_compress:
+        from repro.models.param import tree_map_specs
+        out["error_fb"] = tree_map_specs(
+            lambda s: ParamSpec(s.shape, s.axes, init="zeros", dtype="float32"),
+            psp)
+    return out
+
+
+def abstract_state(specs):
+    return abstract(specs)
+
+
+def init_state(model: Model, optimizer: AdamW, key, *,
+               grad_compress: bool = False) -> Dict[str, Any]:
+    params = model.init(key)
+    out = {"params": params, "opt": optimizer.init(params)}
+    if grad_compress:
+        out["error_fb"] = init_error_feedback(params)
+    return out
+
+
+# -------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape_cfg: ShapeConfig, model: Model,
+                mesh: Mesh, rules) -> Tuple[Any, Any]:
+    """(abstract inputs, shardings) for the step matching shape_cfg.kind.
+
+    train:   {"tokens","targets","loss_mask"[, "image_embeds"]}
+    prefill: {"tokens"[, "image_embeds"]}
+    decode:  (cache, tokens_last, pos)
+    """
+    if shape_cfg.kind in ("train", "prefill"):
+        specs, shardings = batch_specs(cfg, shape_cfg, mesh, rules)
+        return specs, shardings
+    # decode: cache at full seq_len + one token per sequence
+    B = shape_cfg.global_batch
+    cache_sp = model.cache_specs(B, shape_cfg.seq_len)
+    cache_abs = abstract(cache_sp)
+    cache_sh = sharding_for_specs(cache_sp, mesh, rules)
+    tok_shape = (B, cfg.num_codebooks) if cfg.num_codebooks else (B,)
+    tok_axes = ("batch", None) if cfg.num_codebooks else ("batch",)
+    tokens = jax.ShapeDtypeStruct(tok_shape, np.int32)
+    tokens_sh = NamedSharding(mesh, spec_for(tok_shape, tok_axes, mesh, rules))
+    pos = jax.ShapeDtypeStruct((), np.int32)
+    pos_sh = NamedSharding(mesh, spec_for((), (), mesh, rules))
+    return (cache_abs, tokens, pos), (cache_sh, tokens_sh, pos_sh)
+
+
+# --------------------------------------------------------------- cell lowering
+def build_cell(arch_cfg: ModelConfig, shape_cfg: ShapeConfig, mesh: Mesh, *,
+               attn_impl: str = "xla", fsdp: Optional[bool] = None,
+               microbatches: int = 1, grad_compress: bool = False,
+               remat: Optional[str] = None):
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    long_ctx = shape_cfg.name == "long_500k"
+    # H2b: when the cache sequence is marked shardable, decode shapes put it
+    # on the model axis (batch already owns the data axes)
+    seq_axis = None
+    if arch_cfg.seq_shard_attn and not long_ctx:
+        seq_axis = "model" if shape_cfg.kind == "decode" else "data"
+    rules = make_rules(shape_cfg.kind, long_context=long_ctx,
+                       fsdp=arch_cfg.fsdp_params if fsdp is None else fsdp,
+                       seq_shard=seq_axis)
+    if remat is not None:
+        arch_cfg = arch_cfg.with_(remat=remat)
+    model = build_model(arch_cfg, shard_fn=make_shard_fn(mesh, rules),
+                        attn_impl=attn_impl)
+    if shape_cfg.kind == "train":
+        from repro.optim import cosine_schedule
+        opt = AdamW(cosine_schedule(3e-4, 100, 10_000),
+                    moment_dtype=arch_cfg.adam_moment_dtype)
+        step = make_train_step(model, opt, microbatches=microbatches,
+                               grad_compress=grad_compress)
+        st_specs = train_state_specs(model, opt, grad_compress=grad_compress)
+        st_abs = abstract(st_specs)
+        st_sh = sharding_for_specs(st_specs, mesh, rules)
+        in_abs, in_sh = input_specs(arch_cfg, shape_cfg, model, mesh, rules)
+        args = (st_abs, in_abs)
+        in_shardings = (st_sh, in_sh)
+        fn = step
+    elif shape_cfg.kind == "prefill":
+        p_abs = abstract(model.param_specs())
+        p_sh = sharding_for_specs(model.param_specs(), mesh, rules)
+        in_abs, in_sh = input_specs(arch_cfg, shape_cfg, model, mesh, rules)
+        args = (p_abs, in_abs)
+        in_shardings = (p_sh, in_sh)
+        fn = make_prefill_step(model)
+    else:  # decode
+        p_abs = abstract(model.param_specs())
+        p_sh = sharding_for_specs(model.param_specs(), mesh, rules)
+        (cache_abs, tokens, pos), (cache_sh, tok_sh, pos_sh) = input_specs(
+            arch_cfg, shape_cfg, model, mesh, rules)
+        args = (p_abs, cache_abs, tokens, pos)
+        in_shardings = (p_sh, cache_sh, tok_sh, pos_sh)
+        base_fn = make_decode_step(model)
+
+        def fn(params, cache, toks, pos_):
+            logits, new_cache = base_fn(params, cache, toks, pos_)
+            # pin output cache to the input shardings so donation aliases
+            new_cache = jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, new_cache, cache_sh)
+            return logits, new_cache
+    return model, fn, args, in_shardings, rules
+
+
+def lower_cell(arch_cfg, shape_cfg, mesh, **kw):
+    model, fn, args, in_shardings, rules = build_cell(arch_cfg, shape_cfg,
+                                                      mesh, **kw)
+    # donate the training state / decode cache so buffers alias in place
+    donate = (0,) if shape_cfg.kind == "train" else \
+        (1,) if shape_cfg.kind == "decode" else ()
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_shardings, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+    return lowered, model, rules

@@ -1,0 +1,8 @@
+"""Model zoo substrate: four architecture families behind one Model API."""
+
+from .model import Model, build_model
+from .param import (ParamSpec, abstract, count_params, materialize,
+                    param_bytes, pspecs, shardings)
+
+__all__ = ["Model", "ParamSpec", "abstract", "build_model", "count_params",
+           "materialize", "param_bytes", "pspecs", "shardings"]

@@ -1,0 +1,138 @@
+"""Parameter specification system.
+
+Every model declares its parameters as a pytree of :class:`ParamSpec`
+(shape + logical axis names + init).  From one spec tree we derive:
+
+* ``materialize(specs, key)``  — real arrays (smoke tests / examples),
+* ``abstract(specs)``          — ShapeDtypeStructs (multi-pod dry-run: no
+                                 allocation for 671B-param configs),
+* ``shardings(specs, mesh)``   — NamedShardings via logical->mesh axis rules.
+
+Logical axes (MaxText-style):
+    "batch"   activations' batch            -> ("pod", "data")
+    "fsdp"    params' ZeRO-3 shard axis     -> ("pod", "data")
+    "model"   tensor-parallel axis          -> "model"  (heads / ff / experts / vocab)
+    "seq"     sequence-parallel axis        -> "data" (long-context decode caches)
+    None      replicated
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis per dim
+    init: str = "normal"              # normal | zeros | ones | ssm_a | ssm_dt
+    scale: float = 1.0
+    dtype: str = "bfloat16"
+    fan_in: Optional[int] = None      # explicit fan-in for normal init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "model": "model",
+    "seq": "data",
+    "expert": "model",
+    "heads": "model",
+    "vocab": "model",
+    "ff": "model",
+}
+
+
+def logical_to_spec(axes: Sequence[Optional[str]],
+                    rules: Optional[Dict[str, Any]] = None,
+                    mesh: Optional[Mesh] = None) -> P:
+    rules = rules or DEFAULT_RULES
+    out = []
+    used: set = set()
+
+    def mesh_axes_of(entry) -> Tuple[str, ...]:
+        if entry is None:
+            return ()
+        return tuple(entry) if isinstance(entry, (tuple, list)) else (entry,)
+
+    for a in axes:
+        entry = rules.get(a) if a is not None else None
+        mesh_axes = tuple(m for m in mesh_axes_of(entry)
+                          if (mesh is None or m in mesh.axis_names) and m not in used)
+        used.update(mesh_axes)
+        if not mesh_axes:
+            out.append(None)
+        elif len(mesh_axes) == 1:
+            out.append(mesh_axes[0])
+        else:
+            out.append(tuple(mesh_axes))
+    return P(*out)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], specs) -> Any:
+    return jax.tree_util.tree_map(
+        fn, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def abstract(specs, dtype_override: Optional[str] = None):
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(dtype_override or s.dtype)),
+        specs)
+
+
+def shardings(specs, mesh: Mesh, rules: Optional[Dict[str, Any]] = None):
+    return tree_map_specs(
+        lambda s: NamedSharding(mesh, logical_to_spec(s.axes, rules, mesh)), specs)
+
+
+def pspecs(specs, rules: Optional[Dict[str, Any]] = None, mesh: Optional[Mesh] = None):
+    return tree_map_specs(lambda s: logical_to_spec(s.axes, rules, mesh), specs)
+
+
+def materialize(specs, key: jax.Array, dtype_override: Optional[str] = None):
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for s, k in zip(leaves, keys):
+        dt = jnp.dtype(dtype_override or s.dtype)
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dt))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dt))
+        elif s.init == "normal":
+            fan_in = s.fan_in or (s.shape[-2] if len(s.shape) >= 2
+                                  else max(s.shape[-1], 1))
+            std = s.scale / np.sqrt(fan_in)
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * std).astype(dt))
+        elif s.init == "ssm_a":
+            # mamba2 A init: -uniform(1, 16) in log space, per head
+            u = jax.random.uniform(k, s.shape, jnp.float32, 1.0, 16.0)
+            out.append(jnp.log(u).astype(jnp.float32))  # A_log kept fp32
+        elif s.init == "ssm_dt":
+            u = jax.random.uniform(k, s.shape, jnp.float32, 1e-3, 1e-1)
+            out.append(jnp.log(jnp.expm1(u)).astype(jnp.float32))
+        else:
+            raise ValueError(f"unknown init {s.init!r}")
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        tree_map_specs(lambda s: int(np.prod(s.shape)), specs))
+    return int(sum(leaves))
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(tree_map_specs(
+        lambda s: int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize, specs))
+    return int(sum(leaves))

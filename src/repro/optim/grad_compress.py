@@ -1,0 +1,59 @@
+"""Int8 gradient compression with error feedback.
+
+For cross-pod data parallelism the gradient all-reduce over DCI is the
+scarce resource; int8 quantization cuts those bytes 2x (bf16) / 4x (f32).
+Per-leaf symmetric quantization with an error-feedback residual keeps the
+optimizer trajectory unbiased (Seide et al. / 1-bit Adam lineage).
+
+Two integration points:
+* `compress_grads` / state-carried residual — drop-in around the optimizer
+  (works under pjit; models the numerics of a quantized all-reduce);
+* `quantized_psum` in distributed/collectives.py — the explicit shard_map
+  collective used on real multi-pod meshes (int8 payload on the wire).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    absmax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = absmax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, error_fb):
+    """-> (dequantized grads as seen post-allreduce, new error residuals)."""
+    def per_leaf(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = _quantize(gf)
+        deq = _dequantize(q, scale)
+        return deq.astype(g.dtype), gf - deq
+
+    flat = jax.tree_util.tree_map(per_leaf, grads, error_fb)
+    new_g = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_e
+
+
+def compression_ratio(tree, from_dtype: str = "bfloat16") -> float:
+    nbytes_in = sum(l.size * jnp.dtype(from_dtype).itemsize
+                    for l in jax.tree_util.tree_leaves(tree))
+    nbytes_out = sum(l.size + 4 for l in jax.tree_util.tree_leaves(tree))
+    return nbytes_in / nbytes_out

@@ -1,0 +1,128 @@
+"""Validation of the exact HLO roofline analyzer (launch/hlo_analysis.py):
+agreement with cost_analysis on scan-free programs, exact trip-count
+multiplication on scans, slice-aware traffic, collective extraction."""
+
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_hlo
+
+
+def test_matmul_flops_match_cost_analysis():
+    a = jnp.zeros((256, 512), jnp.float32)
+    b = jnp.zeros((512, 128), jnp.float32)
+    c = jax.jit(lambda a, b: (a @ b).sum()).lower(a, b).compile()
+    got = analyze(c.as_text())
+    want = 2 * 256 * 512 * 128
+    assert abs(got.flops - want) / want < 0.05
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def g(xs):
+        def body(c, x):
+            return jnp.tanh(c @ x), ()
+        c1, _ = jax.lax.scan(body, jnp.zeros((128, 128), jnp.float32), xs)
+        return c1.sum()
+
+    xs = jnp.zeros((24, 128, 128), jnp.float32)
+    c = jax.jit(g).lower(xs).compile()
+    got = analyze(c.as_text())
+    want = 24 * 2 * 128 ** 3
+    assert abs(got.flops - want) / want < 0.1
+    # cost_analysis counts the body once — the failure mode we fix
+    ca = float(c.cost_analysis().get("flops", 0))
+    assert ca < want / 2
+
+
+def test_remat_train_step_flops_in_expected_band():
+    L, T, D, F = 8, 512, 256, 1024
+
+    def loss(params, x):
+        def body(h, p):
+            return jnp.tanh(h @ p["wi"]) @ p["wo"], ()
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+        h, _ = jax.lax.scan(body, x, params)
+        return jnp.sum(h * h)
+
+    params = {"wi": jnp.zeros((L, D, F), jnp.bfloat16),
+              "wo": jnp.zeros((L, F, D), jnp.bfloat16)}
+    x = jnp.zeros((T, D), jnp.bfloat16)
+    c = jax.jit(jax.grad(loss)).lower(params, x).compile()
+    got = analyze(c.as_text())
+    fwd = L * 2 * (2 * T * D * F)
+    # full-remat train = fwd + recompute + 2x grads ~ [3x, 4.5x] fwd
+    assert 3.0 <= got.flops / fwd <= 4.5
+    # traffic sane: params ~17MB, activations ~50MB; slice-aware accounting
+    # must stay far below the naive 'full stacked buffer per trip' blow-up
+    assert got.hbm_bytes < 600e6
+
+
+def test_parse_hlo_structures():
+    a = jnp.zeros((64, 64), jnp.float32)
+    c = jax.jit(lambda a: jnp.tanh(a @ a).sum()).lower(a).compile()
+    comps, entry = parse_hlo(c.as_text())
+    assert entry is not None and entry in comps
+    assert any(op.opcode == "dot" for comp in comps.values()
+               for op in comp.ops)
+
+
+MULTIDEV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    import sys
+    sys.path.insert(0, "src")
+    from repro.launch.hlo_analysis import analyze
+
+    mesh = jax.make_mesh((8,), ("d",))
+    x = jnp.zeros((1024, 256), jnp.float32)
+    w = jnp.zeros((256, 256), jnp.float32)
+    def f(x, w):
+        return (x @ w).sum()
+    with mesh:
+        c = jax.jit(f, in_shardings=(NamedSharding(mesh, P(None, "d")),
+                                     NamedSharding(mesh, P("d", None)))
+                    ).lower(x, w).compile()
+    got = analyze(c.as_text())
+    assert got.collective_bytes > 0, "contracting-dim sharding needs a reduce"
+    assert got.collective_by_kind, got.collective_by_kind
+    print("HLO_COLLECTIVES_OK")
+""")
+
+
+def test_collectives_detected_on_sharded_program():
+    r = subprocess.run([sys.executable, "-c", MULTIDEV], capture_output=True,
+                       text=True, timeout=300, cwd="/root/repo")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "HLO_COLLECTIVES_OK" in r.stdout
+
+
+DRYRUN_CELL = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", "granite-moe-1b-a400m", "--shape", "decode_32k",
+               "--mesh", "single", "--tag", "pytest"]
+
+
+def test_dryrun_cell_end_to_end():
+    """One real dry-run cell: lower+compile on 256 host devices, JSON out."""
+    import json
+    import os
+    from pathlib import Path
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(DRYRUN_CELL, capture_output=True, text=True,
+                       timeout=900, cwd="/root/repo", env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = Path("/root/repo/experiments/dryrun/"
+               "granite-moe-1b-a400m__decode_32k__single__pytest.json")
+    d = json.loads(out.read_text())
+    assert d["status"] == "OK"
+    assert d["chips"] == 256
+    assert d["roofline"]["flops_per_device"] > 0
+    assert d["memory_analysis"]["alias_bytes"] > 0   # cache donation aliased
+    out.unlink()

@@ -1,0 +1,266 @@
+"""Unit + property tests for the storage format (C1): providers, codecs,
+chunks, chunk encoder, tiling, tensors."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as dl
+from repro.core import chunks as chunklib
+from repro.core.chunk_encoder import ChunkEncoder
+from repro.core.codecs import available as available_codecs, get_codec
+from repro.core.tiling import (TileDescriptor, assemble_from_tiles,
+                               plan_tile_shape, split_into_tiles,
+                               tiles_for_region, assemble_region)
+
+
+# ---------------------------------------------------------------- storage
+def test_memory_provider_roundtrip():
+    p = dl.MemoryProvider()
+    p.put("a/b", b"hello")
+    assert p.get("a/b") == b"hello"
+    assert p.get_range("a/b", 1, 3) == b"el"
+    assert p.list_keys("a/") == ["a/b"]
+    p.delete("a/b")
+    assert not p.exists("a/b")
+    with pytest.raises(dl.StorageError):
+        p.get("a/b")
+
+
+def test_local_provider_roundtrip(tmp_path):
+    p = dl.LocalProvider(str(tmp_path))
+    p.put("x/y/z.bin", b"0123456789")
+    assert p.get("x/y/z.bin") == b"0123456789"
+    assert p.get_range("x/y/z.bin", 2, 5) == b"234"
+    assert p.num_bytes("x/y/z.bin") == 10
+    assert p.list_keys() == ["x/y/z.bin"]
+
+
+def test_simulated_s3_accounting():
+    s3 = dl.SimulatedS3Provider(time_scale=0, latency_s=0.01,
+                                bandwidth_bps=1e6)
+    s3.put("k", b"x" * 1000)
+    s3.get("k")
+    s3.get_range("k", 0, 100)
+    assert s3.stats["requests"] == 3
+    assert s3.stats["bytes_down"] == 1100
+    assert s3.stats["bytes_up"] == 1000
+    # 3 * latency + traffic/bandwidth
+    assert abs(s3.stats["sim_seconds"] - (0.03 + 2100 / 1e6)) < 1e-9
+
+
+def test_lru_cache_hits_and_eviction():
+    base = dl.MemoryProvider()
+    lru = dl.LRUCacheProvider(base, capacity_bytes=250)
+    for i in range(4):
+        lru.put(f"k{i}", bytes(100))
+    lru.get("k3")
+    lru.get("k3")
+    assert lru.hits >= 1
+    # capacity 250 -> at most 2 resident
+    assert lru._size <= 250
+    assert lru.get("k0") == bytes(100)  # served from base after eviction
+
+
+def test_chain():
+    s3 = dl.SimulatedS3Provider(time_scale=0)
+    c = dl.chain(dl.MemoryProvider(), s3, capacity_bytes=1 << 20)
+    c.put("a", b"abc")
+    before = s3.stats["requests"]
+    assert c.get("a") == b"abc"      # cache hit: no s3 round trip
+    assert s3.stats["requests"] == before
+
+
+# ----------------------------------------------------------------- codecs
+@pytest.mark.parametrize("codec", ["raw", "zlib", "lzma"])
+@pytest.mark.parametrize("dtype", ["uint8", "int32", "float32", "float64"])
+def test_codec_lossless_roundtrip(codec, dtype, rng):
+    c = get_codec(codec)
+    arr = (rng.standard_normal((7, 13)) * 100).astype(dtype)
+    out = c.decode(c.encode(arr), arr.shape, arr.dtype)
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_quant8_lossy_bounded(rng):
+    c = get_codec("quant8")
+    arr = rng.standard_normal((32, 32)).astype(np.float32)
+    out = c.decode(c.encode(arr), arr.shape, arr.dtype)
+    span = arr.max() - arr.min()
+    assert np.max(np.abs(out - arr)) <= span / 255 + 1e-6
+    # uint8 images roundtrip exactly
+    img = rng.integers(0, 255, (8, 8, 3), dtype=np.uint8)
+    np.testing.assert_array_equal(
+        c.decode(c.encode(img), img.shape, img.dtype), img)
+
+
+# ----------------------------------------------------------------- chunks
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 10), st.integers(1, 10)),
+                min_size=1, max_size=12),
+       st.sampled_from(["raw", "zlib"]))
+def test_chunk_roundtrip_property(shapes, codec):
+    rng = np.random.default_rng(1)
+    b = chunklib.ChunkBuilder("<f4", codec)
+    samples = []
+    for shp in shapes:
+        arr = rng.standard_normal(shp).astype(np.float32)
+        samples.append(arr)
+        b.append_array(arr)
+    raw = b.serialize()
+    assert len(raw) == b.nbytes_serialized()
+    out = chunklib.read_all_samples(raw)
+    assert len(out) == len(samples)
+    for got, want in zip(out, samples):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_chunk_byte_ranges_match_range_reads():
+    b = chunklib.ChunkBuilder("<i4", "raw")
+    arrs = [np.arange(i + 1, dtype=np.int32) for i in range(5)]
+    for a in arrs:
+        b.append_array(a)
+    raw = b.serialize()
+    h = chunklib.parse_header(raw)
+    assert h.header_size == chunklib.header_size_of(raw[:48])
+    for i, a in enumerate(arrs):
+        s, e = h.byte_range(i)
+        got = chunklib.decode_sample(h, raw[s:e], i)
+        np.testing.assert_array_equal(got, a)
+
+
+# ------------------------------------------------------------ chunk encoder
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 20), min_size=1, max_size=30))
+def test_encoder_lookup_property(counts):
+    enc = ChunkEncoder()
+    for i, c in enumerate(counts):
+        enc.register_chunk(f"c{i}", c)
+    assert enc.num_samples == sum(counts)
+    # every global index maps to the right (chunk, local)
+    gidx = 0
+    for i, c in enumerate(counts):
+        for local in range(c):
+            name, l = enc.lookup(gidx)
+            assert name == f"c{i}" and l == local
+            gidx += 1
+    # serialize roundtrip
+    enc2 = ChunkEncoder.deserialize(enc.serialize())
+    assert enc2.chunk_names() == enc.chunk_names()
+    assert enc2.num_samples == enc.num_samples
+
+
+def test_encoder_scale_is_compact():
+    enc = ChunkEncoder()
+    for i in range(10_000):
+        enc.register_chunk(f"c{i:08x}", 1000)
+    # paper §3.4: ~150MB per 1PB; here: <30 bytes/chunk in memory
+    assert enc.nbytes() / enc.num_chunks < 30
+    assert enc.lookup(9_999_999) == ("c0000270f", 999)
+
+
+# ----------------------------------------------------------------- tiling
+def test_tile_planning_fits_budget():
+    shape = plan_tile_shape((1000, 1000, 3), 1, 64 << 10)
+    assert int(np.prod(shape)) <= 64 << 10
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(30, 120), st.integers(30, 120), st.integers(1, 3))
+def test_tiling_reassembles(h, w, c):
+    rng = np.random.default_rng(2)
+    arr = rng.integers(0, 255, (h, w, c), dtype=np.uint8)
+    tile_shape = plan_tile_shape(arr.shape, 1, 1 << 10)
+    grid, tiles = split_into_tiles(arr, tile_shape)
+    codec = get_codec("raw")
+    desc = TileDescriptor(arr.shape, tile_shape, grid,
+                          [f"t{i}" for i in range(len(tiles))], "|u1", "raw")
+    payloads = [codec.encode(t) for t in tiles]
+    np.testing.assert_array_equal(assemble_from_tiles(desc, payloads), arr)
+    region = (slice(h // 4, h // 2), slice(w // 3, w - 1))
+    need = tiles_for_region(desc, region)
+    sub = assemble_region(desc, region, {i: payloads[i] for i in need})
+    np.testing.assert_array_equal(sub, arr[region])
+    assert len(need) <= len(tiles)
+
+
+# ----------------------------------------------------------------- tensors
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 6), st.integers(1, 6)), min_size=1,
+                max_size=25),
+       st.sampled_from(["raw", "zlib"]),
+       st.integers(6, 10))
+def test_tensor_append_read_property(shapes, codec, log_max_chunk):
+    rng = np.random.default_rng(3)
+    ds = dl.dataset()
+    max_chunk = 1 << log_max_chunk
+    t = ds.create_tensor("x", dtype="float32", sample_compression=codec,
+                         min_chunk_size=max_chunk // 2, max_chunk_size=max_chunk)
+    arrs = [rng.standard_normal(s).astype(np.float32) for s in shapes]
+    for a in arrs:
+        t.append(a)
+    ds.flush()
+    for i, a in enumerate(arrs):
+        np.testing.assert_array_equal(t.read(i), a)
+        assert t.shape_of(i) == a.shape
+    # reload from storage (fresh dataset object)
+    ds2 = dl.Dataset(ds.storage)
+    t2 = ds2["x"]
+    assert len(t2) == len(arrs)
+    for i, a in enumerate(arrs):
+        np.testing.assert_array_equal(t2.read(i), a)
+
+
+def test_tensor_update_and_sparse_assignment():
+    ds = dl.dataset()
+    t = ds.create_tensor("x", dtype="int32", strict=False,
+                         min_chunk_size=64, max_chunk_size=256)
+    for i in range(10):
+        t.append(np.full((4,), i, np.int32))
+    t[3] = np.full((4,), 99, np.int32)
+    np.testing.assert_array_equal(t.read(3), np.full((4,), 99, np.int32))
+    t[15] = np.full((4,), 7, np.int32)   # out-of-bounds: §3.5 sparse assign
+    assert len(t) == 16
+    assert t.read(12).size == 0
+    np.testing.assert_array_equal(t.read(15), np.full((4,), 7, np.int32))
+
+
+def test_tensor_strict_mode_rejects():
+    ds = dl.dataset()
+    t = ds.create_tensor("img", htype="image")
+    with pytest.raises(ValueError):
+        t.append(np.zeros((4,), np.uint8))      # wrong ndim for image
+    with pytest.raises(IndexError):
+        t[5] = np.zeros((2, 2, 3), np.uint8)    # strict: no sparse assign
+
+
+def test_tensor_tiled_large_sample():
+    ds = dl.dataset()
+    t = ds.create_tensor("big", dtype="float32", min_chunk_size=1 << 10,
+                         max_chunk_size=1 << 12)
+    rng = np.random.default_rng(4)
+    big = rng.standard_normal((80, 80)).astype(np.float32)  # 25KB > 4KB max
+    small = rng.standard_normal((4, 4)).astype(np.float32)
+    t.append(big)
+    t.append(small)
+    ds.flush()
+    np.testing.assert_array_equal(t.read(0), big)
+    np.testing.assert_array_equal(t.read(1), small)
+    region = t.read_region(0, (slice(10, 30), slice(60, 79)))
+    np.testing.assert_array_equal(region, big[10:30, 60:79])
+
+
+def test_rechunk_preserves_data_and_bounds():
+    ds = dl.dataset()
+    t = ds.create_tensor("x", dtype="int32", min_chunk_size=1 << 10,
+                         max_chunk_size=1 << 12)
+    arrs = [np.full((100,), i, np.int32) for i in range(40)]
+    for a in arrs:
+        t.append(a)
+    # force fragmentation via updates
+    for i in range(0, 40, 5):
+        t[i] = np.full((100,), -i, np.int32)
+    n = t.rechunk()
+    assert n == t.num_chunks
+    for i in range(40):
+        want = -i if i % 5 == 0 else i
+        np.testing.assert_array_equal(t.read(i), np.full((100,), want, np.int32))

@@ -1,0 +1,174 @@
+"""TQL (C3): parser, executor, engine equivalence, paper Fig-4 query."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as dl
+from repro.core.tql import TQLSyntaxError, execute_query, parse
+from repro.core.tql.functions import iou, normalize_boxes
+
+
+@pytest.fixture(scope="module")
+def ds():
+    rng = np.random.default_rng(7)
+    ds = dl.dataset()
+    ds.create_tensor("images", htype="image", dtype="uint8",
+                     sample_compression="raw", min_chunk_size=1 << 14,
+                     max_chunk_size=1 << 16)
+    ds.create_tensor("labels", htype="class_label")
+    ds.create_tensor("boxes", htype="bbox", strict=False)
+    ds.group("training").create_tensor("boxes", htype="bbox", strict=False)
+    ds.create_tensor("caption", htype="text")
+    words = ["cat", "dog", "car", "sky"]
+    for i in range(40):
+        gt = rng.uniform(0, 24, (2, 4)).astype(np.float32)
+        gt[:, 2:] += gt[:, :2]
+        ds.append({
+            "images": rng.integers(0, 255, (32, 32, 3), dtype=np.uint8),
+            "labels": np.int64(i % 4),
+            "boxes": (gt + rng.normal(0, 1.0, gt.shape)).astype(np.float32),
+            "training/boxes": gt,
+            "caption": np.frombuffer(f"a {words[i % 4]} photo".encode(),
+                                     dtype=np.uint8).copy(),
+        })
+    ds.commit("fixture")
+    return ds
+
+
+# ----------------------------------------------------------------- parsing
+def test_parse_structure():
+    q = parse("SELECT a, MEAN(b) AS mb FROM dataset WHERE a > 1 "
+              "ORDER BY mb DESC LIMIT 7 OFFSET 2")
+    assert q.limit == 7 and q.offset == 2 and q.order_desc
+    assert set(q.referenced_tensors()) >= {"a", "b"}
+    # alias in ORDER BY resolves to its SELECT expression
+    rng = np.random.default_rng(0)
+    ds = dl.dataset()
+    ds.create_tensor("a", dtype="float32")
+    ds.create_tensor("b", dtype="float32")
+    for i in range(6):
+        ds.append({"a": np.float32(i), "b": rng.standard_normal(4).astype(np.float32)})
+    v = ds.query("SELECT a, MEAN(b) AS mb FROM dataset WHERE a > 1 "
+                 "ORDER BY mb DESC LIMIT 3")
+    ms = [float(np.mean(r["mb"])) for r in v.rows()]
+    assert ms == sorted(ms, reverse=True)
+
+
+def test_parse_errors():
+    for bad in ("SELECT", "SELECT * FROM", "SELECT * WHERE x ^ 2",
+                "SELECT a FROM ds LIMIT x"):
+        with pytest.raises(TQLSyntaxError):
+            parse(bad)
+
+
+def test_parse_slicing_and_lists():
+    q = parse("SELECT x[1:5, :, 2] AS crop, [1, 2, 3] AS lst FROM ds")
+    assert q.items[0].alias == "crop"
+
+
+# ----------------------------------------------------------------- executor
+def test_where_oracle_equivalence(ds):
+    v = ds.query("SELECT * FROM dataset WHERE labels == 2 AND MEAN(images) > 100")
+    want = [i for i in range(40)
+            if int(ds.labels[i]) == 2 and float(ds.images[i].mean()) > 100]
+    assert v.indices.tolist() == want
+
+
+def test_order_by_matches_numpy(ds):
+    v = ds.query("SELECT * FROM dataset ORDER BY MEAN(images) DESC")
+    means = np.array([float(ds.images[i].mean()) for i in range(40)])
+    want = np.argsort(-means, kind="stable")
+    assert v.indices.tolist() == want.tolist()
+
+
+def test_paper_fig4_query(ds):
+    v = ds.query('''
+        SELECT images[8:24, 8:24, 0:2] AS crop,
+               NORMALIZE(boxes, [8, 8, 24, 24]) AS box
+        FROM dataset
+        WHERE IOU(boxes, "training/boxes") > 0.3
+        ORDER BY IOU(boxes, "training/boxes")
+        ARRANGE BY labels''')
+    assert len(v) > 0
+    r = v.row(0)
+    assert r["crop"].shape == (16, 16, 2)
+    assert r["box"].min() >= 0.0 and r["box"].max() <= 1.0
+    labs = [int(ds.labels[int(i)]) for i in v.indices]
+    assert labs == sorted(labs)
+
+
+def test_engines_agree(ds):
+    q = "SELECT * FROM dataset WHERE MEAN(images) > 120 AND NOT labels == 1"
+    a = execute_query(ds, q, engine="numpy")
+    b = execute_query(ds, q, engine="jax")
+    c = execute_query(ds, q, engine="auto")
+    assert a.indices.tolist() == b.indices.tolist() == c.indices.tolist()
+
+
+def test_contains_on_text(ds):
+    v = ds.query('SELECT * FROM dataset WHERE CONTAINS(caption, "dog")')
+    assert len(v) == 10
+    assert all(int(ds.labels[int(i)]) == 1 for i in v.indices)
+
+
+def test_sample_by_weights_and_determinism(ds):
+    q = "SELECT * FROM dataset SAMPLE BY labels * labels LIMIT 200"
+    a, b = ds.query(q), ds.query(q)
+    assert a.indices.tolist() == b.indices.tolist()
+    labs = np.array([int(ds.labels[int(i)]) for i in a.indices])
+    assert (labs == 3).sum() > (labs == 1).sum()
+    assert (labs == 0).sum() == 0   # zero weight never sampled
+
+
+def test_shape_function_and_arithmetic(ds):
+    v = ds.query("SELECT * FROM dataset WHERE SHAPE(images)[0] == 32 LIMIT 3")
+    assert len(v) == 3
+    v2 = ds.query("SELECT MEAN(images) / 255.0 AS m FROM dataset LIMIT 4")
+    for r in v2.rows():
+        assert 0 <= float(r["m"]) <= 1
+
+
+def test_random_deterministic(ds):
+    q = "SELECT * FROM dataset WHERE RANDOM() < 0.5"
+    assert ds.query(q).indices.tolist() == ds.query(q).indices.tolist()
+
+
+def test_query_chaining_and_loader_handoff(ds):
+    v = ds.query("SELECT * FROM dataset WHERE labels == 0")
+    v2 = v.query("SELECT images FROM view ORDER BY MEAN(images) LIMIT 4")
+    loader = v2.dataloader(batch_size=2, tensors=["images"], num_workers=2)
+    batches = list(loader)
+    assert sum(len(b["images"]) for b in batches) == 4
+
+
+# ---------------------------------------------------------------- functions
+def test_iou_identity_and_disjoint():
+    a = np.array([[0, 0, 10, 10]], np.float32)
+    assert iou(a, a) == pytest.approx(1.0)
+    b = np.array([[20, 20, 30, 30]], np.float32)
+    assert iou(a, b) == 0.0
+
+
+def test_normalize_boxes_bounds():
+    out = normalize_boxes(np.array([[5, 5, 15, 15]], np.float32),
+                          [0, 0, 20, 20])
+    np.testing.assert_allclose(out, [[0.25, 0.25, 0.75, 0.75]])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 3), st.floats(0, 254.0))
+def test_generated_where_matches_oracle(label, thresh):
+    """Property: executor == numpy oracle for a family of queries."""
+    rng = np.random.default_rng(11)
+    ds = dl.dataset()
+    ds.create_tensor("v", dtype="float32")
+    ds.create_tensor("lab", htype="class_label")
+    vals = rng.uniform(0, 255, (25, 4)).astype(np.float32)
+    for i in range(25):
+        ds.append({"v": vals[i], "lab": np.int64(i % 4)})
+    q = f"SELECT * FROM dataset WHERE lab == {label} OR MEAN(v) > {thresh}"
+    got = ds.query(q).indices.tolist()
+    want = [i for i in range(25)
+            if (i % 4 == label) or (vals[i].mean() > thresh)]
+    assert got == want

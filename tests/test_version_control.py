@@ -1,0 +1,157 @@
+"""Version control (C2): commit/checkout/diff/merge + time-travel properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as dl
+
+
+def _mk(n=10, chunk=512):
+    ds = dl.dataset()
+    ds.create_tensor("x", dtype="int64", min_chunk_size=chunk // 2,
+                     max_chunk_size=chunk)
+    for i in range(n):
+        ds.x.append(np.full((8,), i, np.int64))
+    return ds
+
+
+def test_commit_seals_and_time_travel():
+    ds = _mk()
+    c0 = ds.commit("v0")
+    ds.x[0] = np.full((8,), 100, np.int64)
+    ds.x.append(np.full((8,), 10, np.int64))
+    c1 = ds.commit("v1")
+    old = ds.tensor_at("x", c0)
+    assert len(old) == 10
+    np.testing.assert_array_equal(old.read(0), np.full((8,), 0, np.int64))
+    np.testing.assert_array_equal(ds.x[0], np.full((8,), 100, np.int64))
+    assert len(ds.x) == 11
+    log = ds.log()
+    assert [n.message for n in log] == ["v1", "v0"]
+
+
+def test_sealed_head_is_readonly():
+    ds = _mk()
+    c0 = ds.commit("v0")
+    ds.checkout(c0)
+    with pytest.raises(PermissionError):
+        ds.x.append(np.zeros((8,), np.int64))
+    ds.checkout("main")
+    ds.x.append(np.zeros((8,), np.int64))  # head is writable again
+
+
+def test_branching_isolation():
+    ds = _mk()
+    ds.commit("base")
+    ds.checkout("exp", create=True)
+    ds.x[1] = np.full((8,), -1, np.int64)
+    ds.commit("exp change")
+    ds.checkout("main")
+    np.testing.assert_array_equal(ds.x[1], np.full((8,), 1, np.int64))
+    ds.checkout("exp")
+    np.testing.assert_array_equal(ds.x[1], np.full((8,), -1, np.int64))
+
+
+def test_diff_reports_both_sides():
+    ds = _mk()
+    ds.commit("base")
+    ds.checkout("b", create=True)
+    ds.x[2] = np.full((8,), 22, np.int64)
+    ds.x.append(np.full((8,), 11, np.int64))
+    ds.flush()
+    d = ds.diff("main", "b")
+    assert d["b"]["x"]["updated"] == [2]
+    assert d["b"]["x"]["added_count"] == 1
+    assert d["a"] == {}
+
+
+def test_merge_appends_and_updates():
+    ds = _mk()
+    ds.commit("base")
+    ds.checkout("feature", create=True)
+    ds.x[4] = np.full((8,), 44, np.int64)
+    ds.x.append(np.full((8,), 77, np.int64))
+    ds.commit("feature work")
+    ds.checkout("main")
+    ds.x[0] = np.full((8,), 5, np.int64)   # non-conflicting local change
+    ds.merge("feature")
+    np.testing.assert_array_equal(ds.x[4], np.full((8,), 44, np.int64))
+    np.testing.assert_array_equal(ds.x[0], np.full((8,), 5, np.int64))
+    assert len(ds.x) == 11
+    np.testing.assert_array_equal(ds.x[10], np.full((8,), 77, np.int64))
+
+
+def test_merge_conflict_policies():
+    for policy, want in (("theirs", 99), ("ours", 11), ("raise", None)):
+        ds = _mk()
+        ds.commit("base")
+        ds.checkout("b", create=True)
+        ds.x[3] = np.full((8,), 99, np.int64)
+        ds.commit("theirs")
+        ds.checkout("main")
+        ds.x[3] = np.full((8,), 11, np.int64)
+        ds.flush()
+        if policy == "raise":
+            with pytest.raises(dl.MergeConflict):
+                ds.merge("b", policy="raise")
+        else:
+            ds.merge("b", policy=policy)
+            np.testing.assert_array_equal(
+                ds.x[3], np.full((8,), want, np.int64))
+
+
+def test_merge_new_tensor_from_branch():
+    ds = _mk()
+    ds.commit("base")
+    ds.checkout("b", create=True)
+    ds.create_tensor("y", dtype="int32")
+    ds.y.extend([np.int32(i) for i in range(3)])
+    ds.commit("add y")
+    ds.checkout("main")
+    ds.merge("b")
+    assert "y" in ds.tensor_names
+    assert int(ds.y[2]) == 2
+
+
+def test_schema_evolution_is_versioned():
+    ds = _mk()
+    c0 = ds.commit("before schema change")
+    ds.create_tensor("z", dtype="float32")
+    ds.commit("with z")
+    assert "z" in ds.tensor_names
+    assert "z" not in ds.vc.schema_tensors(c0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(-100, 100)),
+                min_size=1, max_size=8))
+def test_time_travel_property(edit_script):
+    """Any sequence of commit+edit rounds: every commit replays exactly."""
+    ds = _mk()
+    expected = {i: i for i in range(10)}   # idx -> scalar value
+    snapshots = []
+    for idx, val in edit_script:
+        cid = ds.commit(f"edit {idx}")
+        snapshots.append((cid, dict(expected)))
+        ds.x[idx] = np.full((8,), val, np.int64)
+        expected[idx] = val
+    final = ds.commit("final")
+    snapshots.append((final, dict(expected)))
+    for cid, snap in snapshots:
+        t = ds.tensor_at("x", cid)
+        for i, v in snap.items():
+            np.testing.assert_array_equal(t.read(i), np.full((8,), v, np.int64))
+
+
+def test_versioned_query_and_view_save():
+    ds = _mk()
+    c0 = ds.commit("v0")
+    ds.x[0] = np.full((8,), 1000, np.int64)
+    ds.commit("v1")
+    v = ds.query(f'SELECT * FROM dataset VERSION "{c0}" WHERE MEAN(x) < 5')
+    assert len(v) == 5
+    vid = v.save()
+    v2 = dl.DatasetView.load(ds, vid)
+    assert np.array_equal(v2.indices, v.indices)
+    np.testing.assert_array_equal(v2.tensor("x").read(0), np.zeros((8,), np.int64))
