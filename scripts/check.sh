@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# One-command gate: tier-1 test suite + TQL pruning benchmark (smoke mode).
+# Usage: scripts/check.sh  (from the repo root)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== TQL pruning benchmark (smoke) =="
+python -m benchmarks.bench_tql --smoke
+
+echo "== check.sh: all green =="

@@ -11,6 +11,12 @@ table and compress on serialize).
 The encoder is copy-on-write friendly: ``replace()`` swaps a chunk's name
 in-place (used when an in-place sample update rewrites a chunk under version
 control) without disturbing index ranges.
+
+:class:`ChunkStatsTable` is the encoder's statistics sidecar: chunk name ->
+:class:`~repro.core.chunks.ChunkStats`, persisted per tensor per version as
+``chunk_stats.json`` and consumed by the TQL scan planner for data skipping.
+Both structures key by chunk *name*, so they survive commits unchanged while
+chunk payloads stay where they were created (§4.1).
 """
 
 from __future__ import annotations
@@ -18,9 +24,11 @@ from __future__ import annotations
 import json
 import zlib
 from bisect import bisect_left
-from typing import List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+from .chunks import ChunkStats
 
 
 class ChunkEncoder:
@@ -67,6 +75,15 @@ class ChunkEncoder:
             raise IndexError(f"sample {global_idx} out of range [0, {n})")
         return bisect_left(self._last_idx, global_idx)
 
+    def ords_of(self, global_indices: Union[Sequence[int], np.ndarray]) -> np.ndarray:
+        """Vectorized ``chunk_ord_of`` over an index array (scan planning)."""
+        arr = np.asarray(global_indices, dtype=np.int64)
+        n = self.num_samples
+        if arr.size and (int(arr.min()) < 0 or int(arr.max()) >= n):
+            raise IndexError(f"indices out of range [0, {n})")
+        return np.searchsorted(np.asarray(self._last_idx, dtype=np.int64),
+                               arr, side="left")
+
     def lookup(self, global_idx: int) -> Tuple[str, int]:
         """global index -> (chunk name, local index inside that chunk)."""
         ord_ = self.chunk_ord_of(global_idx)
@@ -109,3 +126,51 @@ class ChunkEncoder:
 
     def nbytes(self) -> int:
         return 8 * len(self._last_idx) + sum(len(n) for n in self._names)
+
+
+class ChunkStatsTable:
+    """chunk name -> :class:`ChunkStats`; the ``chunk_stats.json`` sidecar.
+
+    Missing entries are legal (pre-stats datasets, ancestor chunks written
+    before the sidecar existed): the planner treats them as unknown and keeps
+    the chunk, so the table is purely an optimization, never a correctness
+    requirement.
+    """
+
+    def __init__(self) -> None:
+        self._by_name: Dict[str, ChunkStats] = {}
+
+    def set(self, chunk_name: str, stats: ChunkStats) -> None:
+        self._by_name[chunk_name] = stats
+
+    def get(self, chunk_name: str) -> Optional[ChunkStats]:
+        return self._by_name.get(chunk_name)
+
+    def drop(self, chunk_name: str) -> None:
+        self._by_name.pop(chunk_name, None)
+
+    def prune_to(self, live_names: Sequence[str]) -> None:
+        """Keep only entries for chunks the encoder still references."""
+        live = set(live_names)
+        for name in [n for n in self._by_name if n not in live]:
+            del self._by_name[name]
+
+    def __len__(self) -> int:
+        return len(self._by_name)
+
+    def __contains__(self, chunk_name: str) -> bool:
+        return chunk_name in self._by_name
+
+    # -- wire -----------------------------------------------------------------
+    def serialize(self) -> bytes:
+        return json.dumps(
+            {"chunks": {k: v.to_json() for k, v in self._by_name.items()}}
+        ).encode()
+
+    @classmethod
+    def deserialize(cls, data: bytes) -> "ChunkStatsTable":
+        table = cls()
+        d = json.loads(data.decode())
+        for name, sj in d.get("chunks", {}).items():
+            table._by_name[name] = ChunkStats.from_json(sj)
+        return table

@@ -18,6 +18,31 @@ Byte ranges for a single sample are therefore
 ``[header_sz + offsets[i], header_sz + offsets[i+1])`` — this is what the
 streaming loader's range requests use (§3.5).  Shapes live in the header so
 shape-only queries (TQL ``SHAPE(x)``) never touch payload bytes.
+
+Chunk statistics (TQL data skipping)
+-----------------------------------
+
+Alongside the wire format, each :class:`ChunkBuilder` accumulates a
+:class:`ChunkStats` record over every sample it absorbs: element-wise
+``lo``/``hi`` bounds (widened outward so float rounding can never narrow the
+true range), NaN and non-zero element counts, total element count, the
+smallest per-sample element count (``min_elems`` — 0 means the chunk may hold
+empty samples), sample count and payload byte size.  Samples the builder
+cannot inspect (tile descriptors, undecodable payloads) flip ``exact`` to
+False, which tells the query planner to treat the chunk as unknown.
+
+Stats are persisted per tensor per version as a JSON sidecar under the
+existing :class:`~repro.core.storage.StorageProvider` key protocol:
+
+    versions/{node}/tensors/{t}/chunk_stats.json
+        {"chunks": {chunk_name: {count, nbytes, lo, hi, nan_count,
+                                 true_count, n_elements, min_elems, exact}}}
+
+The sidecar is one of the version-control ``STATE_FILES``: ``commit`` copies
+it to the child node together with the chunk-encoder snapshot, so stats keep
+mapping chunk *names* (which never move between versions, §4.1) to bounds.
+``tql/planner.py`` consumes these records to derive per-chunk
+prune/keep/verify verdicts for ``WHERE`` clauses without fetching payloads.
 """
 
 from __future__ import annotations
@@ -33,6 +58,112 @@ from .codecs import Codec, get_codec
 MAGIC = b"DLC1"
 FLAG_TILED = 0x01
 _FIXED = struct.Struct("<4sIIB3x16s16s")  # magic, header_sz, n, max_ndim, dtype, codec
+
+_NUMERIC_KINDS = "biuf"
+
+
+def _lo_bound(v) -> float:
+    """float(v) rounded, if at all, toward -inf (never narrows an interval)."""
+    f = float(v)
+    return float(np.nextafter(f, -np.inf)) if f > v else f
+
+
+def _hi_bound(v) -> float:
+    f = float(v)
+    return float(np.nextafter(f, np.inf)) if f < v else f
+
+
+@dataclass
+class ChunkStats:
+    """Per-chunk column statistics used for TQL data skipping.
+
+    ``lo``/``hi`` bound every non-NaN element of every sample in the chunk
+    (None when the chunk holds no inspectable numeric values).  ``exact`` is
+    False when at least one sample could not be inspected (tile descriptor or
+    undecodable payload) — the planner must then treat the chunk as unknown.
+    """
+
+    count: int = 0          # samples
+    nbytes: int = 0         # encoded payload bytes
+    lo: Optional[float] = None
+    hi: Optional[float] = None
+    nan_count: int = 0      # NaN elements seen
+    true_count: int = 0     # non-zero elements seen
+    n_elements: int = 0     # total elements across samples
+    min_elems: int = 0      # smallest per-sample element count
+    exact: bool = True
+
+    def to_json(self) -> dict:
+        return {"count": self.count, "nbytes": self.nbytes,
+                "lo": self.lo, "hi": self.hi,
+                "nan_count": self.nan_count, "true_count": self.true_count,
+                "n_elements": self.n_elements, "min_elems": self.min_elems,
+                "exact": self.exact}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ChunkStats":
+        s = cls()
+        for k, v in d.items():
+            setattr(s, k, v)
+        return s
+
+
+class _StatsAccumulator:
+    """Streaming ChunkStats over decoded samples of one chunk."""
+
+    def __init__(self, dtype: np.dtype) -> None:
+        self.dtype = dtype
+        self.reset()
+
+    def reset(self) -> None:
+        self.count = 0
+        self.lo = np.inf
+        self.hi = -np.inf
+        self.nan_count = 0
+        self.true_count = 0
+        self.n_elements = 0
+        self.min_elems: Optional[int] = None
+        self.exact = True
+
+    def mark_inexact(self, n_samples: int = 1) -> None:
+        self.count += n_samples
+        self.exact = False
+
+    def observe(self, arr: np.ndarray) -> None:
+        self.count += 1
+        size = int(arr.size)
+        self.n_elements += size
+        self.min_elems = size if self.min_elems is None \
+            else min(self.min_elems, size)
+        if size == 0:
+            return
+        self.true_count += int(np.count_nonzero(arr))
+        kind = arr.dtype.kind
+        if kind not in _NUMERIC_KINDS:
+            self.exact = False
+            return
+        if kind == "f":
+            nan = size - int(np.count_nonzero(arr == arr))
+            self.nan_count += nan
+            if nan == size:
+                return
+            lo, hi = float(np.nanmin(arr)), float(np.nanmax(arr))
+        else:
+            lo = _lo_bound(int(arr.min()))
+            hi = _hi_bound(int(arr.max()))
+        self.lo = min(self.lo, lo)
+        self.hi = max(self.hi, hi)
+
+    def snapshot(self, nbytes: int) -> ChunkStats:
+        has_range = self.lo <= self.hi
+        return ChunkStats(
+            count=self.count, nbytes=int(nbytes),
+            lo=self.lo if has_range else None,
+            hi=self.hi if has_range else None,
+            nan_count=self.nan_count, true_count=self.true_count,
+            n_elements=self.n_elements,
+            min_elems=int(self.min_elems or 0),
+            exact=self.exact)
 
 
 def _pad16(s: str) -> bytes:
@@ -115,6 +246,8 @@ class ChunkBuilder:
         self.shapes: List[Tuple[int, ...]] = []
         self.flags: List[int] = []
         self._data_bytes = 0
+        self._stats = _StatsAccumulator(self.dtype)
+        self._stats_dirty = False
 
     # -- building ------------------------------------------------------------
     def append_array(self, arr: np.ndarray) -> int:
@@ -123,18 +256,65 @@ class ChunkBuilder:
             raise TypeError(f"chunk dtype {self.dtype} != sample dtype {arr.dtype}")
         payload = self._codec.encode(arr)
         self._append_payload(payload, tuple(arr.shape), 0)
+        if self._codec.lossy:  # stats must bound what queries will read
+            self._observe_payload(payload, tuple(arr.shape), 0)
+        else:
+            self._stats.observe(arr)
         return len(payload)
 
-    def append_raw(self, payload: bytes, shape: Tuple[int, ...], flags: int = 0) -> int:
-        """Append a pre-encoded payload (used for tile descriptors / copies)."""
-        self._append_payload(bytes(payload), shape, flags)
+    def append_raw(self, payload: bytes, shape: Tuple[int, ...], flags: int = 0,
+                   source: Optional[np.ndarray] = None) -> int:
+        """Append a pre-encoded payload (used for tile descriptors / copies).
+
+        ``source`` is the decoded array the payload was encoded from, when the
+        caller still has it in hand: for lossless codecs its stats equal the
+        payload's, so passing it skips a decode on the ingest hot path.  Lossy
+        codecs always re-decode — stats must bound what queries will read.
+        """
+        payload = bytes(payload)
+        self._append_payload(payload, shape, flags)
+        if source is not None and not flags & FLAG_TILED \
+                and not self._codec.lossy:
+            self._stats.observe(source)
+        else:
+            self._observe_payload(payload, shape, flags)
         return len(payload)
+
+    def replace_payload(self, local: int, payload: bytes,
+                        shape: Tuple[int, ...], flags: int) -> None:
+        """In-place sample update of the open chunk; stats recompute lazily."""
+        self._data_bytes += len(payload) - len(self.payloads[local])
+        self.payloads[local] = bytes(payload)
+        self.shapes[local] = shape
+        self.flags[local] = flags
+        self._stats_dirty = True
 
     def _append_payload(self, payload: bytes, shape: Tuple[int, ...], flags: int) -> None:
         self.payloads.append(payload)
         self.shapes.append(shape)
         self.flags.append(flags)
         self._data_bytes += len(payload)
+
+    # -- statistics ----------------------------------------------------------
+    def _observe_payload(self, payload: bytes, shape: Tuple[int, ...],
+                         flags: int) -> None:
+        if flags & FLAG_TILED:
+            self._stats.mark_inexact()
+            return
+        try:
+            self._stats.observe(self._codec.decode(payload, shape, self.dtype))
+        except Exception:
+            self._stats.mark_inexact()
+
+    def stats_snapshot(self) -> ChunkStats:
+        """Current :class:`ChunkStats` of the chunk being built."""
+        if self._stats_dirty:
+            self._stats.reset()
+            for payload, shape, flags in zip(self.payloads, self.shapes,
+                                             self.flags):
+                self._observe_payload(payload, shape, flags)
+            self._stats_dirty = False
+        return self._stats.snapshot(self._data_bytes)
 
     # -- inspection ------------------------------------------------------------
     @property

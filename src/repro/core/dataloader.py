@@ -49,6 +49,11 @@ class LoaderStats:
     decode_seconds: float = 0.0
     wait_seconds: float = 0.0   # consumer blocked on pipeline
     wall_seconds: float = 0.0
+    # data-skipping accounting, inherited from the view's TQL scan plan:
+    # rows/chunks the planner proved dead, so this loader never fetches them
+    rows_pruned: int = 0
+    chunks_pruned: int = 0
+    stats_groups_decided: int = 0
 
     def throughput(self) -> float:
         return self.samples / self.wall_seconds if self.wall_seconds else 0.0
@@ -108,6 +113,16 @@ class DeepLakeLoader:
         for t in self.tensor_names:
             if t not in view.tensor_names:
                 raise KeyError(f"loader tensor {t!r} not in view")
+        # a query view arrives with its scan plan: dead chunks were already
+        # dropped from view.indices, so the order plan below never visits
+        # them — here we only account for the work the planner saved.
+        plan = getattr(view, "scan_plan", None)
+        if plan:
+            self.stats.rows_pruned = plan.get("rows_pruned", 0)
+            self.stats.chunks_pruned = plan.get("chunks_pruned", 0)
+            self.stats.stats_groups_decided = plan.get("groups_decided", 0)
+            self.costs.note("chunks_pruned", self.stats.chunks_pruned)
+            self.costs.note("rows_pruned", self.stats.rows_pruned)
 
     # ------------------------------------------------------------- planning
     def _primary_tensor(self) -> Optional[str]:

@@ -291,9 +291,9 @@ class Dataset:
         return self.commit(f"merge {ref!r} into {self.branch!r}")
 
     # ------------------------------------------------------------------ query
-    def query(self, tql: str):
+    def query(self, tql: str, engine: str = "auto", use_stats: bool = True):
         from .tql import execute_query
-        return execute_query(self, tql)
+        return execute_query(self, tql, engine=engine, use_stats=use_stats)
 
     def dataloader(self, **kw):
         from .dataloader import DeepLakeLoader

@@ -57,13 +57,23 @@ class MemoryBudget:
 
 
 class CostModel:
-    """EWMA per-class cost estimates (seconds) for io and cpu phases."""
+    """EWMA per-class cost estimates (seconds) for io and cpu phases.
+
+    Also carries free-form event counters (``note``) so upstream layers can
+    record work that was *avoided* — e.g. chunks the TQL scan planner pruned
+    — next to the costs of work actually done.
+    """
 
     def __init__(self, alpha: float = 0.2) -> None:
         self.alpha = alpha
         self._io: Dict[str, float] = {}
         self._cpu: Dict[str, float] = {}
+        self.counters: Dict[str, int] = {}
         self._lock = threading.Lock()
+
+    def note(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self.counters[name] = self.counters.get(name, 0) + int(n)
 
     def observe(self, klass: str, io_s: float, cpu_s: float) -> None:
         with self._lock:

@@ -41,7 +41,14 @@ class StorageProvider:
         raise NotImplementedError
 
     def get_range(self, key: str, start: int, end: int) -> bytes:
-        """Return ``obj[start:end]``. ``end`` is exclusive; may exceed len."""
+        """Return ``obj[start:end]``.
+
+        Contract (all providers, asserted by tests/test_storage_range.py):
+        ``end`` is exclusive and may exceed the object length (the read
+        clamps to the tail); ``start`` at or past the object length, or
+        ``end <= start``, yields ``b""`` — zero-length reads are legal and
+        must not raise on an existing key.
+        """
         raise NotImplementedError
 
     def put(self, key: str, data: bytes) -> None:
@@ -223,6 +230,7 @@ class SimulatedS3Provider(StorageProvider):
         self._clock = clock or time.monotonic
         self.stats = {
             "requests": 0,
+            "ranged_requests": 0,
             "bytes_down": 0,
             "bytes_up": 0,
             "sim_seconds": 0.0,
@@ -254,6 +262,8 @@ class SimulatedS3Provider(StorageProvider):
         with self._sem:
             data = self.base.get_range(key, start, end)
             self._charge(len(data))
+            with self._lock:
+                self.stats["ranged_requests"] += 1
             return data
 
     def put(self, key: str, data: bytes) -> None:

@@ -25,8 +25,8 @@ from typing import Any, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from . import chunks as chunklib
-from .chunk_encoder import ChunkEncoder
-from .chunks import FLAG_TILED, ChunkBuilder, ChunkHeader
+from .chunk_encoder import ChunkEncoder, ChunkStatsTable
+from .chunks import FLAG_TILED, ChunkBuilder, ChunkHeader, ChunkStats
 from .codecs import get_codec
 from .htypes import get_htype
 from .storage import StorageError
@@ -95,6 +95,7 @@ class Tensor:
         if meta is not None:
             self.meta = meta
             self.encoder = ChunkEncoder()
+            self.stats = ChunkStatsTable()
             self.sample_ids: List[int] = []
             self._dirty = True
         else:
@@ -111,21 +112,26 @@ class Tensor:
         self.meta = TensorMeta.from_json(json.loads(raw.decode()))
         enc = self.vc.storage.get_or_none(self._skey("chunk_encoder"))
         self.encoder = ChunkEncoder.deserialize(enc) if enc else ChunkEncoder()
+        st = self.vc.storage.get_or_none(self._skey("chunk_stats.json"))
+        self.stats = ChunkStatsTable.deserialize(st) if st else ChunkStatsTable()
         ids = self.vc.storage.get_or_none(self._skey("sample_ids"))
         self.sample_ids = (
             [int(x) for x in np.frombuffer(zlib.decompress(ids), dtype="<u8")]
             if ids else [])
 
     def flush(self) -> None:
-        """Persist open chunk + encoder + ids + meta + chunk_set + diff."""
+        """Persist open chunk + encoder + stats + ids + meta + chunk_set + diff."""
         if self.node_id is not None:
             return  # read-only binding
         if self._builder is not None and self._builder.num_samples:
             key = self.vc.register_new_chunk(self.name, self._open_name)
             self.vc.storage.put(key, self._builder.serialize())
+            self.stats.set(self._open_name, self._builder.stats_snapshot())
         if not self._dirty:
             return
         st = self.vc.storage
+        self.stats.prune_to(self.encoder.chunk_names())
+        st.put(self._skey("chunk_stats.json"), self.stats.serialize())
         st.put(self._skey("chunk_encoder"), self.encoder.serialize())
         st.put(self._skey("sample_ids"),
                zlib.compress(np.asarray(self.sample_ids, dtype="<u8").tobytes(), 1))
@@ -219,6 +225,7 @@ class Tensor:
                         b.append_raw(raw[s:e], header.shapes[i], int(header.flags[i]))
                     n = self.encoder.samples_in(last_ord)
                     self.encoder.pop_last()
+                    self.stats.drop(last_name)
                     self._builder = b
                     self._open_name = _new_chunk_name()
                     self.encoder.register_chunk(self._open_name, n)
@@ -238,13 +245,15 @@ class Tensor:
             return
         key = self.vc.register_new_chunk(self.name, self._open_name)
         self.vc.storage.put(key, self._builder.serialize())
+        self.stats.set(self._open_name, self._builder.stats_snapshot())
         self._builder, self._open_name = None, None
 
     def _append_encoded(self, payload: bytes, shape: Tuple[int, ...], flags: int,
-                        sample_id: Optional[int]) -> int:
+                        sample_id: Optional[int],
+                        source: Optional[np.ndarray] = None) -> int:
         b = self._ensure_open(len(payload))
         was_empty = b.num_samples == 0
-        b.append_raw(payload, shape, flags)
+        b.append_raw(payload, shape, flags, source=source)
         if was_empty and (self.encoder.num_chunks == 0
                           or self.encoder.name_of(self.encoder.num_chunks - 1)
                           != self._open_name):
@@ -271,7 +280,8 @@ class Tensor:
             desc = self._write_tiled(arr)
             return self._append_encoded(desc.to_bytes(), tuple(arr.shape),
                                         FLAG_TILED, sample_id)
-        return self._append_encoded(payload, tuple(arr.shape), 0, sample_id)
+        return self._append_encoded(payload, tuple(arr.shape), 0, sample_id,
+                                    source=arr)
 
     def extend(self, samples: Sequence[Any]) -> None:
         for s in samples:
@@ -319,9 +329,7 @@ class Tensor:
             payload, flags = desc.to_bytes(), FLAG_TILED
         chunk_name, local = self.encoder.lookup(idx)
         if self._builder is not None and chunk_name == self._open_name:
-            self._builder.payloads[local] = payload
-            self._builder.shapes[local] = tuple(arr.shape)
-            self._builder.flags[local] = flags
+            self._builder.replace_payload(local, payload, tuple(arr.shape), flags)
         else:
             self._rewrite_chunk(idx, chunk_name, local, payload,
                                 tuple(arr.shape), flags)
@@ -347,6 +355,8 @@ class Tensor:
         self.vc.storage.put(new_key, b.serialize())
         ord_ = self.encoder.chunk_ord_of(idx)
         self.encoder.replace(ord_, new_name)
+        self.stats.set(new_name, b.stats_snapshot())
+        self.stats.drop(chunk_name)
         if chunk_name in self.vc.chunk_set(self.vc.current_id, self.name):
             self.vc.forget_chunk(self.name, chunk_name)
             self.vc.storage.delete(key)
@@ -413,6 +423,15 @@ class Tensor:
         codec = get_codec(self.meta.codec)
         arr = codec.decode(payload, shape, np.dtype(self.meta.dtype))
         return arr[tuple(region)]
+
+    def chunk_stats_of(self, chunk_ord: int) -> Optional[ChunkStats]:
+        """Stats of chunk ``chunk_ord`` (live from the open builder when the
+        chunk is still being written), or None when unknown — e.g. datasets
+        created before the sidecar existed.  Never touches chunk payloads."""
+        name = self.encoder.name_of(chunk_ord)
+        if self._builder is not None and name == self._open_name:
+            return self._builder.stats_snapshot()
+        return self.stats.get(name)
 
     def shape_of(self, idx: int) -> Tuple[int, ...]:
         """Sample shape without decoding payload (header-only metadata read)."""

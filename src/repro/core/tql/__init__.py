@@ -6,6 +6,8 @@ from .executor import Executor, execute_query
 from .functions import register_function
 from .lexer import TQLSyntaxError
 from .parser import parse, parse_expression
+from .planner import Interval, ScanPlan, interval_from_stats, plan_where
 
-__all__ = ["Executor", "Query", "TQLSyntaxError", "execute_query", "parse",
-           "parse_expression", "register_function"]
+__all__ = ["Executor", "Interval", "Query", "ScanPlan", "TQLSyntaxError",
+           "execute_query", "interval_from_stats", "parse",
+           "parse_expression", "plan_where", "register_function"]

@@ -15,6 +15,17 @@ class Node:
                 if isinstance(item, Node):
                     yield from item.walk()
 
+    def find(self, cls):
+        """Yield every descendant (including self) of the given node type."""
+        for n in self.walk():
+            if isinstance(n, cls):
+                yield n
+
+    def calls(self, name: str) -> bool:
+        """True if any Call node in the subtree invokes ``name`` (upper-cased
+        match; used by the scan planner to detect RANDOM() and friends)."""
+        return any(c.name.upper() == name.upper() for c in self.find(Call))
+
 
 @dataclass
 class Literal(Node):
@@ -90,7 +101,7 @@ class Query(Node):
 
     def referenced_tensors(self) -> List[str]:
         names = []
-        for n in self.walk():
-            if isinstance(n, TensorRef) and n.name not in names:
+        for n in self.find(TensorRef):
+            if n.name not in names:
                 names.append(n.name)
         return names

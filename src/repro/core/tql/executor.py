@@ -27,6 +27,7 @@ from .ast_nodes import (BinOp, Call, Index, ListExpr, Literal, Node, Query,
                         SelectItem, SliceSpec, TensorRef, UnaryOp)
 from .functions import get_function
 from .parser import parse
+from .planner import ScanPlan, plan_where
 
 
 class Unvectorizable(Exception):
@@ -244,9 +245,12 @@ def _substitute(node: Node, aliases: Dict[str, Node]) -> Node:
 
 
 class Executor:
-    def __init__(self, query: Query, engine: str = "auto") -> None:
+    def __init__(self, query: Query, engine: str = "auto",
+                 use_stats: bool = True) -> None:
         self.query = query
         self.engine = engine
+        self.use_stats = use_stats
+        self.scan_plan: Optional[ScanPlan] = None  # set by run() when planned
         self.seed = _query_seed(repr(query))
         self.rng = np.random.default_rng(self.seed)
         aliases = {it.alias: it.expr for it in query.items
@@ -274,8 +278,27 @@ class Executor:
                 if self.engine == "jax":
                     raise
         ctx = RowContext(view, self)
-        return np.asarray([eval_row(node, ctx.bind(i)) for i in range(len(view))],
-                          dtype=object if node is None else None)
+        vals = [eval_row(node, ctx.bind(i)) for i in range(len(view))]
+        try:
+            return np.asarray(vals)
+        except ValueError:  # ragged per-row results (e.g. WHERE rag > 0)
+            out = np.empty(len(vals), dtype=object)
+            out[:] = vals
+            return out
+
+    def _where_mask(self, view: DatasetView, node: Node) -> np.ndarray:
+        """Per-row boolean mask under `_truthy` semantics (all elements true,
+        empty is False) — the vectorized path must agree with the row path."""
+        mask = self.eval_all(view, node)
+        if mask.dtype == object:
+            return np.asarray([_truthy(m)
+                               for m in np.asarray(mask, dtype=object)])
+        mask = mask.astype(bool)
+        if mask.ndim > 1:
+            if 0 in mask.shape[1:]:
+                return np.zeros(len(mask), dtype=bool)
+            mask = mask.all(axis=tuple(range(1, mask.ndim)))
+        return mask
 
     def run(self, base: DatasetView) -> DatasetView:
         q = self.query
@@ -283,10 +306,20 @@ class Executor:
         # WHERE ------------------------------------------------------------
         if q.where is not None:
             if len(view):
-                mask = self.eval_all(view, q.where)
-                keep = np.asarray([_truthy(m) for m in np.asarray(mask, dtype=object)]) \
-                    if mask.dtype == object else mask.astype(bool)
-                view = view[np.nonzero(keep)[0]]
+                plan = plan_where(view, q.where) if self.use_stats else None
+                self.scan_plan = plan
+                if plan is not None and plan.effective:
+                    # stats pushdown: pruned chunks are never fetched; only
+                    # 'verify' rows pay predicate evaluation
+                    parts = [plan.sure]
+                    if len(plan.verify):
+                        sub = view[plan.verify]
+                        keep = self._where_mask(sub, q.where)
+                        parts.append(plan.verify[np.nonzero(keep)[0]])
+                    view = view[np.sort(np.concatenate(parts)).astype(np.int64)]
+                else:
+                    keep = self._where_mask(view, q.where)
+                    view = view[np.nonzero(keep)[0]]
         # ORDER BY ----------------------------------------------------------
         if q.order_by is not None and len(view):
             keys = np.asarray(self.eval_all(view, q.order_by), dtype=np.float64)
@@ -320,7 +353,10 @@ class Executor:
         if q.limit is not None:
             view = view[: q.limit]
         # SELECT ---------------------------------------------------------------
-        return self._project(view)
+        out = self._project(view)
+        if self.scan_plan is not None:
+            out.scan_plan = self.scan_plan.report()
+        return out
 
     def _project(self, view: DatasetView) -> DatasetView:
         items = self.query.items
@@ -350,7 +386,7 @@ class Executor:
 
 
 def execute_query(source: Union["Dataset", DatasetView], text: str,
-                  engine: str = "auto") -> DatasetView:
+                  engine: str = "auto", use_stats: bool = True) -> DatasetView:
     q = parse(text)
     if isinstance(source, DatasetView):
         if q.version:
@@ -364,4 +400,4 @@ def execute_query(source: Union["Dataset", DatasetView], text: str,
                if t not in base.tensor_names and t not in aliases]
     if missing:
         raise KeyError(f"query references unknown tensors: {missing}")
-    return Executor(q, engine=engine).run(base)
+    return Executor(q, engine=engine, use_stats=use_stats).run(base)

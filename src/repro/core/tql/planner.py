@@ -1,0 +1,474 @@
+"""TQL scan planner: chunk-statistics predicate pushdown (data skipping).
+
+Delta-Lake-style file skipping, adapted to Deep Lake's chunked tensor layout:
+each chunk carries :class:`~repro.core.chunks.ChunkStats` (element-wise
+lo/hi bounds, NaN / empty-sample flags).  Before ``Executor.run`` evaluates a
+``WHERE`` clause, :func:`plan_where` walks the predicate AST with interval
+arithmetic over those bounds and classifies every row of the view into one of
+three verdicts, grouped by the tuple of chunks the row lives in:
+
+* **prune**  — the predicate is certainly False for every row of the group;
+  the chunks are never fetched or decoded;
+* **sure**   — certainly True; rows are kept without evaluating the predicate;
+* **verify** — unknown; rows are evaluated normally (the only rows whose
+  chunks are fetched during WHERE).
+
+Soundness rules (all conservative — unknown always falls back to verify):
+
+* a row's truth is ``_truthy(value)`` = "all elements non-zero, empty is
+  False", so a comparison is certainly-True only when the whole stats
+  interval satisfies it and certainly-False only when none of it can;
+* NaN elements make ``== < <= > >=`` possibly-False and ``!=`` possibly-True
+  (IEEE semantics); possibly-empty samples make any comparison
+  possibly-False;
+* expressions the planner cannot analyze (UDFs, CONTAINS, IN, subscripts,
+  string literals, ...) evaluate to the unknown interval TOP;
+* computed values (literals the engine may cast to float32, arithmetic,
+  MEAN/STD/SQRT/CAST_FLOAT) are widened outward by the worst-case float32
+  evaluation rounding, and arithmetic that could overflow int64 becomes TOP
+  — interval math in float64 alone would flip verdicts at bound-hugging
+  predicates;
+* a predicate containing RANDOM() disables planning entirely: evaluating it
+  over a subset would change the random stream and thus the result.
+
+Intervals use ``lo > hi`` to mean "no non-NaN numeric values" (e.g. MEAN of a
+chunk of empty samples): comparisons then draw outcomes only from the
+NaN/empty flags.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, List, Optional
+
+import numpy as np
+
+from .ast_nodes import BinOp, Call, Literal, Node, TensorRef, UnaryOp
+from ..chunks import _hi_bound, _lo_bound
+
+_CMP_OPS = ("==", "!=", ">", ">=", "<", "<=")
+
+# The engine may evaluate in float32 (NEP-50 weak scalars keep a float32
+# column float32), so every interval that models a *computed* value must be
+# widened outward by the worst-case evaluation rounding, or a bound-hugging
+# predicate could flip a verdict (e.g. float32(0.4 + 2**24) == 2**24).
+_EPS32 = float(np.finfo(np.float32).eps)     # one-rounding relative error
+_EPS_MEAN = 64 * _EPS32                      # pairwise-sum error, n <= 2**64
+_EPS_STD = 256 * _EPS32                      # sum-of-squares + sqrt margin
+_TINY32 = float(np.finfo(np.float32).tiny)   # absolute floor (subnormals)
+_INT_GUARD = float(2 ** 62)                  # int64 arithmetic may overflow
+
+
+def _pad(lo: float, hi: float, rel: float = _EPS32):
+    """Widen [lo, hi] outward by the evaluation rounding margin; None means
+    the magnitude is large enough that int64 overflow could wrap (→ TOP)."""
+    m = max(abs(lo), abs(hi))
+    if m >= _INT_GUARD:
+        return None
+    pad = rel * m + _TINY32
+    return lo - pad, hi + pad
+
+BOTH: FrozenSet[bool] = frozenset((True, False))
+ONLY_T: FrozenSet[bool] = frozenset((True,))
+ONLY_F: FrozenSet[bool] = frozenset((False,))
+
+
+@dataclass(frozen=True)
+class Interval:
+    """Bounds on every element an expression can produce for rows of one
+    chunk group.  ``known=False`` is TOP: nothing can be said."""
+
+    lo: float = -math.inf
+    hi: float = math.inf
+    has_nan: bool = True
+    maybe_empty: bool = True
+    known: bool = False
+
+    @property
+    def has_values(self) -> bool:
+        return self.known and self.lo <= self.hi
+
+    def is_point(self) -> bool:
+        return self.has_values and self.lo == self.hi \
+            and not self.has_nan and not self.maybe_empty
+
+
+TOP = Interval()
+
+
+def _point(v: float) -> Interval:
+    return Interval(float(v), float(v), has_nan=False, maybe_empty=False,
+                    known=True)
+
+
+def interval_from_stats(stats) -> Interval:
+    """Map a ChunkStats record (or None) to the planner's interval domain."""
+    if stats is None or not stats.exact:
+        return TOP
+    maybe_empty = stats.min_elems == 0 or stats.count == 0
+    if stats.lo is None:  # no inspectable numeric values (all NaN / empty)
+        return Interval(math.inf, -math.inf, has_nan=stats.nan_count > 0,
+                        maybe_empty=maybe_empty, known=True)
+    return Interval(float(stats.lo), float(stats.hi),
+                    has_nan=stats.nan_count > 0, maybe_empty=maybe_empty,
+                    known=True)
+
+
+# ------------------------------------------------------------ interval algebra
+def _flags(a: Interval, b: Interval) -> Dict[str, bool]:
+    return {"has_nan": a.has_nan or b.has_nan,
+            "maybe_empty": a.maybe_empty or b.maybe_empty}
+
+
+def _arith(op: str, a: Interval, b: Interval) -> Interval:
+    if not a.known or not b.known:
+        return TOP
+    if not a.has_values or not b.has_values:
+        # one side is only-NaN/empty: result values are NaN or empty
+        return Interval(math.inf, -math.inf, known=True, **_flags(a, b))
+    if op == "+":
+        lo, hi = a.lo + b.lo, a.hi + b.hi
+    elif op == "-":
+        lo, hi = a.lo - b.hi, a.hi - b.lo
+    elif op == "*":
+        prods = (a.lo * b.lo, a.lo * b.hi, a.hi * b.lo, a.hi * b.hi)
+        lo, hi = min(prods), max(prods)
+    elif op == "/":
+        if b.lo <= 0 <= b.hi:
+            return TOP  # division by (possibly) zero: anything can happen
+        quots = (a.lo / b.lo, a.lo / b.hi, a.hi / b.lo, a.hi / b.hi)
+        lo, hi = min(quots), max(quots)
+    else:  # '%' and anything exotic
+        return TOP
+    if math.isnan(lo) or math.isnan(hi):
+        return TOP
+    padded = _pad(lo, hi)
+    if padded is None:
+        return TOP
+    return Interval(*padded, known=True, **_flags(a, b))
+
+
+def _neg(a: Interval) -> Interval:
+    if not a.known:
+        return TOP
+    if not a.has_values:
+        return a
+    return Interval(-a.hi, -a.lo, has_nan=a.has_nan,
+                    maybe_empty=a.maybe_empty, known=True)
+
+
+def _cmp_truth(a: Interval, b: Interval, op: str) -> FrozenSet[bool]:
+    if not a.known or not b.known:
+        return BOTH
+    out = set()
+    if a.has_values and b.has_values:
+        if op in ("<", ">"):
+            lt = (a, b) if op == "<" else (b, a)
+            if lt[0].hi < lt[1].lo:
+                out.add(True)
+            elif lt[0].lo >= lt[1].hi:
+                out.add(False)
+            else:
+                out.update(BOTH)
+        elif op in ("<=", ">="):
+            le = (a, b) if op == "<=" else (b, a)
+            if le[0].hi <= le[1].lo:
+                out.add(True)
+            elif le[0].lo > le[1].hi:
+                out.add(False)
+            else:
+                out.update(BOTH)
+        elif op == "==":
+            if a.lo == a.hi == b.lo == b.hi:
+                out.add(True)
+            elif a.hi < b.lo or a.lo > b.hi:
+                out.add(False)
+            else:
+                out.update(BOTH)
+        elif op == "!=":
+            if a.hi < b.lo or a.lo > b.hi:
+                out.add(True)
+            elif a.lo == a.hi == b.lo == b.hi:
+                out.add(False)
+            else:
+                out.update(BOTH)
+        else:
+            return BOTH
+    if a.has_nan or b.has_nan:
+        out.add(True if op == "!=" else False)
+    if a.maybe_empty or b.maybe_empty:
+        out.add(False)  # empty comparison result -> _truthy is False
+    return frozenset(out) if out else BOTH
+
+
+def _truthify(iv: Interval) -> FrozenSet[bool]:
+    """Possible row truth values of a non-comparison expression (§executor
+    semantics: all elements non-zero; empty is False; NaN is truthy)."""
+    if not iv.known:
+        return BOTH
+    out = set()
+    if iv.has_values:
+        if iv.lo > 0 or iv.hi < 0:
+            out.add(True)
+        elif iv.lo == 0 == iv.hi:
+            out.add(False)
+        else:
+            out.update(BOTH)
+    if iv.has_nan:
+        out.add(True)
+    if iv.maybe_empty:
+        out.add(False)
+    return frozenset(out) if out else BOTH
+
+
+def _bool_interval(t: FrozenSet[bool]) -> Interval:
+    if t == ONLY_T:
+        return _point(1.0)
+    if t == ONLY_F:
+        return _point(0.0)
+    return Interval(0.0, 1.0, has_nan=False, maybe_empty=False, known=True)
+
+
+# --------------------------------------------------------------- AST analysis
+class _Analyzer:
+    def __init__(self, env: Dict[str, Interval]) -> None:
+        self.env = env
+
+    # -- truth ---------------------------------------------------------------
+    def truth(self, node: Node) -> FrozenSet[bool]:
+        if isinstance(node, BinOp):
+            if node.op in ("and", "or"):
+                lt, rt = self.truth(node.left), self.truth(node.right)
+                if node.op == "and":
+                    return frozenset(a and b for a in lt for b in rt)
+                return frozenset(a or b for a in lt for b in rt)
+            if node.op in _CMP_OPS:
+                return _cmp_truth(self.interval(node.left),
+                                  self.interval(node.right), node.op)
+        if isinstance(node, UnaryOp) and node.op == "not":
+            return frozenset(not v for v in self.truth(node.operand))
+        return _truthify(self.interval(node))
+
+    # -- intervals -----------------------------------------------------------
+    def interval(self, node: Node) -> Interval:
+        if isinstance(node, Literal):
+            if isinstance(node.value, bool):
+                return _point(1.0 if node.value else 0.0)
+            if isinstance(node.value, (int, float)):
+                # the engine may cast the literal to a column's float32: the
+                # operand is then float32(v), so the interval is the exact
+                # hull of both representations (a point when v is exact in
+                # float32 — keeps integer comparisons decisively 'sure')
+                v = node.value
+                f32 = float(np.float32(v))
+                if math.isnan(f32):
+                    return TOP
+                return Interval(_lo_bound(min(v, f32)),
+                                _hi_bound(max(v, f32)),
+                                has_nan=False, maybe_empty=False, known=True)
+            return TOP
+        if isinstance(node, TensorRef):
+            return self.env.get(node.name, TOP)
+        if isinstance(node, UnaryOp):
+            if node.op == "-":
+                return _neg(self.interval(node.operand))
+            return _bool_interval(
+                frozenset(not v for v in self.truth(node.operand)))
+        if isinstance(node, BinOp):
+            if node.op in ("and", "or") or node.op in _CMP_OPS:
+                return _bool_interval(self.truth(node))
+            return _arith(node.op, self.interval(node.left),
+                          self.interval(node.right))
+        if isinstance(node, Call):
+            return self._call(node)
+        return TOP  # Index, ListExpr, SliceSpec, unknown nodes
+
+    def _call(self, node: Call) -> Interval:
+        name = node.name.upper()
+        if name in ("MEAN", "MIN", "MAX", "STD") and len(node.args) == 1:
+            a = self.interval(node.args[0])
+            if not a.known:
+                return TOP
+            if name == "STD":
+                lo, hi = (0.0, a.hi - a.lo) if a.has_values else (math.inf,
+                                                                  -math.inf)
+            else:
+                lo, hi = (a.lo, a.hi) if a.has_values else (math.inf,
+                                                            -math.inf)
+            # reductions of an empty sample: 0.0 on the row path, NaN on the
+            # vectorized path -> admit both outcomes
+            if a.maybe_empty and lo <= hi:
+                lo, hi = min(lo, 0.0), max(hi, 0.0)
+            elif a.maybe_empty:
+                lo, hi = 0.0, 0.0
+            if name in ("MEAN", "STD") and lo <= hi:
+                # accumulating reductions round beyond the element bounds
+                padded = _pad(lo, hi, _EPS_MEAN if name == "MEAN" else _EPS_STD)
+                if padded is None:
+                    return TOP
+                lo, hi = padded
+            return Interval(lo, hi,
+                            has_nan=a.has_nan or a.maybe_empty,
+                            maybe_empty=False, known=True)
+        if name == "ABS" and len(node.args) == 1:
+            a = self.interval(node.args[0])
+            if not a.known:
+                return TOP
+            if not a.has_values:
+                return a
+            lo = 0.0 if a.lo <= 0 <= a.hi else min(abs(a.lo), abs(a.hi))
+            return Interval(lo, max(abs(a.lo), abs(a.hi)), has_nan=a.has_nan,
+                            maybe_empty=a.maybe_empty, known=True)
+        if name == "SQRT" and len(node.args) == 1:
+            a = self.interval(node.args[0])
+            if not a.known:
+                return TOP
+            if not a.has_values:
+                return a
+            padded = _pad(math.sqrt(max(a.lo, 0.0)), math.sqrt(max(a.hi, 0.0)))
+            if padded is None:
+                return TOP
+            return Interval(*padded,
+                            has_nan=a.has_nan or a.lo < 0,
+                            maybe_empty=a.maybe_empty, known=True)
+        if name == "CAST_FLOAT" and len(node.args) == 1:
+            a = self.interval(node.args[0])
+            if not a.known or not a.has_values:
+                return a if a.known else TOP
+            padded = _pad(a.lo, a.hi)  # the cast rounds to float32
+            if padded is None:
+                return TOP
+            return Interval(*padded, has_nan=a.has_nan,
+                            maybe_empty=a.maybe_empty, known=True)
+        if name in ("ANY", "ALL") and len(node.args) == 1:
+            a = self.interval(node.args[0])
+            if not a.known:
+                return TOP
+            out = set()
+            if a.has_values:
+                if a.lo > 0 or a.hi < 0:
+                    out.add(True)
+                elif a.lo == 0 == a.hi:
+                    out.add(False)
+                else:
+                    out.update(BOTH)
+            if a.has_nan:
+                out.add(True)  # NaN is non-zero
+            if a.maybe_empty:
+                # np.any(empty) is False, np.all(empty) is True
+                out.add(name == "ALL")
+            return _bool_interval(frozenset(out) if out else BOTH)
+        return TOP
+
+
+# -------------------------------------------------------------------- planning
+@dataclass
+class ScanPlan:
+    """Row-position partition of a view under a WHERE predicate."""
+
+    n_rows: int
+    pruned: np.ndarray        # positions certainly False  (never fetched)
+    sure: np.ndarray          # positions certainly True   (kept, not evaluated)
+    verify: np.ndarray        # positions needing evaluation
+    groups: int               # distinct chunk-combinations examined
+    groups_decided: int       # groups with a definitive (non-verify) verdict
+    chunks_total: int         # chunks the view touches across planned tensors
+    chunks_pruned: int        # chunks no surviving candidate row needs
+    tensors: List[str]        # tensors whose stats were consulted
+
+    @property
+    def effective(self) -> bool:
+        return len(self.pruned) > 0 or len(self.sure) > 0
+
+    def report(self) -> dict:
+        return {
+            "rows": self.n_rows,
+            "rows_pruned": int(len(self.pruned)),
+            "rows_sure": int(len(self.sure)),
+            "rows_verify": int(len(self.verify)),
+            "groups": self.groups,
+            "groups_decided": self.groups_decided,
+            "chunks_total": self.chunks_total,
+            "chunks_pruned": self.chunks_pruned,
+            "tensors": list(self.tensors),
+        }
+
+
+def plan_where(view, where: Node) -> Optional[ScanPlan]:
+    """Classify every row of ``view`` under ``where`` using chunk statistics.
+
+    Returns None when planning is impossible or meaningless: no base tensors
+    referenced, RANDOM() present, or indices outside a tensor's range.  A
+    returned plan is always sound: pruned rows are certainly False, sure rows
+    certainly True, under the executor's `_truthy` row semantics.
+    """
+    if where is None or len(view) == 0 or where.calls("RANDOM"):
+        return None
+    names = [n for n in _referenced(where)
+             if n not in view.derived and n in view.tensor_names]
+    if not names:
+        return None
+    tensors = {}
+    ord_cols = []
+    for n in names:
+        t = view._base_tensor(n)
+        try:
+            ords = t.encoder.ords_of(view.indices)
+        except IndexError:
+            return None
+        tensors[n] = t
+        ord_cols.append(ords)
+    key_matrix = np.stack(ord_cols, axis=1)  # (rows, tensors)
+    _uniq, inverse = np.unique(key_matrix, axis=0, return_inverse=True)
+    stats_cache: Dict[tuple, Interval] = {}
+
+    def leaf(tname: str, chunk_ord: int) -> Interval:
+        k = (tname, chunk_ord)
+        if k not in stats_cache:
+            stats_cache[k] = interval_from_stats(
+                tensors[tname].chunk_stats_of(chunk_ord))
+        return stats_cache[k]
+
+    verdicts = np.empty(len(_uniq), dtype=np.int8)  # 0 prune, 1 sure, 2 verify
+    decided = 0
+    for g, key in enumerate(_uniq):
+        env = {n: leaf(n, int(key[j])) for j, n in enumerate(names)}
+        t = _Analyzer(env).truth(where)
+        if t == ONLY_F:
+            verdicts[g] = 0
+            decided += 1
+        elif t == ONLY_T:
+            verdicts[g] = 1
+            decided += 1
+        else:
+            verdicts[g] = 2
+    row_verdict = verdicts[inverse]
+    positions = np.arange(len(view))
+    pruned = positions[row_verdict == 0]
+    sure = positions[row_verdict == 1]
+    verify = positions[row_verdict == 2]
+    # chunk accounting: chunks no candidate (sure|verify) row ever needs
+    candidates = row_verdict != 0
+    chunks_total = 0
+    chunks_pruned = 0
+    for j in range(key_matrix.shape[1]):
+        col = key_matrix[:, j]
+        all_chunks = np.unique(col)
+        live_chunks = np.unique(col[candidates]) if candidates.any() \
+            else np.empty(0)
+        chunks_total += len(all_chunks)
+        chunks_pruned += len(all_chunks) - len(live_chunks)
+    return ScanPlan(
+        n_rows=len(view), pruned=pruned, sure=sure, verify=verify,
+        groups=len(_uniq), groups_decided=decided,
+        chunks_total=chunks_total, chunks_pruned=chunks_pruned,
+        tensors=names)
+
+
+def _referenced(node: Node) -> List[str]:
+    names: List[str] = []
+    for r in node.find(TensorRef):
+        if r.name not in names:
+            names.append(r.name)
+    return names

@@ -21,6 +21,7 @@ Storage layout (keys relative to dataset root):
     versions/{node}/schema.json                      # tensor list at this version
     versions/{node}/tensors/{t}/meta.json
     versions/{node}/tensors/{t}/chunk_encoder
+    versions/{node}/tensors/{t}/chunk_stats.json
     versions/{node}/tensors/{t}/sample_ids
     versions/{node}/tensors/{t}/chunk_set.json
     versions/{node}/tensors/{t}/commit_diff.json
@@ -102,7 +103,10 @@ class CommitDiff:
 class VersionControl:
     """Owns the version tree and per-node tensor state for one dataset."""
 
-    STATE_FILES = ("meta.json", "chunk_encoder", "sample_ids")
+    # chunk_stats.json rides with the encoder snapshot: both key by chunk
+    # name, so the copy stays valid in the child node (chunks never move).
+    STATE_FILES = ("meta.json", "chunk_encoder", "sample_ids",
+                   "chunk_stats.json")
 
     def __init__(self, storage: StorageProvider) -> None:
         self.storage = storage

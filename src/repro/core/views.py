@@ -44,6 +44,11 @@ class TensorView:
 class DatasetView:
     """Row subset of a dataset (optionally at a non-head version)."""
 
+    #: scan-planner report attached by the TQL executor when chunk-statistics
+    #: pushdown ran for this view's query (dict, see ScanPlan.report()); the
+    #: dataloader reads it to account pruned chunks in LoaderStats.
+    scan_plan = None
+
     def __init__(self, dataset, indices: np.ndarray,
                  node_id: Optional[str] = None,
                  tensors: Optional[Sequence[str]] = None,
@@ -135,9 +140,10 @@ class DatasetView:
                    node_id=d["node"], tensors=d["tensors"])
 
     # --------------------------------------------------------------- chaining
-    def query(self, tql: str) -> "DatasetView":
+    def query(self, tql: str, engine: str = "auto",
+              use_stats: bool = True) -> "DatasetView":
         from .tql import execute_query
-        return execute_query(self, tql)
+        return execute_query(self, tql, engine=engine, use_stats=use_stats)
 
     def dataloader(self, **kw):
         from .dataloader import DeepLakeLoader

@@ -64,11 +64,10 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, attn_impl: str = "xla",
     compiled = lowered.compile()
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
+    flops_ca, nbytes_ca, peak = extract_cost(compiled)
     if verbose:
         print(mem)
-        print({k: v for k, v in (compiled.cost_analysis() or {}).items()
-               if k in ("flops", "bytes accessed")})
-    flops_ca, nbytes_ca, peak = extract_cost(compiled)
+        print({"flops": flops_ca, "bytes accessed": nbytes_ca})
     # exact per-device accounting: scan bodies x trip count (hlo_analysis);
     # cost_analysis (counts loop bodies once) kept for cross-reference
     hlo = analyze(compiled.as_text())

@@ -3,7 +3,7 @@ chunks, chunk encoder, tiling, tensors."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 import repro.core as dl
 from repro.core import chunks as chunklib

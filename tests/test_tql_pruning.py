@@ -1,0 +1,262 @@
+"""Chunk-statistics TQL pushdown: pruning equivalence + request accounting.
+
+Every query must return identical rows with stats pruning on vs. off — over
+clustered numerics, NaN columns, empty samples, ragged tensors, and queries
+the planner cannot analyze.  Selective queries over SimulatedS3Provider must
+fetch strictly fewer chunks/bytes than a full scan.
+"""
+
+import numpy as np
+import pytest
+
+import repro.core as dl
+from repro.core.chunk_encoder import ChunkStatsTable
+from repro.core.tql import execute_query, parse, plan_where
+from repro.core.views import DatasetView
+
+
+def _build(storage=None, n=200):
+    """Clustered dataset: 8 bands of 25 rows; every tensor chunked small so
+    per-band values land in distinct chunks (pruning has granularity)."""
+    rng = np.random.default_rng(42)
+    ds = dl.Dataset(storage)
+    ds.create_tensor("x", dtype="float32", min_chunk_size=512,
+                     max_chunk_size=1024)
+    ds.create_tensor("lab", htype="class_label", min_chunk_size=128,
+                     max_chunk_size=256)
+    ds.create_tensor("nanny", dtype="float32", min_chunk_size=128,
+                     max_chunk_size=256)
+    ds.create_tensor("rag", dtype="float32", strict=False,
+                     min_chunk_size=256, max_chunk_size=512)
+    ds.create_tensor("caption", htype="text")
+    for i in range(n):
+        band = i // 25
+        nanny = np.float32(np.nan) if i % 7 == 0 else np.float32(band)
+        ds.append({
+            "x": (rng.standard_normal(8).astype(np.float32)
+                  + np.float32(band * 10)),
+            "lab": np.int64(band),
+            "nanny": np.asarray([nanny], np.float32),
+            # ragged, with genuinely empty samples every 5th row
+            "rag": rng.uniform(1, 2, (i % 5,)).astype(np.float32),
+            "caption": np.frombuffer(f"band {band} row".encode(),
+                                     dtype=np.uint8).copy(),
+        })
+    ds.commit("fixture")
+    return ds
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return _build()
+
+
+EQUIVALENCE_QUERIES = [
+    "SELECT * FROM dataset WHERE lab == 3",
+    "SELECT * FROM dataset WHERE lab != 3",
+    "SELECT * FROM dataset WHERE NOT lab == 2",
+    "SELECT * FROM dataset WHERE lab >= 6 OR lab < 1",
+    "SELECT * FROM dataset WHERE lab * 2 + 1 > 9",
+    "SELECT * FROM dataset WHERE MEAN(x) > 45",
+    "SELECT * FROM dataset WHERE MEAN(x) > 45 AND lab != 7",
+    "SELECT * FROM dataset WHERE MAX(x) < 20 OR lab == 7",
+    "SELECT * FROM dataset WHERE ABS(MEAN(x) - 50) < 10",
+    "SELECT * FROM dataset WHERE MIN(x) > 1000",          # prune everything
+    "SELECT * FROM dataset WHERE lab >= 0",               # keep everything
+    # NaN column: == / != / reductions must respect IEEE semantics
+    "SELECT * FROM dataset WHERE nanny == 4",
+    "SELECT * FROM dataset WHERE nanny != 4",
+    "SELECT * FROM dataset WHERE MEAN(nanny) > 5.5",
+    "SELECT * FROM dataset WHERE nanny != 1000000",
+    # empty samples / ragged tensors
+    "SELECT * FROM dataset WHERE rag > 0",
+    "SELECT * FROM dataset WHERE MEAN(rag) > 1.5",
+    "SELECT * FROM dataset WHERE SUM(rag) > 4",
+    "SELECT * FROM dataset WHERE rag > 0 AND lab == 2",
+    # planner-opaque expressions fall back to verify
+    'SELECT * FROM dataset WHERE CONTAINS(caption, "band 3")',
+    "SELECT * FROM dataset WHERE SHAPE(rag)[0] == 3",
+    "SELECT * FROM dataset WHERE lab IN [1, 5]",
+    "SELECT * FROM dataset WHERE RANDOM() < 0.5",
+    "SELECT * FROM dataset WHERE RANDOM() < 0.5 AND lab == 3",
+    # pipelines after WHERE must see identical row sets
+    "SELECT * FROM dataset WHERE lab == 3 ORDER BY MEAN(x) DESC LIMIT 7",
+    "SELECT MEAN(x) AS m, lab FROM dataset WHERE lab == 5 LIMIT 9",
+]
+
+
+@pytest.mark.parametrize("q", EQUIVALENCE_QUERIES)
+def test_pruning_equivalence(ds, q):
+    on = execute_query(ds, q, use_stats=True)
+    off = execute_query(ds, q, use_stats=False)
+    assert on.indices.tolist() == off.indices.tolist()
+    for k in on.derived:
+        a = [np.asarray(v).tolist() for v in on.derived[k]]
+        b = [np.asarray(v).tolist() for v in off.derived[k]]
+        assert a == b
+
+
+def test_selective_query_actually_prunes(ds):
+    v = execute_query(ds, "SELECT * FROM dataset WHERE lab == 3",
+                      use_stats=True)
+    plan = v.scan_plan
+    assert plan is not None and plan["rows_pruned"] > 0
+    assert plan["chunks_pruned"] > 0
+    assert plan["rows_pruned"] + plan["rows_sure"] + plan["rows_verify"] \
+        == plan["rows"] == 200
+
+
+def test_always_true_predicate_is_sure(ds):
+    v = execute_query(ds, "SELECT * FROM dataset WHERE lab >= 0",
+                      use_stats=True)
+    assert len(v) == 200
+    assert v.scan_plan["rows_sure"] == 200
+    assert v.scan_plan["rows_verify"] == 0
+
+
+def test_always_false_predicate_prunes_all(ds):
+    v = execute_query(ds, "SELECT * FROM dataset WHERE MIN(x) > 1000",
+                      use_stats=True)
+    assert len(v) == 0
+    assert v.scan_plan["rows_pruned"] == 200
+
+
+def test_random_disables_planning(ds):
+    v = execute_query(ds, "SELECT * FROM dataset WHERE RANDOM() < 0.5",
+                      use_stats=True)
+    assert v.scan_plan is None
+
+
+def test_unanalyzable_predicate_verifies_everything(ds):
+    v = execute_query(
+        ds, 'SELECT * FROM dataset WHERE CONTAINS(caption, "band 3")',
+        use_stats=True)
+    assert v.scan_plan["groups_decided"] == 0
+    assert v.scan_plan["rows_verify"] == 200
+
+
+def test_plan_where_direct(ds):
+    view = DatasetView.full(ds)
+    q = parse("SELECT * FROM dataset WHERE lab == 0")
+    plan = plan_where(view, q.where)
+    assert plan is not None
+    assert sorted(plan.sure.tolist() + plan.verify.tolist()
+                  + plan.pruned.tolist()) == list(range(200))
+    # band 0 rows (0..24) must never be pruned
+    assert not set(plan.pruned.tolist()) & set(range(25))
+
+
+def test_missing_stats_degrade_to_full_scan():
+    """Datasets without the sidecar (pre-stats format) stay correct."""
+    ds = _build(n=100)  # private copy: blanking stats must not leak into the
+    view = DatasetView.full(ds)  # module-scoped fixture other tests share
+    for name in ("x", "lab"):
+        view._base_tensor(name).stats = ChunkStatsTable()
+    on = execute_query(view, "SELECT * FROM view WHERE lab == 3",
+                       use_stats=True)
+    off = execute_query(ds, "SELECT * FROM dataset WHERE lab == 3",
+                        use_stats=False)
+    assert on.indices.tolist() == off.indices.tolist()
+
+
+def test_stats_survive_reload_and_commit():
+    ds = _build(n=100)
+    # fresh Dataset over the same storage: sidecar must load back
+    ds2 = dl.Dataset(ds.storage)
+    v = execute_query(ds2, "SELECT * FROM dataset WHERE lab == 1",
+                      use_stats=True)
+    assert v.scan_plan["rows_pruned"] > 0
+    assert v.indices.tolist() == list(range(25, 50))
+    # commit copies the sidecar with the encoder snapshot
+    ds2.commit("noop")
+    v2 = execute_query(ds2, "SELECT * FROM dataset WHERE lab == 1",
+                       use_stats=True)
+    assert v2.scan_plan["rows_pruned"] > 0
+    assert v2.indices.tolist() == list(range(25, 50))
+
+
+def test_update_recomputes_stats():
+    """COW rewrite of a sealed chunk must refresh its stats: a value moved
+    outside the old bounds is still found by a stats-pruned query."""
+    ds = _build(n=100)
+    ds.lab[0] = np.int64(3)   # band 0 row now matches lab == 3
+    on = execute_query(ds, "SELECT * FROM dataset WHERE lab == 3",
+                       use_stats=True)
+    off = execute_query(ds, "SELECT * FROM dataset WHERE lab == 3",
+                        use_stats=False)
+    assert 0 in on.indices.tolist()
+    assert on.indices.tolist() == off.indices.tolist()
+
+
+def test_versioned_query_uses_that_versions_stats():
+    ds = _build(n=100)
+    c0 = ds.commit("v0")
+    ds.lab[10] = np.int64(7)
+    ds.commit("v1")
+    q = f'SELECT * FROM dataset VERSION "{c0}" WHERE lab == 0'
+    on = execute_query(ds, q, use_stats=True)
+    off = execute_query(ds, q, use_stats=False)
+    assert on.indices.tolist() == off.indices.tolist() == list(range(25))
+
+
+def test_selective_query_fetches_fewer_chunks_from_s3():
+    s3 = dl.SimulatedS3Provider(time_scale=0)
+    ds = _build(storage=s3)
+    q = "SELECT * FROM dataset WHERE MEAN(x) > 45 AND lab != 7"
+    execute_query(ds, q, use_stats=False)   # warm tensor-state caches
+    s3.reset_stats()
+    off = execute_query(ds, q, use_stats=False)
+    full = dict(s3.stats)
+    s3.reset_stats()
+    on = execute_query(ds, q, use_stats=True)
+    pruned = dict(s3.stats)
+    assert on.indices.tolist() == off.indices.tolist()
+    assert len(on) > 0
+    # strictly fewer requests and payload bytes than the full scan
+    assert pruned["requests"] < full["requests"]
+    assert pruned["bytes_down"] < full["bytes_down"]
+
+
+def test_float32_rounding_never_flips_verdicts():
+    """Planner intervals (float64) must absorb float32 evaluation rounding:
+    bound-hugging predicates may not prune rows the engine would keep (or
+    keep rows it would drop)."""
+    ds = dl.Dataset()
+    ds.create_tensor("x", dtype="float32", min_chunk_size=256,
+                     max_chunk_size=512)
+    for _ in range(40):
+        ds.append({"x": np.full(4, 0.4, np.float32)})
+    ds.commit("c")
+    for q in ("SELECT * FROM dataset WHERE x + 16777216 > 16777216",
+              "SELECT * FROM dataset WHERE x + 16777216 <= 16777216",
+              "SELECT * FROM dataset WHERE CAST_FLOAT(x) == 0.4",
+              "SELECT * FROM dataset WHERE MEAN(x) == 0.4"):
+        on = execute_query(ds, q, use_stats=True)
+        off = execute_query(ds, q, use_stats=False)
+        assert on.indices.tolist() == off.indices.tolist(), q
+
+
+def test_int64_overflow_never_pruned():
+    """Arithmetic whose interval exceeds the int64-safe range must verify,
+    not prune: the engine's int64 math wraps."""
+    ds = dl.Dataset()
+    ds.create_tensor("b", dtype="int64", min_chunk_size=256,
+                     max_chunk_size=512)
+    for _ in range(20):
+        ds.append({"b": np.full(2, 2 ** 62, np.int64)})
+    ds.commit("c")
+    q = "SELECT * FROM dataset WHERE b * 4 > 0"  # wraps to 0 in int64
+    on = execute_query(ds, q, use_stats=True)
+    off = execute_query(ds, q, use_stats=False)
+    assert on.indices.tolist() == off.indices.tolist()
+
+
+def test_query_view_hands_prune_accounting_to_loader():
+    ds = _build(n=100)
+    v = execute_query(ds, "SELECT * FROM dataset WHERE lab == 2",
+                      use_stats=True)
+    loader = v.dataloader(batch_size=8, tensors=["x", "lab"], num_workers=2)
+    rows = sum(len(b["lab"]) for b in loader)
+    assert rows == len(v) == 25
+    assert loader.stats.chunks_pruned == v.scan_plan["chunks_pruned"] > 0
+    assert loader.costs.counters["chunks_pruned"] > 0
