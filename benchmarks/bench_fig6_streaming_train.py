@@ -107,6 +107,7 @@ def main() -> List[str]:
     params, step = _train_step_fn()
     compute = _consume(params, step, filemode_batches())
     wall_b = compute + s3.stats["sim_seconds"]   # sequential: IO adds up
+    filemode_stats = dict(s3.stats)
     lines.append(row("fig6_s3_filemode", wall_b / STEPS * 1e6,
                      f"slowdown{wall_b / local_wall:.1f}x"))
 
@@ -152,7 +153,23 @@ def main() -> List[str]:
         + 0.1 * min(compute, s3b.stats["sim_seconds"] / 8)
     lines.append(row("fig6_deeplake_stream", wall_d / STEPS * 1e6,
                      f"slowdown{wall_d / local_wall:.2f}x_"
-                     f"reqs{s3b.stats['requests']}"))
+                     f"reqs{s3b.stats['requests']}_"
+                     f"coal{s3b.stats['coalesced_requests']}_"
+                     f"down{s3b.stats['bytes_down']}_"
+                     f"sim{s3b.stats['sim_seconds']:.3f}"))
+
+    from . import io_report
+    keys = ("requests", "ranged_requests", "coalesced_requests",
+            "meta_requests", "bytes_down", "sim_seconds")
+    io_report.record("fig6_streaming_train", {
+        "s3_filemode": {k: filemode_stats[k] for k in keys},
+        "deeplake_stream": {k: s3b.stats[k] for k in keys},
+        "walls": {"local_s": local_wall, "filemode_s": wall_b,
+                  "fastfile_s": wall_c, "deeplake_s": wall_d},
+        "loader": {"io_requests": loader.stats.io_requests,
+                   "bytes_fetched": loader.stats.bytes_fetched,
+                   "samples": loader.stats.samples},
+    })
     return lines
 
 

@@ -63,9 +63,25 @@ def main() -> List[str]:
 
 
 def _bench_stats_pushdown() -> List[str]:
-    """Chunk-statistics pushdown over simulated S3: a selective WHERE must
-    fetch far fewer chunk bytes/requests than the same query full-scanned."""
+    """Chunk-statistics pushdown + coalesced batch I/O over simulated S3.
+
+    Three configurations of the same selective query:
+
+    * ``fullscan``            — no stats pushdown, coalesced fetches;
+    * ``pushdown_persample``  — pushdown with coalescing disabled: one
+      ranged request per sample, the pre-batching (PR-1) request pattern;
+    * ``pushdown_coalesced``  — pushdown + the batch I/O engine: at most
+      one coalesced request per chunk per tensor.
+
+    All three must return identical rows; coalescing must cut the
+    request count of the per-sample baseline at least 3x.  Each run
+    records a BENCH_io.json datapoint (requests, coalesced requests,
+    bytes, simulated seconds) so the perf trajectory is tracked.
+    """
+    from repro.core import fetch
     from repro.core.storage import MemoryProvider, SimulatedS3Provider
+
+    from . import io_report
 
     rng = np.random.default_rng(7)
     base = MemoryProvider()
@@ -82,25 +98,44 @@ def _bench_stats_pushdown() -> List[str]:
 
     lines = []
     results = {}
-    for label, use_stats in (("fullscan", False), ("stats_pushdown", True)):
+    configs = (("fullscan", False, True),
+               ("pushdown_persample", True, False),
+               ("pushdown_coalesced", True, True))
+    for label, use_stats, use_coalescing in configs:
         s3 = SimulatedS3Provider(base, time_scale=0.0)
         remote = dl.Dataset(s3)  # fresh open: no header/chunk caches
         s3.reset_stats()
-        with Timer() as t:
-            view = remote.query(q, engine="numpy", use_stats=use_stats)
+        if use_coalescing:
+            with Timer() as t:
+                view = remote.query(q, engine="numpy", use_stats=use_stats)
+        else:
+            with fetch.coalescing_disabled(), Timer() as t:
+                view = remote.query(q, engine="numpy", use_stats=use_stats)
         results[label] = (len(view), dict(s3.stats))
         lines.append(row(f"tql_{label}_s3", t.elapsed * 1e6,
                          f"rows{len(view)}_req{s3.stats['requests']}"
-                         f"_down{s3.stats['bytes_down']}"))
+                         f"_coal{s3.stats['coalesced_requests']}"
+                         f"_down{s3.stats['bytes_down']}"
+                         f"_sim{s3.stats['sim_seconds']:.3f}"))
     n_full, full = results["fullscan"]
-    n_push, push = results["stats_pushdown"]
-    assert n_full == n_push, "pushdown changed the result set"
-    assert push["bytes_down"] < full["bytes_down"], \
+    n_per, per = results["pushdown_persample"]
+    n_coal, coal = results["pushdown_coalesced"]
+    assert n_full == n_per == n_coal, "configs disagree on the result set"
+    assert coal["bytes_down"] < full["bytes_down"], \
         "pushdown did not reduce bytes fetched"
+    assert coal["requests"] * 3 <= per["requests"], \
+        (f"coalescing gained <3x on requests: "
+         f"{per['requests']} -> {coal['requests']}")
+    io_report.record("tql_selective_query", {
+        label: {k: stats[k] for k in ("requests", "ranged_requests",
+                                      "coalesced_requests", "meta_requests",
+                                      "bytes_down", "sim_seconds")}
+        for label, (_n, stats) in results.items()})
     lines.append(row(
         "tql_pushdown_savings", 0.0,
-        f"req{full['requests']}to{push['requests']}"
-        f"_bytes{full['bytes_down']}to{push['bytes_down']}"))
+        f"req{per['requests']}to{coal['requests']}"
+        f"_bytes{full['bytes_down']}to{coal['bytes_down']}"
+        f"_sim{per['sim_seconds']:.3f}to{coal['sim_seconds']:.3f}"))
     return lines
 
 

@@ -1,0 +1,126 @@
+"""BENCH_io.json plumbing: I/O-efficiency datapoints + validation.
+
+Benchmarks that exercise the coalesced batch I/O engine
+(:mod:`repro.core.fetch`) append before/after datapoints here so the perf
+trajectory (request counts, coalesced-request counts, bytes, simulated
+seconds) is tracked across PRs.  ``scripts/check.sh`` runs
+``python -m benchmarks.io_report --validate`` after the bench smoke and
+fails on a malformed file.
+
+File layout (repo root ``BENCH_io.json``)::
+
+    {"schema": 1,
+     "benches": {
+        "<bench name>": [            # newest last, capped history
+            {"ts": <unix seconds>, "<label>": {<numeric stats>}, ...},
+        ]}}
+
+Every leaf value except "ts" must be a number or a flat dict of numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                    "BENCH_io.json")
+SCHEMA = 1
+MAX_HISTORY = 20
+
+
+def record(bench: str, datapoint: Dict[str, dict], path: str = PATH) -> None:
+    """Append one datapoint to ``bench``'s history (atomic rewrite)."""
+    doc = {"schema": SCHEMA, "benches": {}}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                loaded = json.load(f)
+            if isinstance(loaded, dict) and loaded.get("schema") == SCHEMA:
+                doc = loaded
+                doc.setdefault("benches", {})
+        except (OSError, ValueError):
+            pass  # corrupt file: start fresh rather than fail the bench
+    hist = doc["benches"].setdefault(bench, [])
+    entry = dict(datapoint)
+    entry["ts"] = round(time.time(), 3)
+    hist.append(entry)
+    del hist[:-MAX_HISTORY]
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def _leaf_errors(prefix: str, value) -> List[str]:
+    if isinstance(value, bool) or not isinstance(value, (int, float, dict)):
+        return [f"{prefix}: expected number or dict of numbers, "
+                f"got {type(value).__name__}"]
+    if isinstance(value, dict):
+        errs = []
+        for k, v in value.items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                errs.append(f"{prefix}.{k}: expected number, "
+                            f"got {type(v).__name__}")
+        return errs
+    return []
+
+
+def validate(path: str = PATH) -> List[str]:
+    """Structural checks; returns a list of human-readable errors."""
+    if not os.path.exists(path):
+        return [f"{path} does not exist (run `python -m benchmarks.bench_tql "
+                f"--smoke` to produce it)"]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except ValueError as e:
+        return [f"not valid JSON: {e}"]
+    if not isinstance(doc, dict) or doc.get("schema") != SCHEMA:
+        return [f"missing or wrong schema marker (want {SCHEMA})"]
+    benches = doc.get("benches")
+    if not isinstance(benches, dict) or not benches:
+        return ["'benches' must be a non-empty object"]
+    errors: List[str] = []
+    for name, hist in benches.items():
+        if not isinstance(hist, list) or not hist:
+            errors.append(f"{name}: history must be a non-empty list")
+            continue
+        for i, entry in enumerate(hist):
+            if not isinstance(entry, dict):
+                errors.append(f"{name}[{i}]: datapoint must be an object")
+                continue
+            if not isinstance(entry.get("ts"), (int, float)):
+                errors.append(f"{name}[{i}]: missing numeric 'ts'")
+            for k, v in entry.items():
+                if k == "ts":
+                    continue
+                errors.extend(_leaf_errors(f"{name}[{i}].{k}", v))
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    if "--validate" in argv:
+        errors = validate()
+        if errors:
+            print("BENCH_io.json INVALID:")
+            for e in errors:
+                print(f"  - {e}")
+            return 1
+        with open(PATH) as f:
+            doc = json.load(f)
+        n = sum(len(h) for h in doc["benches"].values())
+        print(f"BENCH_io.json ok: {len(doc['benches'])} benches, "
+              f"{n} datapoints")
+        return 0
+    print(__doc__)
+    return 2
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main(sys.argv[1:]))

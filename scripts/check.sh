@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# One-command gate: tier-1 test suite + TQL pruning benchmark (smoke mode).
+# One-command gate: tier-1 test suite + TQL pruning/coalescing benchmark
+# (smoke mode) + BENCH_io.json structural validation.
 # Usage: scripts/check.sh  (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -9,7 +10,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
-echo "== TQL pruning benchmark (smoke) =="
+echo "== TQL pruning + coalesced-I/O benchmark (smoke) =="
 python -m benchmarks.bench_tql --smoke
+
+echo "== BENCH_io.json validation =="
+python -m benchmarks.io_report --validate
 
 echo "== check.sh: all green =="

@@ -5,19 +5,23 @@ from .chunk_encoder import ChunkEncoder
 from .chunks import ChunkBuilder, parse_header, read_all_samples
 from .codecs import available as available_codecs, get_codec
 from .dataset import Dataset, Group, MergeConflict, dataset, empty_like
+from .fetch import (FetchEngine, coalescing_disabled, coalescing_enabled,
+                    engine_for)
 from .htypes import available_htypes, get_htype, parse_htype
 from .storage import (LocalProvider, LRUCacheProvider, MemoryProvider,
                       SimulatedS3Provider, StorageError, StorageProvider,
-                      chain, storage_from_path)
+                      chain, coalesce_ranges, storage_from_path)
 from .tensor import Tensor, TensorMeta
 from .version_control import VersionControl
 from .views import DatasetView, TensorView
 
 __all__ = [
-    "ChunkBuilder", "ChunkEncoder", "Dataset", "DatasetView", "Group",
-    "LRUCacheProvider", "LocalProvider", "MemoryProvider", "MergeConflict",
-    "SimulatedS3Provider", "StorageError", "StorageProvider", "Tensor",
-    "TensorMeta", "TensorView", "VersionControl", "available_codecs",
-    "available_htypes", "chain", "dataset", "empty_like", "get_codec",
-    "get_htype", "parse_htype", "read_all_samples", "storage_from_path",
+    "ChunkBuilder", "ChunkEncoder", "Dataset", "DatasetView", "FetchEngine",
+    "Group", "LRUCacheProvider", "LocalProvider", "MemoryProvider",
+    "MergeConflict", "SimulatedS3Provider", "StorageError",
+    "StorageProvider", "Tensor", "TensorMeta", "TensorView",
+    "VersionControl", "available_codecs", "available_htypes", "chain",
+    "coalesce_ranges", "coalescing_disabled", "coalescing_enabled",
+    "dataset", "empty_like", "engine_for", "get_codec", "get_htype",
+    "parse_htype", "read_all_samples", "storage_from_path",
 ]

@@ -14,8 +14,10 @@ Pipeline per epoch:
  2. **Fetch units** — contiguous runs of planned positions are work items on
     the :class:`SmartScheduler`.  A pool of threads (the C++-worker analogue:
     numpy/zlib decode releases the GIL) fetches each needed chunk ONCE per
-    unit, decodes only the needed samples in place, applies the user
-    transform, and deposits samples under a :class:`MemoryBudget` gate.
+    unit — as a single coalesced request via :meth:`Tensor.read_batch`,
+    full GET vs. ranged reads decided by the fetch engine's cost model —
+    decodes only the needed samples in place, applies the user transform,
+    and deposits samples under a :class:`MemoryBudget` gate.
  3. **Emission** — shuffle mode draws uniformly from the ready buffer once it
     reaches ``shuffle_buffer`` samples; sequential mode emits in exact plan
     order via a reorder buffer.  Samples are collated (stack / list) into
@@ -35,7 +37,7 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
 
 import numpy as np
 
-from . import chunks as chunklib
+from . import fetch as fetchlib
 from .scheduler import CostModel, MemoryBudget, SmartScheduler
 from .views import DatasetView
 
@@ -45,6 +47,7 @@ class LoaderStats:
     samples: int = 0
     batches: int = 0
     bytes_fetched: int = 0
+    io_requests: int = 0        # physical (coalesced) storage requests
     fetch_seconds: float = 0.0
     decode_seconds: float = 0.0
     wait_seconds: float = 0.0   # consumer blocked on pipeline
@@ -109,6 +112,7 @@ class DeepLakeLoader:
         self.ranged_reads = ranged_reads
         self.costs = CostModel()
         self.stats = LoaderStats()
+        self._engine = fetchlib.engine_for(view.dataset.storage)
         self._epoch = 0
         for t in self.tensor_names:
             if t not in view.tensor_names:
@@ -161,6 +165,40 @@ class DeepLakeLoader:
         return plan
 
     # ------------------------------------------------------------ fetch unit
+    def _prefetch_upcoming(self, units: List["_Unit"]) -> None:
+        """Warm the fetch engine with the leading units' chunks so the
+        first batches don't pay cold-start latency.  Futures carry this
+        loader as owner: teardown cancels only them, and fetches they
+        cause are attributed to this loader's stats.  Queued bytes are
+        bounded by half the destination buffer (LRU tier or resident
+        store), chunk sizes estimated from the stats sidecar."""
+        if not fetchlib.coalescing_enabled():
+            return  # A/B mode: measure the pre-batching request pattern
+        if fetchlib.provider_cost_params(self.view.dataset.storage) is None:
+            return  # local/memory: prefetch threads cost more than they save
+
+        def account(nbytes: int) -> None:
+            self.stats.bytes_fetched += nbytes
+            self.stats.io_requests += 1
+            self.costs.note("io_requests", 1)
+
+        queued_bytes = 0
+        for name in self.tensor_names:
+            if name in self.view.derived:
+                continue
+            t = self.view._base_tensor(name)
+            ords: List[int] = []
+            seen: set = set()
+            for u in units:
+                for p in u.positions:
+                    o = t.encoder.chunk_ord_of(int(self.view.indices[p]))
+                    if o not in seen:
+                        seen.add(o)
+                        ords.append(o)
+            queued_bytes = t.prefetch_chunks(ords, owner=self,
+                                             on_fetched=account,
+                                             queued_bytes=queued_bytes)
+
     def _estimate_sample_bytes(self) -> int:
         total = 0
         for name in self.tensor_names:
@@ -172,55 +210,28 @@ class DeepLakeLoader:
         return max(total, 1024)
 
     def _fetch_unit(self, unit: _Unit) -> List[tuple]:
-        """Fetch+decode all samples of a unit. Returns [(pos, sample_dict)]."""
-        t_io = 0.0
-        t_cpu = 0.0
+        """Fetch+decode all samples of a unit. Returns [(pos, sample_dict)].
+
+        All storage I/O goes through :meth:`Tensor.read_batch`: one
+        coalesced request per chunk (full GET vs. ranged reads decided by
+        the fetch engine's cost model, replacing the old ``len(rows) <= 2``
+        heuristic), with chunk ``k+1``'s fetch overlapping chunk ``k``'s
+        decode on the engine pool.
+        """
         out: Dict[int, Dict[str, Any]] = {p: {} for p in unit.positions}
+        io: Dict[str, Any] = {"io_s": 0.0, "cpu_s": 0.0, "bytes": 0,
+                              "requests": 0}
+        gidxs = [int(self.view.indices[p]) for p in unit.positions]
         for name in self.tensor_names:
             if name in self.view.derived:
                 for p in unit.positions:
                     out[p][name] = self.view.derived[name][p]
                 continue
             tensor = self.view._base_tensor(name)
-            # group unit rows by chunk so each chunk is fetched exactly once
-            by_chunk: Dict[str, List[tuple]] = defaultdict(list)
-            for p in unit.positions:
-                gidx = int(self.view.indices[p])
-                cname, local = tensor.encoder.lookup(gidx)
-                by_chunk[cname].append((p, local, gidx))
-            for cname, rows in by_chunk.items():
-                if tensor._builder is not None and cname == tensor._open_name:
-                    for p, local, gidx in rows:
-                        out[p][name] = tensor.read(gidx)
-                    continue
-                key = tensor._chunk_key(cname)
-                t0 = time.perf_counter()
-                use_ranges = (self.ranged_reads if self.ranged_reads is not None
-                              else (tensor.vc.storage.kind == "s3"
-                                    and len(rows) <= 2))
-                if use_ranges:
-                    header = tensor._header_of(key, True)
-                    payloads = {}
-                    for p, local, _g in rows:
-                        s, e = header.byte_range(local)
-                        payloads[p] = tensor.vc.storage.get_range(key, s, e)
-                        self.stats.bytes_fetched += e - s
-                else:
-                    raw = tensor.vc.storage.get(key)
-                    self.stats.bytes_fetched += len(raw)
-                    header = chunklib.parse_header(raw)
-                    payloads = {}
-                    for p, local, _g in rows:
-                        s, e = header.byte_range(local)
-                        payloads[p] = raw[s:e]
-                t_io += time.perf_counter() - t0
-                t1 = time.perf_counter()
-                for p, local, gidx in rows:
-                    if header.is_tiled(local):
-                        out[p][name] = tensor.read(gidx)  # tiled: dedicated path
-                    else:
-                        out[p][name] = chunklib.decode_sample(header, payloads[p], local)
-                t_cpu += time.perf_counter() - t1
+            vals = tensor.read_batch(gidxs, ranged=self.ranged_reads,
+                                     io_stats=io)
+            for p, v in zip(unit.positions, vals):
+                out[p][name] = v
         t2 = time.perf_counter()
         result = []
         for p in unit.positions:
@@ -228,10 +239,15 @@ class DeepLakeLoader:
             if self.transform is not None:
                 sample = self.transform(sample)
             result.append((p, sample))
-        t_cpu += time.perf_counter() - t2
+        t_io = io["io_s"]
+        t_cpu = io["cpu_s"] + time.perf_counter() - t2
         self.costs.observe("unit", t_io, t_cpu)
+        if io["requests"]:
+            self.costs.note("io_requests", io["requests"])
         self.stats.fetch_seconds += t_io
         self.stats.decode_seconds += t_cpu
+        self.stats.bytes_fetched += io["bytes"]
+        self.stats.io_requests += io["requests"]
         return result
 
     # -------------------------------------------------------------- iterate
@@ -255,6 +271,7 @@ class DeepLakeLoader:
         for u in units:
             sched.submit(u, u.needed_at, "unit")
         sched.close()
+        self._prefetch_upcoming(units[: self.prefetch_units])
 
         def worker() -> None:
             while not stop.is_set():
@@ -266,7 +283,12 @@ class DeepLakeLoader:
                     inflight.release()
                     break
                 if not self.memory.acquire(est_bytes * len(u.positions), timeout=30):
+                    # budget still saturated after the timeout: hand the
+                    # unit back to the scheduler so it is retried, never
+                    # dropped (a lost unit hangs sequential iteration on
+                    # the reorder buffer forever)
                     inflight.release()
+                    sched.submit(u, u.needed_at, "unit")
                     continue
                 try:
                     ready.put(self._fetch_unit(u))
@@ -339,6 +361,7 @@ class DeepLakeLoader:
         finally:
             stop.set()
             sched.close()
+            self._engine.cancel_pending(owner=self)  # drop OUR prefetches
             # unblock any workers stuck on inflight/memory gates
             for _ in threads:
                 inflight.release()

@@ -1,0 +1,489 @@
+"""Coalesced batch I/O engine: one ranged request per chunk (§3.5, §4.5).
+
+On object storage, request *count* — not bytes — dominates latency and cost,
+so every hot read path routes through a :class:`FetchEngine` that turns
+per-sample reads into per-chunk batched requests.
+
+Contract
+--------
+
+**Coalescing rule.**  Sample byte-ranges inside one chunk are sorted and
+merged whenever the gap between two ranges costs less to download than a
+fresh request round-trip: ``gap_bytes / bandwidth < latency``, i.e. the gap
+threshold is ``latency_s * bandwidth_bps``.  The threshold is never
+hardcoded — it comes from a :class:`CostEstimator` that seeds itself from
+the provider chain when a cost-bearing provider exposes
+``latency_s``/``bandwidth_bps`` (:class:`~repro.core.storage
+.SimulatedS3Provider`), and otherwise learns both parameters from observed
+request wall times through the scheduler's
+:class:`~repro.core.scheduler.CostModel` EWMA.  The same estimator decides
+full-GET vs. coalesced ranges per chunk:
+``cost(full) = latency + object_bytes/bandwidth`` against
+``cost(ranged) = n_spans * latency + needed_bytes/bandwidth`` (+ one header
+round-trip when the chunk header is not yet cached).  When an LRU cache
+tier sits above the cost-bearing provider and the object fits comfortably,
+the full GET wins outright — the cache absorbs the object and later units
+read it for free.
+
+**In-flight dedup.**  :meth:`FetchEngine.prefetch` dedups on chunk key:
+concurrent prefetches of the same key share one :class:`Future`, and a
+completed prefetch parks its blob in a byte-bounded *resident* LRU that
+``Tensor.read_batch`` / ``Tensor._payload_of`` consult before touching
+storage, so a prefetched chunk is charged exactly one request no matter how
+many consumers race for it.  Residency is skipped when an LRU cache tier
+above the provider already absorbs full objects (no double caching).
+Writers must invalidate: any path that rewrites or deletes a chunk key
+(the open chunk is re-flushed under the SAME key as it grows) calls
+:meth:`FetchEngine.discard` — ``Tensor._discard_cached`` covers every
+such site — or readers sharing the engine would see stale bytes.
+
+**Cancellation.**  Futures are owned by the issuing call: ``read_batch``
+cancels its own lookahead future if decoding raises, and every
+:meth:`FetchEngine.prefetch` carries an *owner* token —
+``DeepLakeLoader`` teardown calls ``cancel_pending(owner=loader)``,
+cancelling only its own queued-but-not-started prefetches and never a
+concurrent consumer's (engines are shared per provider).  A cancelled or
+failed in-flight future is never trusted by readers — they fall back to a
+direct synchronous fetch — so cancellation is always safe, merely wasteful.
+
+Benchmarks can bracket a run with :func:`coalescing_disabled` to measure
+the per-range "before" datapoint against the coalesced "after".
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import weakref
+from collections import OrderedDict
+from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
+from contextlib import contextmanager
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .scheduler import CostModel
+from .storage import (LRUCacheProvider, Range, StorageProvider,
+                      coalesce_ranges, slice_spans)
+
+# Conservative prior for providers that expose no cost parameters (POSIX /
+# in-memory): sub-millisecond "requests", fast local bandwidth.  The EWMA
+# refines both from observed wall times.
+_DEFAULT_LATENCY_S = 1e-4
+_DEFAULT_BANDWIDTH_BPS = 500e6
+
+_coalescing_on = True
+_toggle_lock = threading.Lock()
+
+
+def coalescing_enabled() -> bool:
+    return _coalescing_on
+
+
+@contextmanager
+def coalescing_disabled():
+    """Force one physical request per range (the pre-batching behavior).
+
+    Used by benchmarks to record the "before" datapoint of a before/after
+    pair and by equivalence tests; never used on production paths.
+    Re-entrant: the previous state is restored on exit, so nesting keeps
+    the outer context's measurement honest.
+    """
+    global _coalescing_on
+    with _toggle_lock:
+        prev, _coalescing_on = _coalescing_on, False
+    try:
+        yield
+    finally:
+        with _toggle_lock:
+            _coalescing_on = prev
+
+
+def provider_cost_params(provider) -> Optional[Tuple[float, float]]:
+    """(latency_s, bandwidth_bps) of the first cost-bearing provider in the
+    chain, walking ``.base`` links top-down; None when the chain is free
+    (pure memory / POSIX)."""
+    p = provider
+    while isinstance(p, StorageProvider):
+        lat = getattr(p, "latency_s", None)
+        bw = getattr(p, "bandwidth_bps", None)
+        if lat is not None and bw is not None:
+            return float(lat), float(bw)
+        p = getattr(p, "base", None)
+    return None
+
+
+def cache_capacity_above(provider) -> int:
+    """Bytes of LRU cache sitting *above* the first cost-bearing provider
+    (0 when there is no such cache, or no cost-bearing tier at all)."""
+    cap = 0
+    p = provider
+    while isinstance(p, StorageProvider):
+        if getattr(p, "latency_s", None) is not None:
+            return cap
+        if isinstance(p, LRUCacheProvider):
+            cap += p.capacity_bytes
+        p = getattr(p, "base", None)
+    return 0
+
+
+class CostEstimator:
+    """Latency/bandwidth model behind the coalescing threshold.
+
+    Seeds from the provider chain when possible; otherwise starts from a
+    conservative local prior and EWMA-learns both parameters from observed
+    request wall times via :class:`~repro.core.scheduler.CostModel`.
+    """
+
+    def __init__(self, provider, cost_model: Optional[CostModel] = None
+                 ) -> None:
+        self.costs = cost_model or CostModel()
+        params = provider_cost_params(provider)
+        self.seeded = params is not None
+        if params is not None:
+            self.latency_s, self.bandwidth_bps = params
+        else:
+            self.latency_s = _DEFAULT_LATENCY_S
+            self.bandwidth_bps = _DEFAULT_BANDWIDTH_BPS
+        self.costs.observe("fetch_request", self.latency_s, 0.0)
+
+    def observe_request(self, nbytes: int, seconds: float) -> None:
+        """Fold one observed request into the EWMA (no-op when seeded from
+        exact provider parameters)."""
+        if self.seeded or seconds <= 0:
+            return
+        transfer = nbytes / self.bandwidth_bps
+        self.costs.observe("fetch_request", max(seconds - transfer, 1e-7), 0.0)
+        self.latency_s, _ = self.costs.estimate("fetch_request")
+        if nbytes and seconds > self.latency_s:
+            bw = nbytes / max(seconds - self.latency_s, 1e-9)
+            a = self.costs.alpha
+            self.bandwidth_bps = (1 - a) * self.bandwidth_bps + a * bw
+
+    def gap_threshold(self) -> int:
+        """Bytes of gap cheaper to download than a fresh round-trip."""
+        return max(0, int(self.latency_s * self.bandwidth_bps))
+
+    def request_cost(self, nbytes: int) -> float:
+        return self.latency_s + nbytes / self.bandwidth_bps
+
+    def full_get_is_cheaper(self, n_spans: int, needed_bytes: int,
+                            object_bytes: int, extra_requests: int = 0,
+                            amortization: float = 1.0) -> bool:
+        """Model cost of one whole-object GET vs. ``n_spans`` coalesced
+        ranged requests (+ ``extra_requests`` round-trips the ranged plan
+        needs first, e.g. an uncached header).  ``amortization`` > 1
+        tolerates a costlier full GET when later reads of the object will
+        be served from a cache it fills."""
+        cost_full = self.request_cost(object_bytes)
+        cost_ranged = ((n_spans + extra_requests) * self.latency_s
+                       + needed_bytes / self.bandwidth_bps)
+        return cost_full <= amortization * cost_ranged
+
+
+class FetchEngine:
+    """Batched fetch front-end shared by TQL, tensor reads, and the loader.
+
+    See the module docstring for the coalescing / dedup / cancellation
+    contract.  One engine exists per storage provider (``engine_for``); all
+    tensors and loaders bound to that provider share its resident store,
+    in-flight table, and thread pool.
+    """
+
+    def __init__(self, provider: StorageProvider, *,
+                 cost_model: Optional[CostModel] = None,
+                 max_workers: int = 8,
+                 resident_bytes: int = 64 << 20) -> None:
+        # weak ref: the engine registry must not keep providers (and with
+        # them engines, blobs, pools) alive after their last external user
+        self._provider_ref = weakref.ref(provider)
+        self.est = CostEstimator(provider, cost_model)
+        self.cache_above = cache_capacity_above(provider)
+        self.resident_bytes = int(resident_bytes)
+        self.max_workers = max(1, int(max_workers))
+        # two pools so a work task (which may block on a prefetch future)
+        # can never starve the prefetch that would unblock it
+        self._work_pool: Optional[ThreadPoolExecutor] = None
+        self._prefetch_pool: Optional[ThreadPoolExecutor] = None
+        self._lock = threading.RLock()
+        self._inflight: Dict[str, Tuple[Future, object]] = {}  # key -> (fut, owner)
+        self._resident: "OrderedDict[str, bytes]" = OrderedDict()
+        self._resident_size = 0
+        self.stats = {"requests": 0, "ranges": 0, "bytes": 0, "hits": 0}
+
+    @property
+    def provider(self) -> StorageProvider:
+        p = self._provider_ref()
+        if p is None:  # unreachable while any caller can still reach us
+            raise RuntimeError("storage provider was garbage-collected")
+        return p
+
+    # ------------------------------------------------------- resident blobs
+    def resident(self, key: str) -> Optional[bytes]:
+        """Fully-fetched blob for ``key`` if one is parked here (no I/O).
+        Also resolves an in-flight prefetch that already completed."""
+        with self._lock:
+            data = self._resident.get(key)
+            if data is not None:
+                self._resident.move_to_end(key)
+                self.stats["hits"] += 1
+                return data
+            entry = self._inflight.get(key)
+        if entry is not None and entry[0].done():
+            try:
+                return entry[0].result()
+            except (CancelledError, Exception):
+                return None
+        return None
+
+    def _admit(self, key: str, data: bytes) -> None:
+        # an LRU tier above the charged provider already holds full objects
+        if self.cache_above or len(data) > self.resident_bytes:
+            return
+        with self._lock:
+            old = self._resident.pop(key, None)
+            if old is not None:
+                self._resident_size -= len(old)
+            self._resident[key] = data
+            self._resident_size += len(data)
+            while self._resident_size > self.resident_bytes and self._resident:
+                _, v = self._resident.popitem(last=False)
+                self._resident_size -= len(v)
+
+    def discard(self, key: str) -> None:
+        """Writer invalidation: drop the resident blob AND abandon any
+        in-flight prefetch of the key, so a fetch that raced the rewrite
+        can neither be served to readers nor re-admit stale bytes when it
+        completes (its done-callback only admits while still current)."""
+        with self._lock:
+            v = self._resident.pop(key, None)
+            if v is not None:
+                self._resident_size -= len(v)
+            entry = self._inflight.pop(key, None)
+        if entry is not None:
+            entry[0].cancel()  # best effort; a running fetch is abandoned
+
+    # -------------------------------------------------------- sync fetching
+    def _observe(self, n_requests: int, n_ranges: int, nbytes: int,
+                 seconds: float) -> None:
+        with self._lock:
+            self.stats["requests"] += n_requests
+            self.stats["ranges"] += n_ranges
+            self.stats["bytes"] += nbytes
+        if n_requests:
+            self.est.observe_request(nbytes // n_requests,
+                                     seconds / n_requests)
+
+    def wait_inflight(self, key: str) -> Optional[bytes]:
+        """Result of an in-flight prefetch of ``key``, waiting for it to
+        finish; None when nothing is in flight or it was cancelled/failed
+        (the caller then falls back to direct I/O)."""
+        with self._lock:
+            entry = self._inflight.get(key)
+        if entry is None:
+            return None
+        try:
+            return entry[0].result()
+        except (CancelledError, Exception):
+            return None
+
+    def fetch_full(self, key: str) -> bytes:
+        """Whole-object read, resident/in-flight aware.
+
+        Deliberately does NOT park the blob in the resident store: caching
+        fetched objects is the job of an :class:`LRUCacheProvider` tier;
+        residency is reserved for :meth:`prefetch` handoff (the paper's
+        "buffer of fetched and unutilized data" belongs to the consumer,
+        not the cache).
+        """
+        blob = self.resident(key)
+        if blob is None:
+            blob = self.wait_inflight(key)
+        if blob is not None:
+            return blob
+        t0 = time.perf_counter()
+        data = self.provider.get(key)
+        self._observe(1, 0, len(data), time.perf_counter() - t0)
+        return data
+
+    def fetch_ranges(self, key: str, ranges: Sequence[Range],
+                     counters: Optional[Dict[str, int]] = None
+                     ) -> List[bytes]:
+        """Batched ranged read: payload ``i`` equals
+        ``provider.get_range(key, *ranges[i])``, issued as coalesced spans
+        (or served free from a resident blob).  ``counters``, when given,
+        receives the physical ``requests`` and new ``bytes`` this call
+        actually issued (both 0 on a resident hit)."""
+        ranges = [(int(s), int(e)) for s, e in ranges]
+        if counters is not None:
+            counters.setdefault("requests", 0)
+            counters.setdefault("bytes", 0)
+        if not ranges:
+            return []
+        blob = self.resident(key)
+        if blob is not None:
+            return [blob[s:max(s, e)] for s, e in ranges]
+        if not coalescing_enabled():
+            t0 = time.perf_counter()
+            out = [self.provider.get_range(key, s, e) for s, e in ranges]
+            nbytes = sum(len(p) for p in out)
+            self._observe(len(ranges), len(ranges), nbytes,
+                          time.perf_counter() - t0)
+            if counters is not None:
+                counters["requests"] += len(ranges)
+                counters["bytes"] += nbytes
+            return out
+        spans, assign = coalesce_ranges(ranges, self.est.gap_threshold())
+        t0 = time.perf_counter()
+        payloads = self.provider.get_ranges(key, spans)
+        nbytes = sum(len(p) for p in payloads)
+        self._observe(len(spans), len(ranges), nbytes,
+                      time.perf_counter() - t0)
+        if counters is not None:
+            counters["requests"] += len(spans)
+            counters["bytes"] += nbytes
+        return slice_spans(ranges, spans, assign, payloads)
+
+    def fetch_many(self, keys: Sequence[str]) -> Dict[str, bytes]:
+        """Batched whole-object reads (tile fan-out), resident aware."""
+        out: Dict[str, bytes] = {}
+        missing: List[str] = []
+        for k in keys:
+            if k in out or k in missing:
+                continue
+            blob = self.resident(k)
+            if blob is not None:
+                out[k] = blob
+            else:
+                missing.append(k)
+        if missing:
+            t0 = time.perf_counter()
+            fetched = self.provider.get_many(missing)
+            self._observe(len(fetched), 0,
+                          sum(len(v) for v in fetched.values()),
+                          time.perf_counter() - t0)
+            out.update(fetched)
+        return out
+
+    #: with an LRU tier above the remote, a full GET fills the cache and
+    #: later reads of the chunk are free — worth paying up to this factor
+    #: over the one-shot ranged cost (but never an unconditional win: a
+    #: sparse one-shot read of a huge chunk must stay ranged)
+    CACHE_AMORTIZATION = 4.0
+
+    # --------------------------------------------------------- chunk planning
+    def plan_full_get(self, *, n_spans: int, needed_bytes: int,
+                      object_bytes: int, header_cached: bool) -> bool:
+        """True → fetch the whole chunk in one GET; False → coalesced
+        ranges.  With coalescing disabled the answer is always ranged, so
+        the "before" benchmark measures the per-range request pattern."""
+        if not coalescing_enabled():
+            return False
+        cacheable = self.cache_above and object_bytes <= self.cache_above // 4
+        return self.est.full_get_is_cheaper(
+            n_spans, needed_bytes, object_bytes,
+            extra_requests=0 if header_cached else 1,
+            amortization=self.CACHE_AMORTIZATION if cacheable else 1.0)
+
+    # ------------------------------------------------------------- prefetch
+    def _ensure_pool(self, attr: str, prefix: str) -> ThreadPoolExecutor:
+        with self._lock:
+            pool = getattr(self, attr)
+            if pool is None:
+                pool = ThreadPoolExecutor(max_workers=self.max_workers,
+                                          thread_name_prefix=prefix)
+                setattr(self, attr, pool)
+            return pool
+
+    def submit(self, fn, *args) -> Future:
+        """Run ``fn(*args)`` on the engine work pool (fetch/decode
+        overlap).  Work tasks may wait on prefetch futures — those run on
+        a separate pool, so the wait always makes progress."""
+        return self._ensure_pool("_work_pool", "fetch-work").submit(fn, *args)
+
+    def prefetch(self, key: str, owner: object = None,
+                 on_fetched=None) -> Future:
+        """Schedule a whole-chunk fetch; dedups in-flight keys.
+
+        The completed blob is parked in the resident store (unless an LRU
+        tier above already caches it), where readers pick it up for free.
+        ``owner`` scopes cancellation: :meth:`cancel_pending` with the
+        same owner cancels only that owner's still-queued futures, so one
+        consumer's teardown never drops another's prefetches.  A key
+        already in flight keeps its first owner.  ``on_fetched(nbytes)``
+        fires only when THIS call causes a physical fetch (never on
+        resident/in-flight dedup), so issuers can attribute the I/O to
+        their own accounting.
+        """
+        with self._lock:
+            entry = self._inflight.get(key)
+            if entry is not None:
+                return entry[0]
+            data = self._resident.get(key)
+        if data is not None:
+            done: Future = Future()
+            done.set_result(data)
+            return done
+        pool = self._ensure_pool("_prefetch_pool", "fetch-prefetch")
+
+        def work() -> bytes:
+            t0 = time.perf_counter()
+            blob = self.provider.get(key)
+            self._observe(1, 0, len(blob), time.perf_counter() - t0)
+            if on_fetched is not None:
+                on_fetched(len(blob))
+            return blob
+
+        with self._lock:
+            entry = self._inflight.get(key)
+            if entry is not None:
+                return entry[0]
+            fut = pool.submit(work)
+            self._inflight[key] = (fut, owner)
+
+        def _done(f: Future, key: str = key) -> None:
+            with self._lock:
+                cur = self._inflight.get(key)
+                current = cur is not None and cur[0] is f
+                if current:
+                    del self._inflight[key]
+            # admit only while still current: a discard() (writer rewrote
+            # the key) or supersession while in flight abandons the result
+            if current and not f.cancelled() and f.exception() is None:
+                self._admit(key, f.result())
+
+        fut.add_done_callback(_done)
+        return fut
+
+    def cancel_pending(self, owner: object = None) -> int:
+        """Cancel queued-but-not-started prefetches; running fetches
+        complete and park normally.  ``owner`` restricts cancellation to
+        futures issued with that owner (None cancels everything — only
+        for full engine shutdown).  Returns #cancelled."""
+        with self._lock:
+            futs = [f for f, o in self._inflight.values()
+                    if owner is None or o is owner]
+        return sum(1 for f in futs if f.cancel())
+
+    def close(self) -> None:
+        self.cancel_pending()
+        with self._lock:
+            pools = (self._work_pool, self._prefetch_pool)
+            self._work_pool = self._prefetch_pool = None
+        for pool in pools:
+            if pool is not None:
+                pool.shutdown(wait=False)
+
+
+_engines: "weakref.WeakKeyDictionary[StorageProvider, FetchEngine]" = \
+    weakref.WeakKeyDictionary()
+_engines_lock = threading.Lock()
+
+
+def engine_for(provider: StorageProvider) -> FetchEngine:
+    """The shared :class:`FetchEngine` of a storage provider (one per
+    provider instance, created on first use, garbage-collected with it)."""
+    with _engines_lock:
+        eng = _engines.get(provider)
+        if eng is None:
+            eng = FetchEngine(provider)
+            _engines[provider] = eng
+        return eng

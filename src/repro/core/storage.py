@@ -13,6 +13,10 @@ All providers speak the same byte-level protocol:
     get(key) -> bytes                  full object read
     get_range(key, start, end)         ranged read (the format's streaming
                                        primitive; §3.5 "range-based requests")
+    get_ranges(key, ranges)            batched ranged read: one payload per
+                                       requested range, issued as few physical
+                                       requests as the provider can manage
+    get_many(keys) -> {key: bytes}     batched full reads
     put(key, data)                     atomic object write
     delete(key), exists(key), list_keys(prefix), num_bytes(key)
 
@@ -24,7 +28,52 @@ from __future__ import annotations
 import os
 import threading
 import time
-from typing import Callable, Dict, Iterator, List, Optional
+from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
+
+Range = Tuple[int, int]
+
+
+def coalesce_ranges(ranges: Sequence[Range], gap: int
+                    ) -> Tuple[List[Range], List[int]]:
+    """Merge byte ranges whose inter-range gap is at most ``gap`` bytes.
+
+    Returns ``(spans, assign)``: ``spans`` is the sorted list of merged
+    ``[start, end)`` spans and ``assign[i]`` is the span index serving
+    ``ranges[i]``.  Inverted ranges (``end < start``) are treated as
+    zero-length at ``start``; overlapping and adjacent ranges always merge.
+    The caller picks ``gap`` from its cost model: a gap is worth downloading
+    when ``gap_bytes / bandwidth < per_request_latency``.
+    """
+    norm = [(int(s), max(int(s), int(e))) for s, e in ranges]
+    order = sorted(range(len(norm)), key=lambda i: norm[i])
+    spans: List[List[int]] = []
+    assign = [0] * len(norm)
+    for i in order:
+        s, e = norm[i]
+        if spans and s - spans[-1][1] <= gap:
+            spans[-1][1] = max(spans[-1][1], e)
+        else:
+            spans.append([s, e])
+        assign[i] = len(spans) - 1
+    return [(s, e) for s, e in spans], assign
+
+
+def slice_spans(ranges: Sequence[Range], spans: Sequence[Range],
+                assign: Sequence[int],
+                payloads: Sequence[bytes]) -> List[bytes]:
+    """Reassemble per-range payloads from fetched coalesced spans.
+
+    Inverse of :func:`coalesce_ranges`: ``payloads[j]`` holds the bytes of
+    ``spans[j]`` (possibly tail-clamped by the object length); the result
+    is byte-identical to fetching each of ``ranges`` individually.
+    """
+    out: List[bytes] = []
+    for i, (s, e) in enumerate(ranges):
+        span_start = spans[assign[i]][0]
+        data = payloads[assign[i]]
+        out.append(data[s - span_start: max(s, e) - span_start])
+    return out
 
 
 class StorageError(KeyError):
@@ -50,6 +99,26 @@ class StorageProvider:
         must not raise on an existing key.
         """
         raise NotImplementedError
+
+    def get_ranges(self, key: str, ranges: Sequence[Range]) -> List[bytes]:
+        """Batched :meth:`get_range`: one payload per requested range.
+
+        Contract: payload ``i`` is byte-identical to
+        ``get_range(key, *ranges[i])``; a missing key raises
+        :class:`StorageError` whenever ``ranges`` is non-empty (even if
+        every range is zero-length); an empty ``ranges`` returns ``[]``
+        without touching storage.  Providers override the default per-range
+        loop to batch the physical I/O (single open + ordered seeks on
+        POSIX, coalesced ranged requests on object storage).
+        """
+        return [self.get_range(key, s, e) for s, e in ranges]
+
+    def get_many(self, keys: Sequence[str]) -> Dict[str, bytes]:
+        """Batched :meth:`get`: ``{key: bytes}`` with duplicates deduped.
+
+        Any missing key raises :class:`StorageError`.
+        """
+        return {k: self.get(k) for k in keys}
 
     def put(self, key: str, data: bytes) -> None:
         raise NotImplementedError
@@ -99,6 +168,12 @@ class MemoryProvider(StorageProvider):
 
     def get_range(self, key: str, start: int, end: int) -> bytes:
         return self.get(key)[start:end]
+
+    def get_ranges(self, key: str, ranges: Sequence[Range]) -> List[bytes]:
+        if not ranges:
+            return []
+        data = self.get(key)  # one lookup serves every range
+        return [data[s:max(s, e)] for s, e in ranges]
 
     def put(self, key: str, data: bytes) -> None:
         with self._lock:
@@ -155,6 +230,22 @@ class LocalProvider(StorageProvider):
             with open(self._path(key), "rb") as f:
                 f.seek(start)
                 return f.read(max(0, end - start))
+        except FileNotFoundError:
+            raise StorageError(key) from None
+
+    def get_ranges(self, key: str, ranges: Sequence[Range]) -> List[bytes]:
+        """Single open + seeks in ascending byte order (one disk pass)."""
+        if not ranges:
+            return []
+        try:
+            with open(self._path(key), "rb") as f:
+                out: List[bytes] = [b""] * len(ranges)
+                order = sorted(range(len(ranges)), key=lambda i: ranges[i][0])
+                for i in order:
+                    s, e = ranges[i]
+                    f.seek(s)
+                    out[i] = f.read(max(0, e - s))
+                return out
         except FileNotFoundError:
             raise StorageError(key) from None
 
@@ -229,8 +320,11 @@ class SimulatedS3Provider(StorageProvider):
         self._lock = threading.Lock()
         self._clock = clock or time.monotonic
         self.stats = {
-            "requests": 0,
-            "ranged_requests": 0,
+            "requests": 0,            # every charged round-trip (incl. meta)
+            "ranged_requests": 0,     # round-trips that carried a byte range
+            "coalesced_requests": 0,  # physical spans issued by get_ranges
+            "batched_ranges": 0,      # logical ranges served by get_ranges
+            "meta_requests": 0,       # exists/num_bytes/list_keys round-trips
             "bytes_down": 0,
             "bytes_up": 0,
             "sim_seconds": 0.0,
@@ -266,6 +360,32 @@ class SimulatedS3Provider(StorageProvider):
                 self.stats["ranged_requests"] += 1
             return data
 
+    def gap_threshold(self) -> int:
+        """Gap (bytes) worth downloading to avoid one extra round-trip:
+        ``gap / bandwidth < latency  <=>  gap < latency * bandwidth``."""
+        return int(self.latency_s * self.bandwidth_bps)
+
+    def get_ranges(self, key: str, ranges: Sequence[Range]) -> List[bytes]:
+        """Coalescing ranged read: requested ranges are merged whenever the
+        gap between them costs less than a request round-trip, and ONE
+        latency charge is paid per merged span — the batched counterpart of
+        the paper's "range-based requests" (§3.5)."""
+        if not ranges:
+            return []
+        spans, assign = coalesce_ranges(ranges, self.gap_threshold())
+        payloads: List[bytes] = []
+        with self._sem:
+            for s, e in spans:
+                data = self.base.get_range(key, s, e)
+                self._charge(len(data))
+                with self._lock:
+                    self.stats["ranged_requests"] += 1
+                    self.stats["coalesced_requests"] += 1
+                payloads.append(data)
+        with self._lock:
+            self.stats["batched_ranges"] += len(ranges)
+        return slice_spans(ranges, spans, assign, payloads)
+
     def put(self, key: str, data: bytes) -> None:
         with self._sem:
             self._charge(len(data), upload=True)
@@ -277,15 +397,26 @@ class SimulatedS3Provider(StorageProvider):
             self.base.delete(key)
 
     def exists(self, key: str) -> bool:
-        return self.base.exists(key)
+        # HEAD-style metadata probe: zero payload, full round-trip latency
+        with self._sem:
+            self._charge(0)
+            with self._lock:
+                self.stats["meta_requests"] += 1
+            return self.base.exists(key)
 
     def list_keys(self, prefix: str = "") -> List[str]:
         with self._sem:
             self._charge(0)
+            with self._lock:
+                self.stats["meta_requests"] += 1
             return self.base.list_keys(prefix)
 
     def num_bytes(self, key: str) -> int:
-        return self.base.num_bytes(key)
+        with self._sem:
+            self._charge(0)
+            with self._lock:
+                self.stats["meta_requests"] += 1
+            return self.base.num_bytes(key)
 
 
 class LRUCacheProvider(StorageProvider):
@@ -358,6 +489,39 @@ class LRUCacheProvider(StorageProvider):
                 return self._cache[key][start:end]
             self.misses += 1
         return self.base.get_range(key, start, end)
+
+    def get_ranges(self, key: str, ranges: Sequence[Range]) -> List[bytes]:
+        """Every range served from a cached full object (one hit); misses
+        pass through batched without filling, like :meth:`get_range`."""
+        if not ranges:
+            return []
+        with self._lock:
+            if key in self._cache:
+                self.hits += 1
+                self._touch(key)
+                data = self._cache[key]
+                return [data[s:max(s, e)] for s, e in ranges]
+            self.misses += 1
+        return self.base.get_ranges(key, ranges)
+
+    def get_many(self, keys: Sequence[str]) -> Dict[str, bytes]:
+        out: Dict[str, bytes] = {}
+        missing: List[str] = []
+        with self._lock:
+            for k in keys:
+                if k in self._cache:
+                    self.hits += 1
+                    self._touch(k)
+                    out[k] = self._cache[k]
+                elif k not in out and k not in missing:
+                    self.misses += 1
+                    missing.append(k)
+        if missing:
+            fetched = self.base.get_many(missing)
+            for k, v in fetched.items():
+                self._admit(k, v)
+            out.update(fetched)
+        return out
 
     def put(self, key: str, data: bytes) -> None:
         self.base.put(key, data)

@@ -17,25 +17,32 @@ time travel stays correct.
 from __future__ import annotations
 
 import json
+import time
 import uuid
 import zlib
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from . import chunks as chunklib
+from . import fetch
 from .chunk_encoder import ChunkEncoder, ChunkStatsTable
 from .chunks import FLAG_TILED, ChunkBuilder, ChunkHeader, ChunkStats
 from .codecs import get_codec
 from .htypes import get_htype
-from .storage import StorageError
+from .storage import StorageError, coalesce_ranges
 from .tiling import (TileDescriptor, assemble_from_tiles, assemble_region,
                      plan_tile_shape, split_into_tiles, tiles_for_region)
 from .version_control import VersionControl
 
 DEFAULT_MIN_CHUNK = 8 << 20
 DEFAULT_MAX_CHUNK = 16 << 20
+
+#: speculative header read size: one ranged request covers the full header
+#: of any chunk up to ~150 samples (48 + ~26 B/sample); larger headers pay
+#: exactly one follow-up request for the remainder
+HEADER_PROBE_BYTES = 4096
 
 
 def _new_chunk_name(prefix: str = "c") -> str:
@@ -89,6 +96,7 @@ class Tensor:
         self.vc = vc
         self.node_id = node_id          # None => follow vc.current (writable)
         self._header_cache: dict = {}
+        self._fetch_engine: Optional["fetch.FetchEngine"] = None
         self._builder: Optional[ChunkBuilder] = None
         self._open_name: Optional[str] = None
         self._dirty = False
@@ -126,6 +134,7 @@ class Tensor:
         if self._builder is not None and self._builder.num_samples:
             key = self.vc.register_new_chunk(self.name, self._open_name)
             self.vc.storage.put(key, self._builder.serialize())
+            self._discard_cached(key)  # the key's bytes just changed
             self.stats.set(self._open_name, self._builder.stats_snapshot())
         if not self._dirty:
             return
@@ -233,7 +242,7 @@ class Tensor:
                     if last_name in self.vc.chunk_set(self.vc.current_id, self.name):
                         self.vc.forget_chunk(self.name, last_name)
                         self.vc.storage.delete(key)
-                    self._header_cache.pop(key, None)
+                    self._discard_cached(key)
                     return self._builder
             self._builder = self._fresh_builder()
             self._open_name = _new_chunk_name()
@@ -245,6 +254,7 @@ class Tensor:
             return
         key = self.vc.register_new_chunk(self.name, self._open_name)
         self.vc.storage.put(key, self._builder.serialize())
+        self._discard_cached(key)  # the key's bytes just changed
         self.stats.set(self._open_name, self._builder.stats_snapshot())
         self._builder, self._open_name = None, None
 
@@ -360,19 +370,76 @@ class Tensor:
         if chunk_name in self.vc.chunk_set(self.vc.current_id, self.name):
             self.vc.forget_chunk(self.name, chunk_name)
             self.vc.storage.delete(key)
-        self._header_cache.pop(key, None)
+        self._discard_cached(key)
 
     # --------------------------------------------------------------- reading
+    def _engine(self) -> "fetch.FetchEngine":
+        """The storage's shared fetch engine, cached per tensor so the
+        per-sample read path skips the global registry lookup."""
+        eng = self._fetch_engine
+        if eng is None:
+            eng = self._fetch_engine = fetch.engine_for(self.vc.storage)
+        return eng
+
+    def _discard_cached(self, key: str) -> None:
+        """Invalidate every read-side cache of a chunk key whose bytes
+        changed or vanished (open-chunk reflush, copy-on-write delete):
+        the parsed-header memo and the shared engine's resident blob."""
+        self._header_cache.pop(key, None)
+        self._engine().discard(key)
+
+    def prefetch_chunks(self, chunk_ords: Sequence[int], *,
+                        owner: object = None, on_fetched=None,
+                        budget: Optional[int] = None,
+                        queued_bytes: int = 0) -> int:
+        """Queue whole-chunk prefetches on the fetch engine, in the given
+        order, skipping the open chunk.  Queued bytes are bounded by
+        ``budget`` (default: half the destination buffer — LRU tier or
+        resident store) with chunk sizes estimated from the stats sidecar;
+        returns the accumulated queued bytes so callers can thread one
+        budget across several tensors.  ``owner``/``on_fetched`` pass
+        through to :meth:`FetchEngine.prefetch`.
+        """
+        engine = self._engine()
+        if budget is None:
+            budget = (engine.cache_above or engine.resident_bytes) // 2
+        for o in chunk_ords:
+            cname = self.encoder.name_of(int(o))
+            if self._builder is not None and cname == self._open_name:
+                continue
+            st = self.stats.get(cname)
+            est = st.nbytes if st is not None and st.nbytes \
+                else self.meta.max_chunk_size
+            if queued_bytes and queued_bytes + est > budget:
+                break  # the rest is fetched (coalesced) on demand
+            queued_bytes += est
+            engine.prefetch(self._chunk_key(cname), owner=owner,
+                            on_fetched=on_fetched)
+        return queued_bytes
+
     def _chunk_key(self, chunk_name: str) -> str:
         return self.vc.resolve_chunk_key(self.name, chunk_name, self.node_id)
 
-    def _header_of(self, key: str, ranged: bool) -> ChunkHeader:
+    def _header_of(self, key: str, ranged: bool,
+                   counters: Optional[Dict[str, int]] = None) -> ChunkHeader:
         h = self._header_cache.get(key)
         if h is not None:
             return h
-        if ranged:
-            hs = chunklib.header_size_of(self.vc.storage.get_range(key, 0, 48))
-            h = chunklib.parse_header(self.vc.storage.get_range(key, 0, hs))
+        engine = self._engine()
+        blob = engine.resident(key)
+        if blob is not None:
+            h = chunklib.parse_header(blob)
+        elif ranged:
+            # speculative probe via the engine (observed by its stats and
+            # cost EWMA): the whole header in one ranged request for
+            # typical chunks, two for very wide ones (was always two)
+            prefix = engine.fetch_ranges(key, [(0, HEADER_PROBE_BYTES)],
+                                         counters=counters)[0]
+            hs = chunklib.header_size_of(prefix)
+            if hs > len(prefix):
+                prefix += engine.fetch_ranges(key, [(len(prefix), hs)],
+                                              counters=counters)[0]
+            h = chunklib.parse_header(prefix)
         else:
             h = chunklib.parse_header(self.vc.storage.get(key))
         self._header_cache[key] = h
@@ -387,6 +454,11 @@ class Tensor:
             return (b.payloads[local], tuple(b.shapes[local]),
                     bool(b.flags[local] & FLAG_TILED))
         key = self._chunk_key(chunk_name)
+        blob = self._engine().resident(key)
+        if blob is not None:  # prefetched chunk: slice locally, no I/O
+            header = self._header_of(key, True)
+            s, e = header.byte_range(local)
+            return blob[s:e], header.shapes[local], header.is_tiled(local)
         if ranged is None:
             ranged = self.vc.storage.kind in ("s3", "lru")
         header = self._header_of(key, ranged)
@@ -403,12 +475,171 @@ class Tensor:
             raise IndexError(f"{idx} out of range [0, {n})")
         payload, shape, tiled = self._payload_of(idx, ranged=ranged)
         if tiled:
-            desc = TileDescriptor.from_bytes(payload)
-            tile_payloads = [self.vc.storage.get(self._chunk_key(nm))
-                             for nm in desc.chunk_names]
-            return assemble_from_tiles(desc, tile_payloads)
+            return self._assemble_tiled(payload)
         codec = get_codec(self.meta.codec)
         return codec.decode(payload, shape, np.dtype(self.meta.dtype))
+
+    def _assemble_tiled(self, payload: bytes) -> np.ndarray:
+        """Reassemble a tiled sample; tile chunks fetched as one batch."""
+        desc = TileDescriptor.from_bytes(payload)
+        keys = [self._chunk_key(nm) for nm in desc.chunk_names]
+        blobs = self._engine().fetch_many(keys)
+        return assemble_from_tiles(desc, [blobs[k] for k in keys])
+
+    # ------------------------------------------------------------ batch read
+    def read_batch(self, indices: Union[Sequence[int], np.ndarray], *,
+                   ranged: Optional[bool] = None,
+                   io_stats: Optional[Dict[str, Any]] = None
+                   ) -> List[np.ndarray]:
+        """Read many samples with at most one coalesced request per chunk.
+
+        The per-sample hot paths (TQL column stacking, the loader's fetch
+        units) route through here: indices are grouped by chunk, each
+        chunk's sample byte-ranges are fetched as one full GET or one
+        coalesced ranged request — whichever the engine's cost model says
+        is cheaper — and chunk ``k+1``'s fetch overlaps chunk ``k``'s
+        decode on the engine pool.  Output order matches input order;
+        duplicate and unsorted indices are fine.
+
+        ``ranged``: None → cost-model decision per chunk; True → always
+        ranged reads; False → always whole-chunk GETs.
+        ``io_stats``: optional dict accumulating ``io_s``, ``cpu_s``,
+        ``bytes``, ``requests`` (the loader feeds these into LoaderStats).
+        """
+        arr = np.asarray(indices, dtype=np.int64).ravel()
+        if arr.size == 0:
+            return []
+        n = len(self)
+        arr = np.where(arr < 0, arr + n, arr)
+        ords = self.encoder.ords_of(arr)  # bounds-checks, raises IndexError
+        out: List[Optional[np.ndarray]] = [None] * int(arr.size)
+        codec = get_codec(self.meta.codec)
+        dt = np.dtype(self.meta.dtype)
+        engine = self._engine()
+        groups: Dict[int, List[int]] = {}
+        for j, o in enumerate(ords.tolist()):
+            groups.setdefault(int(o), []).append(j)
+        tasks = []
+        for o in sorted(groups):
+            name = self.encoder.name_of(o)
+            first, _last = self.encoder.chunk_span(o)
+            slots = groups[o]
+            if self._builder is not None and name == self._open_name:
+                b = self._builder
+                for j in slots:
+                    local = int(arr[j]) - first
+                    if b.flags[local] & FLAG_TILED:
+                        out[j] = self._assemble_tiled(b.payloads[local])
+                    else:
+                        out[j] = codec.decode(b.payloads[local],
+                                              tuple(b.shapes[local]), dt)
+                continue
+            tasks.append((o, name, first, slots))
+
+        def fetch_task(task):
+            o, name, first, slots = task
+            key = self._chunk_key(name)
+            locals_ = sorted({int(arr[j]) - first for j in slots})
+            t0 = time.perf_counter()
+            header, payloads, nbytes, nreq = self._fetch_chunk_payloads(
+                key, name, o, locals_, engine, ranged)
+            return header, payloads, nbytes, nreq, time.perf_counter() - t0
+
+        lookahead: Optional[Any] = None
+        pipeline = len(tasks) > 1
+        try:
+            for i, task in enumerate(tasks):
+                if lookahead is not None:
+                    header, payloads, nbytes, nreq, dt_io = lookahead.result()
+                    lookahead = None
+                else:
+                    header, payloads, nbytes, nreq, dt_io = fetch_task(task)
+                if pipeline and i + 1 < len(tasks):
+                    # overlap the next chunk's fetch with this chunk's decode
+                    lookahead = engine.submit(fetch_task, tasks[i + 1])
+                t1 = time.perf_counter()
+                _o, _name, first, slots = task
+                for j in slots:
+                    local = int(arr[j]) - first
+                    payload = payloads[local]
+                    if header.is_tiled(local):
+                        out[j] = self._assemble_tiled(payload)
+                    else:
+                        out[j] = codec.decode(payload, header.shapes[local],
+                                              dt)
+                if io_stats is not None:
+                    io_stats["io_s"] = io_stats.get("io_s", 0.0) + dt_io
+                    io_stats["cpu_s"] = (io_stats.get("cpu_s", 0.0)
+                                         + time.perf_counter() - t1)
+                    io_stats["bytes"] = io_stats.get("bytes", 0) + nbytes
+                    io_stats["requests"] = io_stats.get("requests", 0) + nreq
+        finally:
+            if lookahead is not None:
+                lookahead.cancel()
+        return out  # type: ignore[return-value]
+
+    def _fetch_chunk_payloads(self, key: str, cname: str, chunk_ord: int,
+                              locals_: List[int], engine: "fetch.FetchEngine",
+                              ranged: Optional[bool]):
+        """(header, {local: payload}, new_bytes, n_requests) for one chunk."""
+        blob = engine.resident(key)
+        if blob is None:
+            # a deliberate prefetch is coming: wait rather than duplicate it
+            blob = engine.wait_inflight(key)
+        if blob is not None:
+            header = self._header_cache.get(key)
+            if header is None:
+                header = chunklib.parse_header(blob)
+                self._header_cache[key] = header
+            return (header,
+                    {l: blob[slice(*header.byte_range(l))] for l in locals_},
+                    0, 0)
+        header = self._header_cache.get(key)
+        if ranged is None:
+            full = self._full_get_cheaper(key, cname, chunk_ord, locals_,
+                                          header, engine)
+        else:
+            full = not ranged
+        if full:
+            blob = engine.fetch_full(key)
+            header = chunklib.parse_header(blob)
+            self._header_cache[key] = header
+            return (header,
+                    {l: blob[slice(*header.byte_range(l))] for l in locals_},
+                    len(blob), 1)
+        counters: Dict[str, int] = {"requests": 0, "bytes": 0}
+        header = self._header_of(key, True, counters=counters)
+        ranges = [header.byte_range(l) for l in locals_]
+        payloads = engine.fetch_ranges(key, ranges, counters=counters)
+        return (header, dict(zip(locals_, payloads)),
+                counters["bytes"], counters["requests"])
+
+    def _full_get_cheaper(self, key: str, cname: str, chunk_ord: int,
+                          locals_: List[int], header: Optional[ChunkHeader],
+                          engine: "fetch.FetchEngine") -> bool:
+        """Cost-model choice between one whole-chunk GET and coalesced
+        ranged reads for the ``locals_`` samples of one chunk."""
+        if header is not None:
+            object_bytes = header.header_size + header.nbytes_data()
+            ranges = [header.byte_range(l) for l in locals_]
+            spans, _ = coalesce_ranges(ranges, engine.est.gap_threshold())
+            needed = sum(e - s for s, e in spans)
+            return engine.plan_full_get(
+                n_spans=len(spans), needed_bytes=needed,
+                object_bytes=object_bytes, header_cached=True)
+        st = self.stats.get(cname)
+        n_in_chunk = self.encoder.samples_in(chunk_ord)
+        if st is not None and st.count:
+            # size from the stats sidecar; header estimated at ~26 B/sample
+            object_bytes = st.nbytes + 56 + 26 * n_in_chunk
+            needed = int(object_bytes * len(locals_) / max(n_in_chunk, 1))
+            runs = 1 + sum(b - a > 1
+                           for a, b in zip(locals_, locals_[1:]))
+            return engine.plan_full_get(
+                n_spans=runs, needed_bytes=needed,
+                object_bytes=object_bytes, header_cached=False)
+        # size unknown (pre-stats dataset): legacy sparse-read heuristic
+        return len(locals_) > 2
 
     def read_region(self, idx: int, region: Sequence[slice],
                     *, ranged: Optional[bool] = None) -> np.ndarray:
@@ -417,7 +648,9 @@ class Tensor:
         if tiled:
             desc = TileDescriptor.from_bytes(payload)
             need = tiles_for_region(desc, region)
-            payloads = {f: self.vc.storage.get(self._chunk_key(desc.chunk_names[f]))
+            blobs = self._engine().fetch_many(
+                [self._chunk_key(desc.chunk_names[f]) for f in need])
+            payloads = {f: blobs[self._chunk_key(desc.chunk_names[f])]
                         for f in need}
             return assemble_region(desc, region, payloads)
         codec = get_codec(self.meta.codec)
@@ -445,9 +678,9 @@ class Tensor:
         if isinstance(item, (int, np.integer)):
             return self.read(int(item))
         if isinstance(item, slice):
-            return [self.read(i) for i in range(*item.indices(len(self)))]
+            return self.read_batch(range(*item.indices(len(self))))
         if isinstance(item, (list, np.ndarray)):
-            return [self.read(int(i)) for i in item]
+            return self.read_batch([int(i) for i in item])
         raise TypeError(f"bad index {item!r}")
 
     def numpy(self) -> np.ndarray:
@@ -456,7 +689,7 @@ class Tensor:
             raise ValueError(f"tensor {self.name!r} is ragged; use [] access")
         if len(self) == 0:
             return np.zeros((0,), dtype=self.meta.dtype)
-        return np.stack([self.read(i) for i in range(len(self))])
+        return np.stack(self.read_batch(np.arange(len(self))))
 
     def text(self, idx: int) -> str:
         return self.read(idx).tobytes().decode()
@@ -472,6 +705,7 @@ class Tensor:
                 try:
                     key = self.vc.resolve_chunk_key(self.name, name, None)
                     self.vc.storage.delete(key)
+                    self._discard_cached(key)
                 except StorageError:
                     pass
                 self.vc.forget_chunk(self.name, name)

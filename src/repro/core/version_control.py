@@ -115,6 +115,7 @@ class VersionControl:
         self.current_id: str = ""
         # per current-node mutable state (flushed by save_info / tensor flush)
         self._chunk_sets: Dict[Tuple[str, str], Set[str]] = {}   # (node, tensor)
+        self._schemas: Dict[str, List[str]] = {}                 # node -> tensor list
         self._diffs: Dict[str, CommitDiff] = {}                  # tensor -> diff (current node)
         self._load_or_init()
 
@@ -181,10 +182,14 @@ class VersionControl:
                 f"(or create one) before writing")
 
     def schema_tensors(self, node_id: Optional[str] = None) -> List[str]:
-        d = self._get_json(self._schema_key(node_id or self.current_id), {"tensors": []})
-        return list(d["tensors"])
+        nid = node_id or self.current_id
+        if nid not in self._schemas:  # memo: one GET per node, not per view
+            d = self._get_json(self._schema_key(nid), {"tensors": []})
+            self._schemas[nid] = list(d["tensors"])
+        return list(self._schemas[nid])
 
     def set_schema_tensors(self, tensors: List[str]) -> None:
+        self._schemas.pop(self.current_id, None)
         self._put_json(self._schema_key(self.current_id), {"tensors": tensors})
 
     # ----------------------------------------------------------- chunk lookup

@@ -33,7 +33,7 @@ class TensorView:
         return [self.read(int(i)) for i in np.arange(len(self))[item]]
 
     def numpy(self) -> np.ndarray:
-        return np.stack([self.read(i) for i in range(len(self))]) if len(self) \
+        return np.stack(self.tensor.read_batch(self.indices)) if len(self) \
             else np.zeros((0,), dtype=self.tensor.meta.dtype)
 
     @property

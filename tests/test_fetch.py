@@ -1,0 +1,454 @@
+"""Coalesced batch I/O engine (core/fetch.py) + Tensor.read_batch.
+
+Covers the PR-2 contract: cost-model-derived coalescing threshold, full-GET
+vs. ranged decision, in-flight prefetch dedup, cancellation, and — the
+acceptance criterion — at most one coalesced request per chunk per tensor
+on the hot read paths, byte-identical to per-sample reads.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.core as dl
+from repro.core import fetch
+from repro.core.fetch import (CostEstimator, FetchEngine,
+                              cache_capacity_above, provider_cost_params)
+
+
+# ---------------------------------------------------------------- estimator
+def test_estimator_seeds_from_provider_chain():
+    s3 = dl.SimulatedS3Provider(time_scale=0, latency_s=0.02,
+                                bandwidth_bps=1e6)
+    lru = dl.LRUCacheProvider(s3, capacity_bytes=1 << 20)
+    est = CostEstimator(lru)   # walks the chain down to the S3 tier
+    assert est.seeded
+    assert est.latency_s == 0.02
+    assert est.gap_threshold() == int(0.02 * 1e6)
+    assert provider_cost_params(lru) == (0.02, 1e6)
+    assert cache_capacity_above(lru) == 1 << 20
+    assert cache_capacity_above(s3) == 0
+
+
+def test_estimator_learns_from_observations():
+    mem = dl.MemoryProvider()
+    est = CostEstimator(mem)
+    assert not est.seeded
+    for _ in range(50):
+        est.observe_request(nbytes=1 << 20, seconds=0.05)
+    assert est.latency_s > 1e-4         # pulled up from the local prior
+    assert est.gap_threshold() > 0
+
+
+def test_full_get_vs_ranged_decision():
+    s3 = dl.SimulatedS3Provider(time_scale=0, latency_s=0.01,
+                                bandwidth_bps=1e6)  # 10KB gap threshold
+    est = CostEstimator(s3)
+    # one tiny span out of a huge object: ranged wins
+    assert not est.full_get_is_cheaper(n_spans=1, needed_bytes=1 << 10,
+                                       object_bytes=1 << 24)
+    # needing nearly everything: the single full GET wins (the bytes saved
+    # by 4 ranged requests no longer pay for their 3 extra round-trips)
+    assert est.full_get_is_cheaper(n_spans=4, needed_bytes=990_000,
+                                   object_bytes=1_000_000)
+    # an uncached header adds a round-trip to the ranged plan
+    assert est.full_get_is_cheaper(n_spans=1, needed_bytes=0,
+                                   object_bytes=5_000, extra_requests=1)
+
+
+# ------------------------------------------------------------------- engine
+def test_fetch_ranges_equals_per_range_reads():
+    s3 = dl.SimulatedS3Provider(time_scale=0)
+    s3.put("k", bytes(range(200)))
+    eng = FetchEngine(s3)
+    ranges = [(10, 20), (20, 30), (150, 300), (5, 5), (90, 40)]
+    want = [s3.get_range("k", s, e) for s, e in ranges]
+    s3.reset_stats()
+    assert eng.fetch_ranges("k", ranges) == want
+    assert s3.stats["coalesced_requests"] >= 1
+    with fetch.coalescing_disabled():
+        assert not fetch.coalescing_enabled()
+        assert eng.fetch_ranges("k", ranges) == want
+    assert fetch.coalescing_enabled()
+
+
+def test_prefetch_dedups_inflight_keys():
+    release = threading.Event()
+
+    class SlowProvider(dl.MemoryProvider):
+        def __init__(self):
+            super().__init__()
+            self.gets = 0
+
+        def get(self, key):
+            self.gets += 1
+            release.wait(timeout=5)
+            return super().get(key)
+
+    p = SlowProvider()
+    p.put("chunk", b"x" * 100)
+    eng = FetchEngine(p)
+    f1 = eng.prefetch("chunk")
+    f2 = eng.prefetch("chunk")      # while in flight: same future
+    assert f1 is f2
+    release.set()
+    assert f1.result(timeout=5) == b"x" * 100
+    assert p.gets == 1
+    # completed prefetch parks the blob: later fetches are free
+    assert eng.resident("chunk") == b"x" * 100
+    assert eng.fetch_full("chunk") == b"x" * 100
+    assert p.gets == 1
+
+
+def test_prefetch_cancellation_is_safe():
+    gate = threading.Event()
+
+    class GatedProvider(dl.MemoryProvider):
+        def get(self, key):
+            gate.wait(timeout=5)
+            return super().get(key)
+
+    p = GatedProvider()
+    for i in range(32):
+        p.put(f"k{i}", b"v" * 8)
+    eng = FetchEngine(p, max_workers=1)
+    futs = [eng.prefetch(f"k{i}") for i in range(32)]
+    cancelled = eng.cancel_pending()
+    assert cancelled > 0            # queued-but-not-started futures dropped
+    gate.set()
+    # a cancelled in-flight future is never trusted: readers fall back
+    for i in range(32):
+        assert eng.fetch_full(f"k{i}") == b"v" * 8
+    eng.close()
+    del futs
+
+
+def test_engine_for_is_per_provider():
+    a, b = dl.MemoryProvider(), dl.MemoryProvider()
+    assert fetch.engine_for(a) is fetch.engine_for(a)
+    assert fetch.engine_for(a) is not fetch.engine_for(b)
+
+
+def test_engine_registry_releases_collected_providers():
+    """The per-provider registry must not leak engines (resident blobs,
+    pools) once the provider's last external reference is gone."""
+    import gc
+    import weakref as wr
+
+    p = dl.MemoryProvider()
+    eng_ref = wr.ref(fetch.engine_for(p))
+    assert eng_ref() is not None
+    del p
+    gc.collect()
+    assert eng_ref() is None
+
+
+def test_cancel_pending_is_owner_scoped():
+    """One consumer's teardown must never cancel another's prefetches."""
+    gate = threading.Event()
+
+    class GatedProvider(dl.MemoryProvider):
+        def get(self, key):
+            gate.wait(timeout=5)
+            return super().get(key)
+
+    p = GatedProvider()
+    for i in range(8):
+        p.put(f"k{i}", b"v")
+    eng = FetchEngine(p, max_workers=1)
+    owner_a, owner_b = object(), object()
+    [eng.prefetch(f"k{i}", owner=owner_a) for i in range(4)]
+    b_futs = [eng.prefetch(f"k{i + 4}", owner=owner_b) for i in range(4)]
+    cancelled = eng.cancel_pending(owner=owner_a)
+    assert cancelled >= 3                  # queued A-futures dropped
+    assert all(not f.cancelled() for f in b_futs)
+    gate.set()
+    for f in b_futs:
+        assert f.result(timeout=5) == b"v"
+    eng.close()
+
+
+def test_resident_store_is_byte_bounded():
+    p = dl.MemoryProvider()
+    eng = FetchEngine(p, resident_bytes=100)
+    for i in range(10):
+        p.put(f"k{i}", bytes(40))
+        eng.prefetch(f"k{i}").result(timeout=5)
+    with eng._lock:
+        assert eng._resident_size <= 100
+
+
+# --------------------------------------------------------------- read_batch
+def _chunked_ds(storage=None, n=300, chunk=1 << 11):
+    rng = np.random.default_rng(3)
+    ds = dl.Dataset(storage)
+    ds.create_tensor("x", dtype="float32", min_chunk_size=chunk // 2,
+                     max_chunk_size=chunk)
+    ds.create_tensor("lab", htype="class_label")
+    vals = [rng.standard_normal(32).astype(np.float32) for _ in range(n)]
+    for i, v in enumerate(vals):
+        ds.append({"x": v, "lab": np.int64(i % 7)})
+    return ds, vals
+
+
+def test_read_batch_matches_per_sample_reads():
+    ds, vals = _chunked_ds()
+    ds.commit("c")
+    t = ds._tensor("x")
+    assert t.num_chunks > 3
+    for idx in ([0], [299, 0, 150, 150, -1], list(range(300)),
+                list(range(299, -1, -1)), []):
+        got = t.read_batch(idx)
+        want = [t.read(int(i)) for i in idx]
+        assert len(got) == len(want)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+
+
+def test_read_batch_covers_open_builder_tail():
+    ds, vals = _chunked_ds(n=40)   # no commit: tail lives in the builder
+    t = ds._tensor("x")
+    got = t.read_batch(np.arange(40))
+    for g, w in zip(got, vals):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_read_batch_ragged_and_forced_modes():
+    ds = dl.Dataset()
+    ds.create_tensor("r", dtype="float32", min_chunk_size=512,
+                     max_chunk_size=1024)
+    rows = [np.arange(i + 1, dtype=np.float32) for i in range(50)]
+    for r in rows:
+        ds.append({"r": r})
+    ds.commit("c")
+    t = ds._tensor("r")
+    for mode in (None, True, False):
+        got = t.read_batch(np.arange(50), ranged=mode)
+        for g, w in zip(got, rows):
+            np.testing.assert_array_equal(g, w)
+
+
+def test_read_batch_tiled_samples():
+    ds = dl.Dataset()
+    ds.create_tensor("img", dtype="uint8", min_chunk_size=1 << 10,
+                     max_chunk_size=1 << 12)
+    small = np.ones((8, 8), np.uint8)
+    big = np.arange(120 * 120, dtype=np.uint8).reshape(120, 120)  # tiled
+    ds.append({"img": small})
+    ds.append({"img": big})
+    ds.commit("c")
+    t = ds._tensor("img")
+    got = t.read_batch([0, 1])
+    np.testing.assert_array_equal(got[0], small)
+    np.testing.assert_array_equal(got[1], big)
+
+
+def test_read_batch_out_of_range_raises():
+    ds, _ = _chunked_ds(n=10)
+    ds.commit("c")
+    with pytest.raises(IndexError):
+        ds._tensor("x").read_batch([0, 10])
+
+
+def test_read_batch_one_coalesced_request_per_chunk():
+    """Acceptance: batch reads issue <= 1 coalesced request per chunk per
+    tensor (down from one per sample), byte-identical results."""
+    base = dl.MemoryProvider()
+    ds, vals = _chunked_ds(storage=base)
+    ds.commit("c")
+    s3 = dl.SimulatedS3Provider(base, time_scale=0)
+    remote = dl.Dataset(s3)
+    t = remote._tensor("x")
+    nchunks = t.num_chunks
+    t._chunk_key(t.encoder.name_of(0))  # warm the VC chunk-set memo
+    s3.reset_stats()
+    got = t.read_batch(np.arange(300))
+    for g, w in zip(got, vals):
+        np.testing.assert_array_equal(g, w)
+    assert s3.stats["requests"] <= nchunks
+    # the per-sample pattern for comparison: >= one request per sample
+    with fetch.coalescing_disabled():
+        s3.reset_stats()
+        t2 = dl.Dataset(s3)._tensor("x")
+        t2.read_batch(np.arange(300))
+        per_sample = s3.stats["requests"]
+    assert per_sample >= 300
+    assert nchunks * 3 <= per_sample
+
+
+def test_sparse_read_through_lru_chain_stays_ranged():
+    """An LRU tier above the remote biases toward cache-filling full GETs,
+    but never unconditionally: a one-shot sparse read of a chunk whose
+    transfer dwarfs the round-trip must stay ranged."""
+    base = dl.MemoryProvider()
+    ds, vals = _chunked_ds(storage=base, n=300, chunk=1 << 15)
+    ds.commit("c")
+    s3 = dl.SimulatedS3Provider(base, time_scale=0, latency_s=0.002,
+                                bandwidth_bps=1e6)
+    chained = dl.Dataset(dl.chain(dl.MemoryProvider(), s3,
+                                  capacity_bytes=256 << 20))
+    t = chained._tensor("x")
+    chunk_bytes = max(base.num_bytes(t._chunk_key(n))
+                      for n in t.encoder.chunk_names())
+    s3.reset_stats()
+    got = t.read_batch([0])
+    np.testing.assert_array_equal(got[0], vals[0])
+    assert s3.stats["bytes_down"] < chunk_bytes
+    # dense reads through the same chain amortize into full cache fills
+    s3.reset_stats()
+    all_ = t.read_batch(np.arange(300))
+    for g, w in zip(all_, vals):
+        np.testing.assert_array_equal(g, w)
+    assert s3.stats["requests"] <= t.num_chunks + 2  # +VC chunk-set reads
+
+
+def test_sparse_read_batch_uses_ranged_requests():
+    """A few samples out of big chunks must NOT fetch whole chunks."""
+    base = dl.MemoryProvider()
+    ds, vals = _chunked_ds(storage=base, n=300, chunk=1 << 15)
+    ds.commit("c")
+    # bandwidth-dominated regime: skipping unneeded bytes beats saving a
+    # round-trip, so the cost model must pick ranged reads
+    s3 = dl.SimulatedS3Provider(base, time_scale=0, latency_s=1e-5,
+                                bandwidth_bps=1e6)
+    remote = dl.Dataset(s3)
+    t = remote._tensor("x")
+    chunk_bytes = max(s3.base.num_bytes(t._chunk_key(n))
+                      for n in t.encoder.chunk_names())
+    s3.reset_stats()
+    got = t.read_batch([0])
+    np.testing.assert_array_equal(got[0], vals[0])
+    assert s3.stats["bytes_down"] < chunk_bytes  # header probe + one range
+
+
+def test_discard_abandons_inflight_prefetch():
+    """A writer's discard() racing an in-flight prefetch must prevent the
+    completed fetch from re-admitting (now stale) bytes."""
+    gate = threading.Event()
+
+    class GatedProvider(dl.MemoryProvider):
+        def get(self, key):
+            gate.wait(timeout=5)
+            return super().get(key)
+
+    p = GatedProvider()
+    p.put("k", b"old")
+    eng = FetchEngine(p)
+    fut = eng.prefetch("k")
+    eng.discard("k")          # writer rewrote the key while fetch in flight
+    p.put("k", b"new-bytes")
+    gate.set()
+    try:
+        fut.result(timeout=5)  # may still deliver pre-rewrite bytes...
+    except Exception:
+        pass
+    time.sleep(0.1)            # let the done-callback run
+    assert eng.resident("k") is None      # ...but never admits them
+    assert eng.fetch_full("k") == b"new-bytes"
+    eng.close()
+
+
+def test_reflushed_open_chunk_invalidates_resident_blob():
+    """Regression: the open chunk is rewritten under the SAME key on every
+    flush; a resident blob parked by an earlier prefetch must be discarded
+    or later readers see a stale (shorter) chunk."""
+    base = dl.MemoryProvider()
+    s3 = dl.SimulatedS3Provider(base, time_scale=0)
+    ds = dl.Dataset(s3)
+    ds.create_tensor("x", dtype="float32")
+    for i in range(5):
+        ds.append({"x": np.full(4, i, np.float32)})
+    ds.flush()
+    t = ds._tensor("x")
+    key = t._chunk_key(t.encoder.name_of(0))
+    fetch.engine_for(s3).prefetch(key).result(timeout=5)  # park the 5-sample blob
+    for i in range(5, 10):
+        ds.append({"x": np.full(4, i, np.float32)})
+    ds.flush()                                            # same key, 10 samples
+    reader = dl.Dataset(s3)                               # shares the engine
+    got = reader._tensor("x").read_batch(np.arange(10))
+    for i, g in enumerate(got):
+        np.testing.assert_array_equal(g, np.full(4, i, np.float32))
+
+
+# ------------------------------------------------------- TQL + loader wiring
+def test_tql_verify_tail_one_request_per_chunk():
+    """The verify-heavy selective query fetches each verify chunk with one
+    request (prefetch in verdict order), identical result set."""
+    base = dl.MemoryProvider()
+    rng = np.random.default_rng(11)
+    ds = dl.Dataset(base)
+    ds.create_tensor("val", dtype="float32", min_chunk_size=1 << 11,
+                     max_chunk_size=1 << 12)
+    for i in range(1000):
+        band = i // 125
+        ds.append({"val": rng.standard_normal(16).astype(np.float32)
+                   + np.float32(50 * band)})
+    ds.commit("c")
+    q = "SELECT * FROM dataset WHERE MIN(val) > 330"
+    expect = ds.query(q, use_stats=False).indices.tolist()
+
+    s3 = dl.SimulatedS3Provider(base, time_scale=0)
+    remote = dl.Dataset(s3)
+    nchunks = remote._tensor("val").num_chunks
+    s3.reset_stats()
+    view = remote.query(q, engine="numpy", use_stats=True)
+    assert view.indices.tolist() == expect
+    # every request during WHERE is a whole-chunk fetch of a verify chunk
+    # (never one per sample); bound: one request per chunk of the tensor
+    assert s3.stats["requests"] <= nchunks
+    assert s3.stats["requests"] < len(expect)
+
+
+def test_loader_coalesced_requests_and_stats():
+    base = dl.MemoryProvider()
+    ds, vals = _chunked_ds(storage=base)
+    ds.commit("c")
+    s3 = dl.SimulatedS3Provider(base, time_scale=0)
+    remote = dl.Dataset(s3)
+    loader = remote.dataloader(batch_size=32, num_workers=4, seed=0)
+    s3.reset_stats()
+    labs = [int(x) for b in loader for x in b["lab"]]
+    assert labs == [i % 7 for i in range(300)]
+    assert s3.stats["requests"] < 300       # far fewer than one per sample
+    assert loader.stats.io_requests > 0
+    assert loader.stats.bytes_fetched > 0
+
+
+def test_loader_memory_timeout_resubmits_unit(monkeypatch):
+    """Regression (unit-drop bug): a MemoryBudget.acquire timeout must NOT
+    lose the unit — it is resubmitted and sequential iteration completes."""
+    from repro.core.scheduler import MemoryBudget
+
+    ds, _ = _chunked_ds(storage=None, n=64)
+    ds.commit("c")
+    loader = ds.dataloader(batch_size=8, num_workers=2, unit_size=8, seed=0)
+
+    real_acquire = MemoryBudget.acquire
+    failed = {"n": 0}
+
+    def flaky_acquire(self, nbytes, timeout=None):
+        if failed["n"] < 3:     # first few attempts time out immediately
+            failed["n"] += 1
+            return False
+        return real_acquire(self, nbytes, timeout=timeout)
+
+    monkeypatch.setattr(MemoryBudget, "acquire", flaky_acquire)
+    out: list = []
+    err: list = []
+
+    def run():
+        try:
+            out.extend(int(x) for b in loader for x in b["lab"])
+        except Exception as e:  # pragma: no cover - surfaced by main thread
+            err.append(e)
+
+    th = threading.Thread(target=run, daemon=True)
+    th.start()
+    th.join(timeout=30)
+    assert not th.is_alive(), "loader hung: dropped unit never re-fetched"
+    assert not err
+    assert out == [i % 7 for i in range(64)]
+    assert failed["n"] == 3

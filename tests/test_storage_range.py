@@ -110,3 +110,116 @@ def test_ranges_match_full_get_suffixes(provider):
     for s in (0, 1, 5, 9, 10, 15):
         for e in (0, 1, 5, 10, 11, 100):
             assert provider.get_range("obj", s, e) == full[s:e], (s, e)
+
+
+# --------------------------------------------------- batched reads (get_ranges)
+# boundary cases: adjacent, overlapping, gap, tail-clamped, zero-length,
+# inverted, past-the-end, duplicates, unsorted input
+BOUNDARY_RANGE_SETS = [
+    [(0, 3), (3, 6)],                      # adjacent: must merge cleanly
+    [(0, 5), (3, 8)],                      # overlapping
+    [(0, 2), (8, 10)],                     # interior gap
+    [(8, 100)],                            # tail-clamped
+    [(3, 3), (0, 0), (10, 10)],            # zero-length only
+    [(7, 3)],                              # inverted -> b""
+    [(10, 20), (50, 60)],                  # entirely past the end
+    [(2, 5), (2, 5), (2, 5)],              # duplicates
+    [(6, 9), (0, 2), (4, 5)],              # unsorted input order
+    [(0, 4), (4, 4), (4, 10), (9, 100)],   # mixed everything
+]
+
+
+@pytest.mark.parametrize("ranges", BOUNDARY_RANGE_SETS)
+def test_get_ranges_equals_per_range_calls(provider, ranges):
+    """Coalescing equivalence: get_ranges payloads are byte-identical to
+    one get_range call per requested range, in input order."""
+    want = [provider.get_range("obj", s, e) for s, e in ranges]
+    assert provider.get_ranges("obj", ranges) == want
+
+
+def test_get_ranges_empty_list_is_free(provider):
+    assert provider.get_ranges("obj", []) == []
+    assert provider.get_ranges("missing-key", []) == []  # not even validated
+
+
+def test_get_ranges_missing_key_raises(provider):
+    with pytest.raises(dl.StorageError):
+        provider.get_ranges("nope", [(0, 4)])
+    with pytest.raises(dl.StorageError):
+        provider.get_ranges("nope", [(3, 3)])  # zero-length still validates
+
+
+def test_get_many_matches_individual_gets(provider):
+    provider.put("obj2", b"abc")
+    out = provider.get_many(["obj", "obj2", "obj"])  # duplicate deduped
+    assert out == {"obj": PAYLOAD, "obj2": b"abc"}
+    with pytest.raises(dl.StorageError):
+        provider.get_many(["obj", "nope"])
+
+
+def test_coalesce_ranges_helper():
+    spans, assign = dl.coalesce_ranges([(0, 3), (3, 6), (10, 12)], gap=0)
+    assert spans == [(0, 6), (10, 12)]
+    assert assign == [0, 0, 1]
+    # the gap threshold bridges near ranges but not far ones
+    spans, _ = dl.coalesce_ranges([(0, 2), (5, 7), (30, 31)], gap=3)
+    assert spans == [(0, 7), (30, 31)]
+    # inverted ranges are zero-length at start; input order is preserved
+    spans, assign = dl.coalesce_ranges([(9, 2), (0, 1)], gap=100)
+    assert spans == [(0, 9)]
+    assert assign == [0, 0]
+
+
+def test_s3_get_ranges_charges_one_request_per_coalesced_span():
+    s3 = dl.SimulatedS3Provider(time_scale=0)   # threshold >> object size
+    s3.put("obj", PAYLOAD)
+    s3.reset_stats()
+    out = s3.get_ranges("obj", [(0, 2), (4, 6), (8, 10)])
+    assert out == [b"01", b"45", b"89"]
+    assert s3.stats["requests"] == 1            # one span covers all three
+    assert s3.stats["coalesced_requests"] == 1
+    assert s3.stats["batched_ranges"] == 3
+    assert s3.stats["bytes_down"] == 10         # gap bytes are downloaded
+
+
+def test_s3_get_ranges_respects_gap_threshold():
+    # threshold = latency * bandwidth = 0.01 * 100 = 1 byte
+    s3 = dl.SimulatedS3Provider(time_scale=0, latency_s=0.01,
+                                bandwidth_bps=100)
+    s3.put("obj", PAYLOAD)
+    assert s3.gap_threshold() == 1
+    s3.reset_stats()
+    out = s3.get_ranges("obj", [(0, 2), (3, 5), (8, 10)])  # gaps: 1, 3
+    assert out == [b"01", b"34", b"89"]
+    assert s3.stats["coalesced_requests"] == 2  # (0,5) merged, (8,10) apart
+    assert s3.stats["bytes_down"] == 5 + 2
+
+
+def test_s3_metadata_requests_are_charged():
+    """exists/num_bytes are zero-byte round-trips, not free (§2.3: request
+    count dominates object-store cost)."""
+    s3 = dl.SimulatedS3Provider(time_scale=0)
+    s3.put("obj", PAYLOAD)
+    s3.reset_stats()
+    assert s3.exists("obj")
+    assert not s3.exists("nope")
+    assert s3.num_bytes("obj") == 10
+    assert s3.stats["requests"] == 3
+    assert s3.stats["meta_requests"] == 3
+    assert s3.stats["bytes_down"] == 0
+    assert s3.stats["sim_seconds"] == pytest.approx(3 * s3.latency_s)
+
+
+def test_lru_get_ranges_served_from_cached_object():
+    s3 = dl.SimulatedS3Provider(time_scale=0)
+    lru = dl.LRUCacheProvider(s3, capacity_bytes=1 << 10)
+    lru.put("obj", PAYLOAD)
+    s3.reset_stats()
+    assert lru.get_ranges("obj", [(0, 2), (5, 100), (3, 3)]) == \
+        [b"01", b"56789", b""]
+    assert s3.stats["requests"] == 0
+    # a miss passes through batched without filling the cache
+    s3.base.put("cold", PAYLOAD)
+    assert lru.get_ranges("cold", [(0, 2), (4, 6)]) == [b"01", b"45"]
+    assert s3.stats["coalesced_requests"] == 1
+    assert lru.get_many(["obj", "cold"]) == {"obj": PAYLOAD, "cold": PAYLOAD}
