@@ -103,11 +103,14 @@ def main() -> List[str]:
                 xs = np.stack([file_store_read(s3, int(j)) for j in sel])
                 yield xs, labs_arr[sel]
 
+    from . import io_report
+
     s3.reset_stats()
     params, step = _train_step_fn()
     compute = _consume(params, step, filemode_batches())
     wall_b = compute + s3.stats["sim_seconds"]   # sequential: IO adds up
-    filemode_stats = dict(s3.stats)
+    # snapshot BEFORE the fast-file section resets the shared provider
+    filemode_stats = io_report.provider_snapshot(s3)
     lines.append(row("fig6_s3_filemode", wall_b / STEPS * 1e6,
                      f"slowdown{wall_b / local_wall:.1f}x"))
 
@@ -127,6 +130,8 @@ def main() -> List[str]:
     params, step = _train_step_fn()
     compute = _consume(params, step, fastfile_batches())
     wall_c = compute + s3.stats["sim_seconds"] / 8   # 8-way overlapped IO
+    # snapshot too (earlier revisions dropped this section's stats)
+    fastfile_stats = io_report.provider_snapshot(s3)
     lines.append(row("fig6_s3_fastfile", wall_c / STEPS * 1e6,
                      f"slowdown{wall_c / local_wall:.1f}x"))
 
@@ -158,12 +163,10 @@ def main() -> List[str]:
                      f"down{s3b.stats['bytes_down']}_"
                      f"sim{s3b.stats['sim_seconds']:.3f}"))
 
-    from . import io_report
-    keys = ("requests", "ranged_requests", "coalesced_requests",
-            "meta_requests", "bytes_down", "sim_seconds")
     io_report.record("fig6_streaming_train", {
-        "s3_filemode": {k: filemode_stats[k] for k in keys},
-        "deeplake_stream": {k: s3b.stats[k] for k in keys},
+        "s3_filemode": filemode_stats,
+        "s3_fastfile": fastfile_stats,
+        "deeplake_stream": io_report.provider_snapshot(s3b),
         "walls": {"local_s": local_wall, "filemode_s": wall_b,
                   "fastfile_s": wall_c, "deeplake_s": wall_d},
         "loader": {"io_requests": loader.stats.io_requests,

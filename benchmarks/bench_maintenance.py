@@ -1,0 +1,160 @@
+"""Cold-open budget + maintenance smoke benchmark (manifest subsystem).
+
+Measures and GATES the manifest's reason to exist:
+
+* **cold_open** — opening a committed multi-tensor dataset over simulated
+  S3 must cost at most ``COLD_OPEN_BUDGET`` storage requests with a
+  manifest (pointer + consolidated segment = 2), vs ``~2 + 6·n_tensors``
+  for the legacy per-file layout.  Both datapoints go to ``BENCH_io.json``
+  so the trajectory is tracked across PRs; the budget is a hard assert —
+  ``scripts/check.sh`` fails when a regression pushes the manifest open
+  over budget or shrinks the legacy/manifest gap below 3x.
+
+* **maintenance_smoke** — the three maintenance jobs run end-to-end on a
+  pre-stats copy of the same dataset: backfill must restore the native
+  prune verdicts exactly (planner parity, byte-identical rows), the GC
+  dry-run must flag a planted orphan without deleting anything, and
+  compaction must collapse the manifest back to the 2-request open.
+
+Run: ``python -m benchmarks.bench_maintenance --smoke`` (also the
+check.sh gate; the full mode just prints the same rows).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+import repro.core as dl
+from repro.core.manifest import MANIFEST_KEY, SEGMENT_PREFIX
+
+from . import io_report
+from .common import Timer, row
+
+N_TENSORS = 4
+N_ROWS = 400
+COLD_OPEN_BUDGET = 3        # requests; acceptance criterion from ISSUE 3
+QUERY = "SELECT * FROM dataset WHERE MIN(t0) > 1200"
+
+
+def _build(storage):
+    rng = np.random.default_rng(23)
+    ds = dl.Dataset(storage)
+    for j in range(N_TENSORS):
+        ds.create_tensor(f"t{j}", dtype="float32", min_chunk_size=1 << 11,
+                         max_chunk_size=1 << 12)
+    for i in range(N_ROWS):
+        band = i // 25
+        ds.append({f"t{j}": (rng.standard_normal(8).astype(np.float32)
+                             + np.float32(100 * band + j))
+                   for j in range(N_TENSORS)})
+    ds.commit("bench fixture")
+    return ds
+
+
+def _cold_open_stats(base):
+    s3 = dl.SimulatedS3Provider(base, time_scale=0.0)
+    with Timer() as t:
+        ds = dl.Dataset(s3)
+        for name in ds.tensor_names:
+            assert len(ds[name]) == N_ROWS
+    return io_report.provider_snapshot(s3), t.elapsed
+
+
+def _strip_manifest(base):
+    base.delete(MANIFEST_KEY)
+    for key in list(base.list_keys(SEGMENT_PREFIX)):
+        base.delete(key)
+
+
+def _strip_stats(base):
+    for key in list(base.list_keys()):
+        if key.endswith("chunk_stats.json"):
+            base.delete(key)
+
+
+def main() -> List[str]:
+    lines = []
+    base = dl.MemoryProvider()
+    native = _build(base)
+    native_view = native.query(QUERY, use_stats=True)
+    native_plan = native_view.scan_plan
+    native_rows = native_view.indices.tolist()
+
+    # ---- cold-open budget: manifest vs legacy ---------------------------
+    manifest_stats, wall_m = _cold_open_stats(base)
+    legacy_base = dl.MemoryProvider()
+    _build(legacy_base)
+    _strip_manifest(legacy_base)
+    legacy_stats, wall_l = _cold_open_stats(legacy_base)
+    lines.append(row("cold_open_manifest", wall_m * 1e6,
+                     f"req{manifest_stats['requests']}"
+                     f"_meta{manifest_stats['meta_requests']}"
+                     f"_sim{manifest_stats['sim_seconds']:.3f}"))
+    lines.append(row("cold_open_legacy", wall_l * 1e6,
+                     f"req{legacy_stats['requests']}"
+                     f"_meta{legacy_stats['meta_requests']}"
+                     f"_sim{legacy_stats['sim_seconds']:.3f}"))
+    assert manifest_stats["requests"] <= COLD_OPEN_BUDGET, (
+        f"cold open with manifest took {manifest_stats['requests']} requests "
+        f"(budget {COLD_OPEN_BUDGET})")
+    assert legacy_stats["requests"] >= 3 * manifest_stats["requests"], (
+        f"manifest gain fell under 3x: legacy {legacy_stats['requests']} vs "
+        f"manifest {manifest_stats['requests']}")
+    io_report.record("cold_open", {
+        "manifest": manifest_stats, "legacy": legacy_stats,
+        "budget": {"requests_budget": COLD_OPEN_BUDGET,
+                   "n_tensors": N_TENSORS}})
+
+    # ---- maintenance smoke: backfill -> prune parity --------------------
+    pre_base = dl.MemoryProvider()
+    _build(pre_base)
+    _strip_manifest(pre_base)
+    _strip_stats(pre_base)
+    pre = dl.Dataset(pre_base)
+    unpruned = pre.query(QUERY, use_stats=True)
+    assert unpruned.scan_plan["rows_pruned"] == 0, "pre-stats ds pruned?!"
+    with Timer() as t:
+        backfill = pre.maintenance().backfill_stats()
+    pruned_view = pre.query(QUERY, use_stats=True)
+    assert pruned_view.indices.tolist() == native_rows, \
+        "backfill changed query results"
+    for k in ("rows_pruned", "rows_sure", "rows_verify", "chunks_pruned"):
+        assert pruned_view.scan_plan[k] == native_plan[k], (
+            f"backfill prune verdict mismatch on {k}: "
+            f"{pruned_view.scan_plan[k]} != {native_plan[k]}")
+    lines.append(row("maintenance_backfill", t.elapsed * 1e6,
+                     f"chunks{backfill.details['chunks_backfilled']}"
+                     f"_pruned{pruned_view.scan_plan['rows_pruned']}"))
+
+    # ---- maintenance smoke: GC dry-run + compaction ---------------------
+    orphan_key = f"versions/{pre.commit_id}/tensors/t0/chunks/cdeadbeef"
+    pre_base.put(orphan_key, b"orphan payload")
+    with Timer() as t:
+        gc_report = pre.maintenance().gc_orphans(dry_run=True)
+    assert orphan_key in gc_report.actions, "GC dry-run missed the orphan"
+    assert pre_base.exists(orphan_key), "dry-run deleted!"
+    lines.append(row("maintenance_gc_dryrun", t.elapsed * 1e6,
+                     f"orphans{gc_report.details['orphans']}"
+                     f"_live{gc_report.details['chunks_live']}"))
+    with Timer() as t:
+        pre.maintenance().compact_manifest()
+    compacted_stats, _ = _cold_open_stats(pre_base)
+    assert compacted_stats["requests"] <= COLD_OPEN_BUDGET
+    lines.append(row("maintenance_compaction", t.elapsed * 1e6,
+                     f"openreq{compacted_stats['requests']}"))
+    io_report.record("maintenance_smoke", {
+        "backfill": {"chunks_backfilled":
+                     backfill.details["chunks_backfilled"],
+                     "rows_pruned_after":
+                     pruned_view.scan_plan["rows_pruned"]},
+        "gc_dryrun": {k: gc_report.details[k]
+                      for k in ("orphans", "chunks_live",
+                                "bytes_reclaimable")},
+        "compacted_cold_open": compacted_stats})
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))  # --smoke and full mode are identical here

@@ -16,6 +16,18 @@ File layout (repo root ``BENCH_io.json``)::
         ]}}
 
 Every leaf value except "ts" must be a number or a flat dict of numbers.
+
+Provider stat snapshots
+-----------------------
+
+Benches must record provider stats through :func:`provider_snapshot`,
+taken immediately after the measured section and *before* any
+``reset_stats()`` — earlier revisions hand-picked stat keys at record
+time, which silently dropped ``batched_ranges`` from every datapoint and
+recorded zeros for sections whose stats had already been reset.  The
+snapshot copies every numeric counter the provider exposes, so new
+provider stats (``batched_ranges``, ``cas_requests``, ...) appear in
+``BENCH_io.json`` automatically.
 """
 
 from __future__ import annotations
@@ -29,6 +41,16 @@ PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
                     "BENCH_io.json")
 SCHEMA = 1
 MAX_HISTORY = 20
+
+
+def provider_snapshot(provider) -> Dict[str, float]:
+    """Point-in-time copy of a cost-bearing provider's stats counters.
+
+    Take it right after the measured section, before the provider is
+    reused or ``reset_stats()`` runs; the copy is safe to record later.
+    """
+    return {k: v for k, v in provider.stats.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)}
 
 
 def record(bench: str, datapoint: Dict[str, dict], path: str = PATH) -> None:

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # One-command gate: tier-1 test suite + TQL pruning/coalescing benchmark
-# (smoke mode) + BENCH_io.json structural validation.
+# (smoke mode) + cold-open budget & maintenance smoke (backfill ->
+# prune-parity, GC dry-run, compaction) + BENCH_io.json validation.
 # Usage: scripts/check.sh  (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -12,6 +13,9 @@ python -m pytest -x -q
 
 echo "== TQL pruning + coalesced-I/O benchmark (smoke) =="
 python -m benchmarks.bench_tql --smoke
+
+echo "== cold-open budget + maintenance smoke =="
+python -m benchmarks.bench_maintenance --smoke
 
 echo "== BENCH_io.json validation =="
 python -m benchmarks.io_report --validate

@@ -8,6 +8,8 @@ from .dataset import Dataset, Group, MergeConflict, dataset, empty_like
 from .fetch import (FetchEngine, coalescing_disabled, coalescing_enabled,
                     engine_for)
 from .htypes import available_htypes, get_htype, parse_htype
+from .maintenance import MaintenanceReport, MaintenanceRunner
+from .manifest import Manifest, ManifestConflict
 from .storage import (LocalProvider, LRUCacheProvider, MemoryProvider,
                       SimulatedS3Provider, StorageError, StorageProvider,
                       chain, coalesce_ranges, storage_from_path)
@@ -17,7 +19,8 @@ from .views import DatasetView, TensorView
 
 __all__ = [
     "ChunkBuilder", "ChunkEncoder", "Dataset", "DatasetView", "FetchEngine",
-    "Group", "LRUCacheProvider", "LocalProvider", "MemoryProvider",
+    "Group", "LRUCacheProvider", "LocalProvider", "MaintenanceReport",
+    "MaintenanceRunner", "Manifest", "ManifestConflict", "MemoryProvider",
     "MergeConflict", "SimulatedS3Provider", "StorageError",
     "StorageProvider", "Tensor", "TensorMeta", "TensorView",
     "VersionControl", "available_codecs", "available_htypes", "chain",

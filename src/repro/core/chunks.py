@@ -28,8 +28,11 @@ Alongside the wire format, each :class:`ChunkBuilder` accumulates a
 true range), NaN and non-zero element counts, total element count, the
 smallest per-sample element count (``min_elems`` — 0 means the chunk may hold
 empty samples), sample count and payload byte size.  Samples the builder
-cannot inspect (tile descriptors, undecodable payloads) flip ``exact`` to
-False, which tells the query planner to treat the chunk as unknown.
+cannot inspect (undecodable payloads, or tile descriptors absorbed without
+their source array — e.g. a copy-on-write chunk rewrite) flip ``exact`` to
+False, which tells the query planner to treat the chunk as unknown.  On the
+append path tiled samples stay exact: the tensor hands the builder the
+reassembled array a reader would decode.
 
 Stats are persisted per tensor per version as a JSON sidecar under the
 existing :class:`~repro.core.storage.StorageProvider` key protocol:
@@ -79,8 +82,9 @@ class ChunkStats:
 
     ``lo``/``hi`` bound every non-NaN element of every sample in the chunk
     (None when the chunk holds no inspectable numeric values).  ``exact`` is
-    False when at least one sample could not be inspected (tile descriptor or
-    undecodable payload) — the planner must then treat the chunk as unknown.
+    False when at least one sample could not be inspected (undecodable
+    payload, or a tile descriptor seen without its source array) — the
+    planner must then treat the chunk as unknown.
     """
 
     count: int = 0          # samples
@@ -266,15 +270,20 @@ class ChunkBuilder:
                    source: Optional[np.ndarray] = None) -> int:
         """Append a pre-encoded payload (used for tile descriptors / copies).
 
-        ``source`` is the decoded array the payload was encoded from, when the
-        caller still has it in hand: for lossless codecs its stats equal the
-        payload's, so passing it skips a decode on the ingest hot path.  Lossy
-        codecs always re-decode — stats must bound what queries will read.
+        ``source`` is the decoded array the payload represents, when the
+        caller still has it in hand.  For lossless non-tiled payloads its
+        stats equal the payload's, so passing it skips a decode on the
+        ingest hot path (lossy codecs re-decode — stats must bound what
+        queries will read).  For FLAG_TILED payloads the caller guarantees
+        ``source`` is the array a reader reassembles from the tiles
+        (``Tensor._write_tiled`` hands back the lossy round-trip), which
+        keeps tiled chunks *exact* instead of degrading them to planner
+        'verify'.
         """
         payload = bytes(payload)
         self._append_payload(payload, shape, flags)
-        if source is not None and not flags & FLAG_TILED \
-                and not self._codec.lossy:
+        if source is not None and (flags & FLAG_TILED
+                                   or not self._codec.lossy):
             self._stats.observe(source)
         else:
             self._observe_payload(payload, shape, flags)

@@ -14,6 +14,7 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
 
 import numpy as np
 
+from . import manifest as manifestlib
 from .htypes import get_htype, parse_htype
 from .storage import (MemoryProvider, StorageError, StorageProvider,
                       storage_from_path)
@@ -55,10 +56,30 @@ class Dataset:
         elif isinstance(storage, str):
             storage = storage_from_path(storage)
         self.storage = storage
-        if storage.get_or_none(DS_META_KEY) is None:
-            storage.put(DS_META_KEY, json.dumps({"format": "deeplake-repro-v1"}).encode())
-        self.vc = VersionControl(storage)
+        # manifest-first cold open: the pointer (one GET) carries the format
+        # marker and the version tree; its segments carry all per-tensor
+        # state, so no per-file probing happens at all.  Legacy datasets
+        # (no pointer) keep the per-file path and adopt a manifest on their
+        # next commit or via maintenance compaction.
+        m = manifestlib.Manifest.load(storage)
+        if m is None and storage.get_or_none(DS_META_KEY) is None:
+            # brand-new dataset: manifest-native from birth
+            storage.put(DS_META_KEY,
+                        json.dumps({"format": "deeplake-repro-v1"}).encode())
+            m = manifestlib.Manifest.create(storage)
+        self.vc = VersionControl(storage, manifest=m)
         self._tensors: Dict[str, Tensor] = {}
+
+    @property
+    def manifest(self):
+        """The dataset manifest (None on a legacy per-file dataset)."""
+        return self.vc.manifest
+
+    def maintenance(self) -> "maintenance.MaintenanceRunner":
+        """Background-maintenance entry point: stats backfill, manifest
+        compaction, orphan-chunk GC (:mod:`repro.core.maintenance`)."""
+        from . import maintenance
+        return maintenance.MaintenanceRunner(self)
 
     # ----------------------------------------------------------------- schema
     @property

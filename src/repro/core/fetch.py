@@ -342,8 +342,16 @@ class FetchEngine:
             counters["bytes"] += nbytes
         return slice_spans(ranges, spans, assign, payloads)
 
-    def fetch_many(self, keys: Sequence[str]) -> Dict[str, bytes]:
-        """Batched whole-object reads (tile fan-out), resident aware."""
+    def fetch_many(self, keys: Sequence[str],
+                   counters: Optional[Dict[str, int]] = None
+                   ) -> Dict[str, bytes]:
+        """Batched whole-object reads (tile fan-out, manifest segment
+        prefetch on ``Dataset`` open), resident aware.  ``counters``, when
+        given, accumulates the physical ``requests``/``bytes`` issued —
+        the cold-open budget accounting reads them."""
+        if counters is not None:
+            counters.setdefault("requests", 0)
+            counters.setdefault("bytes", 0)
         out: Dict[str, bytes] = {}
         missing: List[str] = []
         for k in keys:
@@ -357,9 +365,12 @@ class FetchEngine:
         if missing:
             t0 = time.perf_counter()
             fetched = self.provider.get_many(missing)
-            self._observe(len(fetched), 0,
-                          sum(len(v) for v in fetched.values()),
+            nbytes = sum(len(v) for v in fetched.values())
+            self._observe(len(fetched), 0, nbytes,
                           time.perf_counter() - t0)
+            if counters is not None:
+                counters["requests"] += len(fetched)
+                counters["bytes"] += nbytes
             out.update(fetched)
         return out
 

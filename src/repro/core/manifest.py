@@ -1,0 +1,399 @@
+"""Dataset manifest: one-object catalogs for cold opens (§4.1 ACID commits).
+
+The paper's lakehouse promise — ACID ingestion, time travel, petabyte
+catalogs on object storage — needs a *consolidated* commit manifest: without
+one, every cold ``Dataset`` open issues one GET per per-tensor state file
+(meta, chunk encoder, sample ids, stats sidecar, chunk set, commit diff),
+which is the dominant request class on small queries.  This module follows
+the Delta-style consolidated-log design: a tiny *pointer* object that is
+compare-and-swapped on every publication, plus immutable *segment* objects
+holding complete per-node state snapshots.
+
+Storage layout (keys relative to the dataset root)
+--------------------------------------------------
+
+::
+
+    manifest.json                       # the POINTER (mutable, CAS-guarded)
+    manifests/seg-{gen:08d}-{rand}.json # SEGMENTS (immutable, write-once)
+
+Pointer schema::
+
+    {"format":     "deeplake-repro-manifest-v1",
+     "generation": <int, bumped by every successful CAS>,
+     "segments":   [<segment key>, ...],   # newest first
+     "vc":         {...} | null,           # version_control_info snapshot
+     "stale":      [<node id>, ...]}       # nodes whose loose files win
+
+Segment schema::
+
+    {"format": "deeplake-repro-manifest-v1",
+     "nodes": {<node id>: {"schema": [<tensor>, ...],
+                           "tensors": {<tensor>: {<state file>: b64|null}}}}}
+
+Each segment entry is a **complete snapshot of one commit node**: the raw
+bytes of every per-tensor state file (``meta.json``, ``chunk_encoder``,
+``sample_ids``, ``chunk_stats.json``, ``chunk_set.json``,
+``commit_diff.json``), base64-encoded.  Folding segments newest-first with
+whole-node replacement therefore reconstructs the catalog exactly; the
+loose per-file layout stays on storage untouched, so legacy readers (and
+the fallback path) always see a complete dataset.
+
+CAS protocol (optimistic concurrency)
+-------------------------------------
+
+Every pointer mutation goes through ``StorageProvider.cas`` with the last
+observed pointer bytes as ``expected``:
+
+* **commit** (`commit_update`): write the new segment object first (it is
+  unreachable until published, so a crash leaves only an orphan for GC),
+  then CAS the pointer with the segment prepended, the new version-tree
+  snapshot, and the published nodes removed from ``stale``.  A lost CAS
+  reloads the pointer; if another writer advanced *any* branch head in the
+  meantime the commit raises :class:`ManifestConflict` — the paper's ACID
+  ingestion semantics (exactly one concurrent committer wins; losers
+  surface a conflict and may re-open and retry).
+* **pointer-only updates** (`update_vc`, `mark_stale`) reload-merge-retry:
+  they cannot invalidate another writer's publication, so losing the race
+  just means reapplying the mutation to the fresh pointer.
+
+Staleness (write-ahead invalidation)
+------------------------------------
+
+Committed nodes never change, so their manifest snapshots are valid
+forever.  The writable head *does* change between commits: before the
+first loose state write to a node the manifest currently covers,
+``VersionControl.put_state`` calls :meth:`Manifest.mark_stale`, which
+CASes the node onto the pointer's ``stale`` list *before* the loose write
+lands.  Readers treat stale nodes as uncovered and fall back to the loose
+per-file layout, so a concurrently-opened ``Dataset`` can never read a
+superseded snapshot.  The next commit republishes the node and clears the
+flag.
+
+Consolidation
+-------------
+
+``commit_update`` folds the whole in-memory catalog into a single
+consolidated segment whenever the encoded payload stays under
+``AUTO_CONSOLIDATE_BYTES`` or the delta chain exceeds
+``MAX_DELTA_SEGMENTS`` (the Delta-checkpoint pattern); otherwise it
+appends an incremental delta segment.  The ``compact_manifest``
+maintenance job (:mod:`.maintenance`) performs the same fold on demand and
+re-adopts stale/uncovered nodes from loose files.  Superseded segment
+objects are left behind deliberately — they are unreachable from the
+pointer and the orphan GC sweeps them.
+
+Cold-open request budget
+------------------------
+
+Opening a manifest dataset costs ``1 (pointer GET) + len(segments)``
+requests for *all* catalog state — ``ds_meta.json`` is implied by the
+pointer's format marker and the version tree rides inside the pointer, so
+a consolidated dataset opens in **2 requests** regardless of tensor count
+(vs ``~2 + 6·n_tensors`` for the legacy layout).  Segment reads go through
+:meth:`FetchEngine.fetch_many <repro.core.fetch.FetchEngine.fetch_many>`
+so they are batched, observed by the engine's cost EWMA, and accounted in
+``Manifest.open_stats``.
+"""
+
+from __future__ import annotations
+
+import base64
+import json
+import uuid
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set
+
+from .storage import StorageError, StorageProvider
+
+MANIFEST_KEY = "manifest.json"
+SEGMENT_PREFIX = "manifests/"
+FORMAT = "deeplake-repro-manifest-v1"
+
+#: fold to a single consolidated segment while the payload stays this small
+AUTO_CONSOLIDATE_BYTES = 4 << 20
+#: ... or whenever the delta chain grows past this many segments
+MAX_DELTA_SEGMENTS = 8
+#: pointer CAS attempts for reload-merge-retry updates before giving up
+CAS_RETRIES = 8
+
+
+class ManifestConflict(RuntimeError):
+    """A concurrent writer won the manifest-pointer CAS race."""
+
+
+def _b64e(data: Optional[bytes]) -> Optional[str]:
+    return None if data is None else base64.b64encode(data).decode("ascii")
+
+
+def _b64d(s: Optional[str]) -> Optional[bytes]:
+    return None if s is None else base64.b64decode(s.encode("ascii"))
+
+
+@dataclass
+class NodeState:
+    """Complete state snapshot of one commit node: schema + raw state-file
+    bytes per tensor (``None`` marks a file the node never wrote)."""
+
+    schema: List[str] = field(default_factory=list)
+    tensors: Dict[str, Dict[str, Optional[bytes]]] = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {"schema": list(self.schema),
+                "tensors": {t: {f: _b64e(b) for f, b in files.items()}
+                            for t, files in self.tensors.items()}}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "NodeState":
+        return cls(schema=list(d.get("schema", [])),
+                   tensors={t: {f: _b64d(s) for f, s in files.items()}
+                            for t, files in d.get("tensors", {}).items()})
+
+
+def _new_segment_key(generation: int) -> str:
+    return f"{SEGMENT_PREFIX}seg-{generation:08d}-{uuid.uuid4().hex[:8]}.json"
+
+
+class Manifest:
+    """In-memory fold of the pointer + its segment chain for one dataset.
+
+    Owned by :class:`~repro.core.version_control.VersionControl`; all
+    catalog reads/writes route through it when present.  See the module
+    docstring for the wire format and CAS protocol.
+    """
+
+    def __init__(self, storage: StorageProvider, pointer: dict,
+                 pointer_raw: bytes, nodes: Dict[str, NodeState],
+                 open_stats: Optional[Dict[str, int]] = None) -> None:
+        self.storage = storage
+        self.generation: int = int(pointer.get("generation", 0))
+        self.segments: List[str] = list(pointer.get("segments", []))
+        self.vc_info: Optional[dict] = pointer.get("vc")
+        self.stale: Set[str] = set(pointer.get("stale", []))
+        self.nodes = nodes
+        self._pointer_raw = pointer_raw
+        # branch heads as this writer last published or loaded them; every
+        # vc-publishing update compares the persisted pointer against this
+        # (NOT against the raw CAS token, which benign retries refresh) so
+        # a foreign commit can never be silently clobbered
+        self._observed_branches: Dict[str, str] = dict(
+            (pointer.get("vc") or {}).get("branches", {}))
+        #: request accounting of the open path (pointer + segment reads)
+        self.open_stats: Dict[str, int] = open_stats or {"requests": 0,
+                                                         "bytes": 0}
+
+    # ------------------------------------------------------------- open path
+    @classmethod
+    def load(cls, storage: StorageProvider) -> Optional["Manifest"]:
+        """Fold the pointer + segments into a catalog; None = no manifest.
+
+        The segment chain is fetched as ONE :meth:`FetchEngine.fetch_many`
+        batch (the manifest prefetch of the cold-open path); newer segments
+        replace older ones whole-node.
+        """
+        raw = storage.get_or_none(MANIFEST_KEY)
+        if raw is None:
+            return None
+        pointer = json.loads(raw.decode())
+        if pointer.get("format") != FORMAT:
+            raise StorageError(f"unsupported manifest format: "
+                               f"{pointer.get('format')!r}")
+        counters = {"requests": 1, "bytes": len(raw)}
+        nodes: Dict[str, NodeState] = {}
+        seg_keys = list(pointer.get("segments", []))
+        if seg_keys:
+            from . import fetch  # lazy: keep storage-only users import-light
+            blobs = fetch.engine_for(storage).fetch_many(seg_keys,
+                                                         counters=counters)
+            for key in reversed(seg_keys):  # oldest first; newest wins
+                seg = json.loads(blobs[key].decode())
+                for nid, nd in seg.get("nodes", {}).items():
+                    nodes[nid] = NodeState.from_json(nd)
+        return cls(storage, pointer, raw, nodes, open_stats=counters)
+
+    @classmethod
+    def create(cls, storage: StorageProvider) -> "Manifest":
+        """Bootstrap an empty manifest pointer (brand-new dataset).
+
+        Races with a concurrent creator resolve by loading theirs.
+        """
+        pointer = {"format": FORMAT, "generation": 0, "segments": [],
+                   "vc": None, "stale": []}
+        raw = json.dumps(pointer, sort_keys=True).encode()
+        if storage.cas(MANIFEST_KEY, raw, None):
+            return cls(storage, pointer, raw, {})
+        existing = cls.load(storage)
+        assert existing is not None
+        return existing
+
+    # ------------------------------------------------------------- coverage
+    def covers(self, node_id: str) -> bool:
+        """True when the manifest snapshot of ``node_id`` is authoritative
+        (present and not invalidated by a loose write)."""
+        return node_id in self.nodes and node_id not in self.stale
+
+    def node_schema(self, node_id: str) -> Optional[List[str]]:
+        ns = self.nodes.get(node_id)
+        return None if ns is None else list(ns.schema)
+
+    def state_bytes(self, node_id: str, tensor: str,
+                    fname: str) -> Optional[bytes]:
+        """Raw bytes of one state file from the covered snapshot (None when
+        the node never wrote it — an authoritative miss, not a fallback)."""
+        ns = self.nodes.get(node_id)
+        if ns is None:
+            return None
+        return ns.tensors.get(tensor, {}).get(fname)
+
+    # ------------------------------------------------------- pointer updates
+    def _pointer_dict(self) -> dict:
+        return {"format": FORMAT, "generation": self.generation,
+                "segments": list(self.segments), "vc": self.vc_info,
+                "stale": sorted(self.stale)}
+
+    def _apply_pointer(self, pointer: dict, raw: bytes) -> None:
+        self.generation = int(pointer.get("generation", 0))
+        self.segments = list(pointer.get("segments", []))
+        self.vc_info = pointer.get("vc")
+        self.stale = set(pointer.get("stale", []))
+        self._pointer_raw = raw
+
+    def _cas_update(self, mutate: Callable[[dict], dict],
+                    what: str) -> None:
+        """Reload-merge-retry pointer update: ``mutate`` receives the
+        freshest pointer dict and returns the successor (it may raise
+        :class:`ManifestConflict` when its preconditions broke)."""
+        expected = self._pointer_raw
+        pointer = json.loads(expected.decode())
+        for _ in range(CAS_RETRIES):
+            new_pointer = mutate(pointer)
+            new_pointer["generation"] = int(pointer.get("generation", 0)) + 1
+            raw = json.dumps(new_pointer, sort_keys=True).encode()
+            if self.storage.cas(MANIFEST_KEY, raw, expected):
+                self._apply_pointer(new_pointer, raw)
+                return
+            expected = self.storage.get(MANIFEST_KEY)  # lost: reload, retry
+            pointer = json.loads(expected.decode())
+        raise ManifestConflict(
+            f"manifest pointer update ({what}) lost the CAS race "
+            f"{CAS_RETRIES} times")
+
+    def _check_branches(self, pointer: dict, what: str) -> None:
+        """Raise :class:`ManifestConflict` when the persisted pointer shows
+        branch heads this writer has never observed (a foreign commit)."""
+        cur = (pointer.get("vc") or {}).get("branches", {})
+        if cur and cur != self._observed_branches:
+            raise ManifestConflict(
+                f"{what} lost: a concurrent writer moved a branch head "
+                f"(persisted {cur}, last observed {self._observed_branches})")
+
+    def update_vc(self, vc_info: dict) -> None:
+        """Publish a new version-tree snapshot (checkout, flush, ...).
+        Conflicts with a concurrent committer rather than clobbering it."""
+        def mutate(p: dict) -> dict:
+            self._check_branches(p, "vc publish")
+            out = dict(p)
+            out["vc"] = vc_info
+            return out
+        self._cas_update(mutate, "vc snapshot")
+        self._observed_branches = dict(vc_info.get("branches", {}))
+
+    def mark_stale(self, node_id: str) -> None:
+        """Write-ahead invalidation: persist ``node_id`` onto the stale
+        list BEFORE its first loose state write lands, so concurrent
+        opens fall back to loose files instead of the dead snapshot.
+
+        The update doubles as the conflict fence for the loose layout:
+        when the reload shows a foreign commit moved a branch head, this
+        writer's world-view is stale and its pending write would clobber
+        the (now-sealed) node's loose files — :class:`ManifestConflict`
+        is raised *before* that write happens, so both layouts survive.
+        """
+        self.stale.add(node_id)
+        if node_id not in self.nodes:
+            return  # never covered: nothing persisted to invalidate
+
+        def mutate(p: dict) -> dict:
+            self._check_branches(p, f"stale mark of {node_id[:8]}")
+            out = dict(p)
+            out["stale"] = sorted(set(p.get("stale", [])) | {node_id})
+            return out
+        self._cas_update(mutate, f"stale({node_id[:8]})")
+
+    # ---------------------------------------------------------- publication
+    def _encode_segment(self, nodes: Dict[str, NodeState]) -> bytes:
+        return json.dumps(
+            {"format": FORMAT,
+             "nodes": {nid: ns.to_json() for nid, ns in nodes.items()}},
+            sort_keys=True).encode()
+
+    def _catalog_size_estimate(self) -> int:
+        """Approximate encoded size of a consolidated segment, from raw
+        state-file lengths (b64 is 4/3) — O(#files) len() calls, so the
+        consolidate-vs-delta decision never serializes a catalog it is
+        about to discard."""
+        total = 64
+        for ns in self.nodes.values():
+            total += 96 + sum(len(t) + 8 for t in ns.schema)
+            for t, files in ns.tensors.items():
+                total += len(t) + 32
+                for f, b in files.items():
+                    total += len(f) + 16 + (0 if b is None else len(b) * 4 // 3)
+        return total
+
+    def commit_update(self, node_states: Dict[str, NodeState],
+                      vc_info: dict, *, branch: str) -> str:
+        """Atomically publish a commit: new segment + pointer swap.
+
+        ``node_states`` are complete snapshots of the sealed node and the
+        fresh head.  Publication is optimistic: if a pointer reload shows
+        any branch head moved past what this writer last observed (another
+        commit landed concurrently), :class:`ManifestConflict` is raised —
+        the loose layout this commit already wrote stays readable, and the
+        caller re-opens the dataset to retry.  Lost races against
+        pointer-only updates (staleness marks, vc refreshes) are retried
+        transparently.  Returns the published segment key.
+        """
+        self.nodes.update(node_states)
+        self.stale -= set(node_states)
+        if (self._catalog_size_estimate() <= AUTO_CONSOLIDATE_BYTES
+                or len(self.segments) + 1 > MAX_DELTA_SEGMENTS):
+            seg_bytes, seg_nodes = self._encode_segment(self.nodes), None
+        else:  # large catalog: publish only the two changed nodes
+            seg_bytes = self._encode_segment(node_states)
+            seg_nodes = list(node_states)
+        seg_key = _new_segment_key(self.generation + 1)
+        self.storage.put(seg_key, seg_bytes)  # unreachable until CAS lands
+
+        def mutate(p: dict) -> dict:
+            self._check_branches(p, f"commit on {branch!r}")
+            out = dict(p)
+            if seg_nodes is None:
+                out["segments"] = [seg_key]  # checkpoint supersedes chain
+            else:
+                out["segments"] = [seg_key] + list(p.get("segments", []))
+            out["vc"] = vc_info
+            out["stale"] = sorted(set(p.get("stale", []))
+                                  - set(node_states))
+            return out
+
+        self._cas_update(mutate, f"commit({branch})")
+        self._observed_branches = dict(vc_info.get("branches", {}))
+        return seg_key
+
+    def replace_segments(self, nodes: Dict[str, NodeState]) -> str:
+        """Publish a consolidated segment covering ``nodes`` and collapse
+        the pointer's chain to it (manifest compaction).  Stale flags of
+        re-adopted nodes are cleared.  Returns the new segment key."""
+        self.nodes = dict(nodes)
+        seg_bytes = self._encode_segment(self.nodes)
+        seg_key = _new_segment_key(self.generation + 1)
+        self.storage.put(seg_key, seg_bytes)
+
+        def mutate(p: dict) -> dict:
+            out = dict(p)
+            out["segments"] = [seg_key]
+            out["stale"] = sorted(set(p.get("stale", [])) - set(nodes))
+            return out
+        self._cas_update(mutate, "compaction")
+        return seg_key

@@ -18,7 +18,14 @@ All providers speak the same byte-level protocol:
                                        requests as the provider can manage
     get_many(keys) -> {key: bytes}     batched full reads
     put(key, data)                     atomic object write
+    cas(key, data, expected) -> bool   compare-and-swap (optimistic concurrency)
     delete(key), exists(key), list_keys(prefix), num_bytes(key)
+
+``cas`` is the primitive behind the dataset manifest pointer (§4.1 ACID
+ingestion): the write succeeds only when the object's current bytes equal
+``expected`` (``None`` = the key must not exist yet), so concurrent
+committers race on the pointer and exactly one wins — losers reload and
+retry or surface a conflict.
 
 Keys are '/'-separated strings (object-store semantics, no directories).
 """
@@ -123,6 +130,14 @@ class StorageProvider:
     def put(self, key: str, data: bytes) -> None:
         raise NotImplementedError
 
+    def cas(self, key: str, data: bytes, expected: Optional[bytes]) -> bool:
+        """Atomic compare-and-swap: write ``data`` only if the object's
+        current bytes equal ``expected`` (``None`` = key must not exist).
+        Returns True on success, False when the comparison failed — the
+        caller then reloads and retries or raises a conflict error.
+        """
+        raise NotImplementedError
+
     def delete(self, key: str) -> None:
         raise NotImplementedError
 
@@ -179,6 +194,13 @@ class MemoryProvider(StorageProvider):
         with self._lock:
             self._store[key] = bytes(data)
 
+    def cas(self, key: str, data: bytes, expected: Optional[bytes]) -> bool:
+        with self._lock:
+            if self._store.get(key) != expected:
+                return False
+            self._store[key] = bytes(data)
+            return True
+
     def delete(self, key: str) -> None:
         with self._lock:
             self._store.pop(key, None)
@@ -207,6 +229,10 @@ class LocalProvider(StorageProvider):
     """POSIX filesystem provider. Keys map to paths under ``root``."""
 
     kind = "local"
+
+    #: serializes read-compare-replace in :meth:`cas` within this process
+    #: (cross-process writers on POSIX would need an flock; out of scope)
+    _cas_lock = threading.Lock()
 
     def __init__(self, root: str) -> None:
         self.root = os.path.abspath(root)
@@ -256,6 +282,18 @@ class LocalProvider(StorageProvider):
         with open(tmp, "wb") as f:
             f.write(data)
         os.replace(tmp, path)  # atomic on POSIX
+
+    def cas(self, key: str, data: bytes, expected: Optional[bytes]) -> bool:
+        with self._cas_lock:
+            try:
+                with open(self._path(key), "rb") as f:
+                    current: Optional[bytes] = f.read()
+            except FileNotFoundError:
+                current = None
+            if current != expected:
+                return False
+            self.put(key, data)
+            return True
 
     def delete(self, key: str) -> None:
         try:
@@ -325,6 +363,7 @@ class SimulatedS3Provider(StorageProvider):
             "coalesced_requests": 0,  # physical spans issued by get_ranges
             "batched_ranges": 0,      # logical ranges served by get_ranges
             "meta_requests": 0,       # exists/num_bytes/list_keys round-trips
+            "cas_requests": 0,        # conditional-put round-trips (manifest)
             "bytes_down": 0,
             "bytes_up": 0,
             "sim_seconds": 0.0,
@@ -390,6 +429,14 @@ class SimulatedS3Provider(StorageProvider):
         with self._sem:
             self._charge(len(data), upload=True)
             self.base.put(key, data)
+
+    def cas(self, key: str, data: bytes, expected: Optional[bytes]) -> bool:
+        # conditional PUT (If-Match): one round-trip whether it wins or loses
+        with self._sem:
+            self._charge(len(data), upload=True)
+            with self._lock:
+                self.stats["cas_requests"] += 1
+            return self.base.cas(key, data, expected)
 
     def delete(self, key: str) -> None:
         with self._sem:
@@ -526,6 +573,14 @@ class LRUCacheProvider(StorageProvider):
     def put(self, key: str, data: bytes) -> None:
         self.base.put(key, data)
         self._admit(key, bytes(data))
+
+    def cas(self, key: str, data: bytes, expected: Optional[bytes]) -> bool:
+        ok = self.base.cas(key, data, expected)
+        if ok:
+            self._admit(key, bytes(data))
+        else:
+            self._evict(key)  # the cached copy lost the race: drop it
+        return ok
 
     def delete(self, key: str) -> None:
         self._evict(key)

@@ -110,19 +110,19 @@ class Tensor:
             self._load_state()
 
     # ------------------------------------------------------------ state I/O
-    def _skey(self, fname: str) -> str:
-        return self.vc.state_key(self.name, fname, self.node_id)
-
     def _load_state(self) -> None:
-        raw = self.vc.storage.get_or_none(self._skey("meta.json"))
+        """Load per-tensor state via the version-control state layer:
+        manifest-covered nodes resolve every file from the consolidated
+        snapshot (zero storage requests on a cold open)."""
+        raw = self.vc.get_state(self.name, "meta.json", self.node_id)
         if raw is None:
             raise StorageError(f"tensor {self.name!r} has no state at this version")
         self.meta = TensorMeta.from_json(json.loads(raw.decode()))
-        enc = self.vc.storage.get_or_none(self._skey("chunk_encoder"))
+        enc = self.vc.get_state(self.name, "chunk_encoder", self.node_id)
         self.encoder = ChunkEncoder.deserialize(enc) if enc else ChunkEncoder()
-        st = self.vc.storage.get_or_none(self._skey("chunk_stats.json"))
+        st = self.vc.get_state(self.name, "chunk_stats.json", self.node_id)
         self.stats = ChunkStatsTable.deserialize(st) if st else ChunkStatsTable()
-        ids = self.vc.storage.get_or_none(self._skey("sample_ids"))
+        ids = self.vc.get_state(self.name, "sample_ids", self.node_id)
         self.sample_ids = (
             [int(x) for x in np.frombuffer(zlib.decompress(ids), dtype="<u8")]
             if ids else [])
@@ -138,13 +138,14 @@ class Tensor:
             self.stats.set(self._open_name, self._builder.stats_snapshot())
         if not self._dirty:
             return
-        st = self.vc.storage
         self.stats.prune_to(self.encoder.chunk_names())
-        st.put(self._skey("chunk_stats.json"), self.stats.serialize())
-        st.put(self._skey("chunk_encoder"), self.encoder.serialize())
-        st.put(self._skey("sample_ids"),
-               zlib.compress(np.asarray(self.sample_ids, dtype="<u8").tobytes(), 1))
-        st.put(self._skey("meta.json"), json.dumps(self.meta.to_json()).encode())
+        self.vc.put_state(self.name, "chunk_stats.json", self.stats.serialize())
+        self.vc.put_state(self.name, "chunk_encoder", self.encoder.serialize())
+        self.vc.put_state(
+            self.name, "sample_ids",
+            zlib.compress(np.asarray(self.sample_ids, dtype="<u8").tobytes(), 1))
+        self.vc.put_state(self.name, "meta.json",
+                          json.dumps(self.meta.to_json()).encode())
         self.vc.flush_chunk_set(self.name)
         self.vc.flush_diff(self.name)
         self._dirty = False
@@ -287,9 +288,13 @@ class Tensor:
         codec = get_codec(self.meta.codec)
         payload = codec.encode(arr)
         if len(payload) > self.meta.max_chunk_size:
-            desc = self._write_tiled(arr)
+            desc, effective = self._write_tiled(arr)
+            # exact stats for tiled samples: the builder observes the array
+            # a reader would reassemble, so the planner never degrades the
+            # whole chunk to 'verify' just because one sample was tiled
             return self._append_encoded(desc.to_bytes(), tuple(arr.shape),
-                                        FLAG_TILED, sample_id)
+                                        FLAG_TILED, sample_id,
+                                        source=effective)
         return self._append_encoded(payload, tuple(arr.shape), 0, sample_id,
                                     source=arr)
 
@@ -297,20 +302,31 @@ class Tensor:
         for s in samples:
             self.append(s)
 
-    def _write_tiled(self, arr: np.ndarray) -> TileDescriptor:
+    def _write_tiled(self, arr: np.ndarray
+                     ) -> Tuple[TileDescriptor, np.ndarray]:
+        """Split + store tiles; returns the descriptor and the *effective*
+        array (what a reader reassembles: ``arr`` itself for lossless
+        codecs, the decoded round-trip for lossy ones) so stats computed
+        at flush bound exactly what queries will read."""
         tile_shape = plan_tile_shape(
             arr.shape, arr.dtype.itemsize,
             max(1, int(self.meta.max_chunk_size * 0.8)))
         grid, tiles = split_into_tiles(arr, tile_shape)
         codec = get_codec(self.meta.codec)
         names = []
+        payloads = []
         for t in tiles:
             name = _new_chunk_name("t")
             key = self.vc.register_new_chunk(self.name, name)
-            self.vc.storage.put(key, codec.encode(t))
+            payload = codec.encode(t)
+            self.vc.storage.put(key, payload)
             names.append(name)
-        return TileDescriptor(tuple(arr.shape), tile_shape, grid, names,
+            payloads.append(payload)
+        desc = TileDescriptor(tuple(arr.shape), tile_shape, grid, names,
                               self.meta.dtype, self.meta.codec)
+        effective = arr if not codec.lossy \
+            else assemble_from_tiles(desc, payloads)
+        return desc, effective
 
     # ------------------------------------------------------------- updating
     def __setitem__(self, idx: int, sample: Any) -> None:
@@ -335,7 +351,7 @@ class Tensor:
         payload = codec.encode(arr)
         flags = 0
         if len(payload) > self.meta.max_chunk_size:
-            desc = self._write_tiled(arr)
+            desc, _effective = self._write_tiled(arr)
             payload, flags = desc.to_bytes(), FLAG_TILED
         chunk_name, local = self.encoder.lookup(idx)
         if self._builder is not None and chunk_name == self._open_name:

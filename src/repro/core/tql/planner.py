@@ -376,10 +376,20 @@ class ScanPlan:
     chunks_total: int         # chunks the view touches across planned tensors
     chunks_pruned: int        # chunks no surviving candidate row needs
     tensors: List[str]        # tensors whose stats were consulted
+    chunks_consulted: int = 0      # distinct (tensor, chunk) stats lookups
+    chunks_stats_missing: int = 0  # lookups without a usable (exact) record
 
     @property
     def effective(self) -> bool:
         return len(self.pruned) > 0 or len(self.sure) > 0
+
+    @property
+    def stats_coverage(self) -> float:
+        """Fraction of consulted chunks with usable stats — 0.0 on a
+        pre-stats dataset, 1.0 after the maintenance backfill job."""
+        if not self.chunks_consulted:
+            return 1.0
+        return 1.0 - self.chunks_stats_missing / self.chunks_consulted
 
     def report(self) -> dict:
         return {
@@ -391,6 +401,9 @@ class ScanPlan:
             "groups_decided": self.groups_decided,
             "chunks_total": self.chunks_total,
             "chunks_pruned": self.chunks_pruned,
+            "chunks_consulted": self.chunks_consulted,
+            "chunks_stats_missing": self.chunks_stats_missing,
+            "stats_coverage": self.stats_coverage,
             "tensors": list(self.tensors),
         }
 
@@ -422,12 +435,20 @@ def plan_where(view, where: Node) -> Optional[ScanPlan]:
     key_matrix = np.stack(ord_cols, axis=1)  # (rows, tensors)
     _uniq, inverse = np.unique(key_matrix, axis=0, return_inverse=True)
     stats_cache: Dict[tuple, Interval] = {}
+    # stats-coverage accounting: how many consulted chunks carried a usable
+    # record (on manifest datasets the sidecar is served straight from the
+    # consolidated snapshot; the maintenance backfill job drives the
+    # missing count of a pre-stats dataset to zero)
+    coverage = {"consulted": 0, "missing": 0}
 
     def leaf(tname: str, chunk_ord: int) -> Interval:
         k = (tname, chunk_ord)
         if k not in stats_cache:
-            stats_cache[k] = interval_from_stats(
-                tensors[tname].chunk_stats_of(chunk_ord))
+            st = tensors[tname].chunk_stats_of(chunk_ord)
+            coverage["consulted"] += 1
+            if st is None or not st.exact:
+                coverage["missing"] += 1
+            stats_cache[k] = interval_from_stats(st)
         return stats_cache[k]
 
     verdicts = np.empty(len(_uniq), dtype=np.int8)  # 0 prune, 1 sure, 2 verify
@@ -463,7 +484,8 @@ def plan_where(view, where: Node) -> Optional[ScanPlan]:
         n_rows=len(view), pruned=pruned, sure=sure, verify=verify,
         groups=len(_uniq), groups_decided=decided,
         chunks_total=chunks_total, chunks_pruned=chunks_pruned,
-        tensors=names)
+        tensors=names, chunks_consulted=coverage["consulted"],
+        chunks_stats_missing=coverage["missing"])
 
 
 def _referenced(node: Node) -> List[str]:

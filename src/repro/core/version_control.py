@@ -26,6 +26,16 @@ Storage layout (keys relative to dataset root):
     versions/{node}/tensors/{t}/chunk_set.json
     versions/{node}/tensors/{t}/commit_diff.json
     versions/{node}/tensors/{t}/chunks/{chunk_name}
+
+Manifest integration (:mod:`.manifest`): all per-tensor state reads and
+writes route through :meth:`VersionControl.get_state` /
+:meth:`VersionControl.put_state`.  When a dataset manifest is attached,
+reads of manifest-covered nodes are served from the consolidated snapshot
+(zero storage requests on a cold open); writes always land in the loose
+per-file layout above (it stays complete and authoritative for legacy
+readers) after write-ahead-invalidating the node's manifest snapshot.
+``commit`` publishes complete snapshots of the sealed node and the fresh
+head through one CAS pointer swap — the ACID ingestion point.
 """
 
 from __future__ import annotations
@@ -36,6 +46,7 @@ import uuid
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
+from . import manifest as manifestlib
 from .storage import StorageError, StorageProvider
 
 VC_INFO_KEY = "version_control_info.json"
@@ -56,9 +67,11 @@ class CommitNode:
     children: List[str] = field(default_factory=list)
 
     def to_json(self) -> dict:
+        # children is copied: serialized snapshots must not alias the live
+        # list (save_info compares them against later state to skip no-ops)
         return {"id": self.id, "parent": self.parent, "branch": self.branch,
                 "message": self.message, "committed": self.committed,
-                "timestamp": self.timestamp, "children": self.children}
+                "timestamp": self.timestamp, "children": list(self.children)}
 
     @classmethod
     def from_json(cls, d: dict) -> "CommitNode":
@@ -107,9 +120,13 @@ class VersionControl:
     # name, so the copy stays valid in the child node (chunks never move).
     STATE_FILES = ("meta.json", "chunk_encoder", "sample_ids",
                    "chunk_stats.json")
+    #: every per-tensor state file a commit-node snapshot must capture
+    ALL_STATE_FILES = STATE_FILES + ("chunk_set.json", "commit_diff.json")
 
-    def __init__(self, storage: StorageProvider) -> None:
+    def __init__(self, storage: StorageProvider,
+                 manifest: Optional[manifestlib.Manifest] = None) -> None:
         self.storage = storage
+        self.manifest = manifest
         self.branches: Dict[str, str] = {}
         self.commits: Dict[str, CommitNode] = {}
         self.current_id: str = ""
@@ -117,10 +134,29 @@ class VersionControl:
         self._chunk_sets: Dict[Tuple[str, str], Set[str]] = {}   # (node, tensor)
         self._schemas: Dict[str, List[str]] = {}                 # node -> tensor list
         self._diffs: Dict[str, CommitDiff] = {}                  # tensor -> diff (current node)
+        # read-through/write-through memo of state-file bytes per
+        # (node, tensor, fname); None records an authoritative miss
+        self._state_cache: Dict[Tuple[str, str, str], Optional[bytes]] = {}
+        # last version-tree snapshot this handle loaded or published; lets
+        # save_info() skip the publication (and its conflict fence) when
+        # nothing changed, so a read-only handle's flush never rolls back
+        # or conflicts with a foreign commit
+        self._saved_info: Optional[dict] = None
         self._load_or_init()
 
     # ------------------------------------------------------------------ setup
     def _load_or_init(self) -> None:
+        m = self.manifest
+        if m is not None and m.vc_info:
+            # manifest-first open: the version tree rides inside the pointer
+            d = m.vc_info
+            self.branches = dict(d["branches"])
+            self.commits = {k: CommitNode.from_json(v)
+                            for k, v in d["commits"].items()}
+            self.current_id = d["current"]
+            self._saved_info = self._info_dict()
+            self._load_current_diffs()
+            return
         raw = self.storage.get_or_none(VC_INFO_KEY)
         if raw is None:
             root = CommitNode(id=_new_id(), parent=None, branch="main")
@@ -128,20 +164,39 @@ class VersionControl:
             self.branches = {"main": root.id}
             self.current_id = root.id
             self._put_json(self._schema_key(root.id), {"tensors": []})
+            self._schemas[root.id] = []
             self.save_info()
         else:
             d = json.loads(raw.decode())
             self.branches = dict(d["branches"])
             self.commits = {k: CommitNode.from_json(v) for k, v in d["commits"].items()}
             self.current_id = d["current"]
+            self._saved_info = self._info_dict()
             self._load_current_diffs()
 
-    def save_info(self) -> None:
-        self._put_json(VC_INFO_KEY, {
-            "branches": self.branches,
+    def _info_dict(self) -> dict:
+        return {
+            "branches": dict(self.branches),
             "commits": {k: v.to_json() for k, v in self.commits.items()},
             "current": self.current_id,
-        })
+        }
+
+    def save_info(self, sync_manifest: bool = True,
+                  force: bool = False) -> None:
+        """Persist the version tree.  No-op when nothing changed since the
+        last load/publication — a read-only handle's flush neither pays a
+        pointer CAS nor conflicts with (or rolls back) a foreign commit.
+        On manifest datasets the pointer swap is the fence: the loose
+        legacy mirror is only written AFTER the swap wins, mirroring
+        :meth:`commit`'s ordering.  ``force`` republishes even an
+        unchanged tree (a freshly adopted pointer has no vc yet)."""
+        info = self._info_dict()
+        if not force and info == self._saved_info:
+            return
+        if sync_manifest and self.manifest is not None:
+            self.manifest.update_vc(info)  # conflict fence; raises on loss
+        self._put_json(VC_INFO_KEY, info)
+        self._saved_info = info
 
     # ------------------------------------------------------------- key helpers
     @staticmethod
@@ -167,6 +222,54 @@ class VersionControl:
         raw = self.storage.get_or_none(key)
         return default if raw is None else json.loads(raw.decode())
 
+    # ------------------------------------------------------------- state I/O
+    def get_state(self, tensor: str, fname: str,
+                  node_id: Optional[str] = None) -> Optional[bytes]:
+        """Bytes of one per-tensor state file, manifest-first.
+
+        Manifest-covered nodes are served from the consolidated snapshot
+        (including authoritative misses — a covered node that never wrote
+        the file); everything else falls back to the loose per-file
+        layout.  Reads memoize per (node, tensor, file).
+        """
+        nid = node_id or self.current_id
+        ck = (nid, tensor, fname)
+        if ck in self._state_cache:
+            return self._state_cache[ck]
+        m = self.manifest
+        if m is not None and m.covers(nid):
+            data = m.state_bytes(nid, tensor, fname)
+        else:
+            data = self.storage.get_or_none(self.state_key(tensor, fname, nid))
+        self._state_cache[ck] = data
+        return data
+
+    def put_state(self, tensor: str, fname: str, data: bytes,
+                  node_id: Optional[str] = None) -> None:
+        """Write one state file to the loose layout (always authoritative),
+        write-ahead-invalidating the node's manifest snapshot first so a
+        concurrent cold open can never read the superseded snapshot."""
+        nid = node_id or self.current_id
+        m = self.manifest
+        if m is not None and m.covers(nid):
+            m.mark_stale(nid)
+        self.storage.put(self.state_key(tensor, fname, nid), data)
+        self._state_cache[(nid, tensor, fname)] = bytes(data)
+
+    def _get_state_json(self, tensor: str, fname: str,
+                        node_id: Optional[str] = None, default=None):
+        raw = self.get_state(tensor, fname, node_id)
+        return default if raw is None else json.loads(raw.decode())
+
+    def node_snapshot(self, node_id: str) -> manifestlib.NodeState:
+        """Complete :class:`~repro.core.manifest.NodeState` of one node
+        (schema + raw bytes of every state file of every tensor)."""
+        schema = self.schema_tensors(node_id)
+        tensors = {
+            t: {f: self.get_state(t, f, node_id) for f in self.ALL_STATE_FILES}
+            for t in schema}
+        return manifestlib.NodeState(schema=schema, tensors=tensors)
+
     # ------------------------------------------------------------ node state
     @property
     def current(self) -> CommitNode:
@@ -184,20 +287,27 @@ class VersionControl:
     def schema_tensors(self, node_id: Optional[str] = None) -> List[str]:
         nid = node_id or self.current_id
         if nid not in self._schemas:  # memo: one GET per node, not per view
-            d = self._get_json(self._schema_key(nid), {"tensors": []})
-            self._schemas[nid] = list(d["tensors"])
+            m = self.manifest
+            if m is not None and m.covers(nid):
+                self._schemas[nid] = list(m.node_schema(nid) or [])
+            else:
+                d = self._get_json(self._schema_key(nid), {"tensors": []})
+                self._schemas[nid] = list(d["tensors"])
         return list(self._schemas[nid])
 
     def set_schema_tensors(self, tensors: List[str]) -> None:
-        self._schemas.pop(self.current_id, None)
+        m = self.manifest
+        if m is not None and m.covers(self.current_id):
+            m.mark_stale(self.current_id)
+        self._schemas[self.current_id] = list(tensors)
         self._put_json(self._schema_key(self.current_id), {"tensors": tensors})
 
     # ----------------------------------------------------------- chunk lookup
     def chunk_set(self, node_id: str, tensor: str) -> Set[str]:
         key = (node_id, tensor)
         if key not in self._chunk_sets:
-            d = self._get_json(self.state_key(tensor, "chunk_set.json", node_id),
-                               {"chunks": []})
+            d = self._get_state_json(tensor, "chunk_set.json", node_id,
+                                     {"chunks": []})
             self._chunk_sets[key] = set(d["chunks"])
         return self._chunk_sets[key]
 
@@ -223,12 +333,13 @@ class VersionControl:
 
     def flush_chunk_set(self, tensor: str) -> None:
         cs = sorted(self.chunk_set(self.current_id, tensor))
-        self._put_json(self.state_key(tensor, "chunk_set.json"), {"chunks": cs})
+        self.put_state(tensor, "chunk_set.json",
+                       json.dumps({"chunks": cs}).encode())
 
     # ------------------------------------------------------------ diff state
     def diff_of(self, tensor: str) -> CommitDiff:
         if tensor not in self._diffs:
-            d = self._get_json(self.state_key(tensor, "commit_diff.json"), None)
+            d = self._get_state_json(tensor, "commit_diff.json")
             self._diffs[tensor] = CommitDiff.from_json(d) if d else CommitDiff()
         return self._diffs[tensor]
 
@@ -242,8 +353,8 @@ class VersionControl:
         self.diff_of(tensor).created = True
 
     def flush_diff(self, tensor: str) -> None:
-        self._put_json(self.state_key(tensor, "commit_diff.json"),
-                       self.diff_of(tensor).to_json())
+        self.put_state(tensor, "commit_diff.json",
+                       json.dumps(self.diff_of(tensor).to_json()).encode())
 
     def _load_current_diffs(self) -> None:
         self._diffs = {}
@@ -255,13 +366,23 @@ class VersionControl:
 
     # --------------------------------------------------------------- commit
     def commit(self, message: str = "") -> str:
-        """Seal the current head; open a fresh writable child on the branch."""
+        """Seal the current head; open a fresh writable child on the branch.
+
+        On manifest datasets this is the ACID publication point: complete
+        snapshots of the sealed node and the fresh head are folded into a
+        new manifest segment and published with one CAS pointer swap
+        (:meth:`Manifest.commit_update`); a concurrent committer losing
+        the swap raises :class:`~repro.core.manifest.ManifestConflict`.
+        Legacy (pre-manifest) datasets adopt a manifest on their first
+        commit.
+        """
         self.require_writable()
         head = self.current
         head.committed = True
         head.message = message
         head.timestamp = time.time()
         sealed_id = head.id
+        branch = head.branch
         child = CommitNode(id=_new_id(), parent=sealed_id, branch=head.branch)
         head.children.append(child.id)
         self.commits[child.id] = child
@@ -269,21 +390,33 @@ class VersionControl:
         self._copy_state(sealed_id, child.id)
         self.current_id = child.id
         self._load_current_diffs()
-        self.save_info()
+        if self.manifest is None:  # legacy dataset: adopt on first commit
+            self.manifest = manifestlib.Manifest.create(self.storage)
+        info = self._info_dict()
+        self.manifest.commit_update(
+            {sealed_id: self.node_snapshot(sealed_id),
+             child.id: self.node_snapshot(child.id)},
+            info, branch=branch)
+        # mirror to the legacy key only AFTER the pointer swap won: a
+        # conflicted commit must not advance the loose version tree either
+        self._put_json(VC_INFO_KEY, info)
+        self._saved_info = info
         return sealed_id
 
     def _copy_state(self, src_id: str, dst_id: str) -> None:
         """Copy small per-tensor state files; chunks stay where created."""
         tensors = self.schema_tensors(src_id)
         self._put_json(self._schema_key(dst_id), {"tensors": tensors})
+        self._schemas[dst_id] = list(tensors)
         for t in tensors:
             for fname in self.STATE_FILES:
-                raw = self.storage.get_or_none(self.state_key(t, fname, src_id))
+                raw = self.get_state(t, fname, src_id)
                 if raw is not None:
-                    self.storage.put(self.state_key(t, fname, dst_id), raw)
-            self._put_json(self.state_key(t, "chunk_set.json", dst_id), {"chunks": []})
-            self._put_json(self.state_key(t, "commit_diff.json", dst_id),
-                           CommitDiff().to_json())
+                    self.put_state(t, fname, raw, dst_id)
+            self.put_state(t, "chunk_set.json",
+                           json.dumps({"chunks": []}).encode(), dst_id)
+            self.put_state(t, "commit_diff.json",
+                           json.dumps(CommitDiff().to_json()).encode(), dst_id)
 
     # -------------------------------------------------------------- checkout
     def resolve_ref(self, ref: str) -> str:
@@ -310,6 +443,7 @@ class VersionControl:
                 self._copy_state(parent_id, node.id)
             else:
                 self._put_json(self._schema_key(node.id), {"tensors": []})
+                self._schemas[node.id] = []
             self.branches[ref] = node.id
             self.current_id = node.id
         else:
@@ -355,7 +489,7 @@ class VersionControl:
             cur: Optional[str] = nid
             while cur is not None and cur != lca:
                 for t in self.schema_tensors(cur):
-                    d = self._get_json(self.state_key(t, "commit_diff.json", cur))
+                    d = self._get_state_json(t, "commit_diff.json", cur)
                     if d:
                         cd = CommitDiff.from_json(d)
                         if cd.is_empty():

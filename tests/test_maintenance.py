@@ -1,0 +1,322 @@
+"""Maintenance engine: stats backfill, manifest compaction, orphan GC.
+
+Acceptance properties (ISSUE 3):
+
+* a backfilled pre-stats dataset produces byte-identical query results and
+  the SAME prune verdicts as a natively-written one;
+* GC never deletes a chunk reachable from any commit, across randomized
+  commit/branch histories (property test);
+* compaction collapses delta-segment chains back to the 2-request cold
+  open.
+
+Also covers the exact-tiled-stats satellite: tile descriptors no longer
+force the planner into 'verify'.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+import repro.core as dl
+from repro.core import manifest as manifestlib
+from repro.core.manifest import MANIFEST_KEY, SEGMENT_PREFIX
+
+QUERIES = (
+    "SELECT * FROM dataset WHERE lab == 3",
+    "SELECT * FROM dataset WHERE MEAN(x) > 45",
+    "SELECT * FROM dataset WHERE MIN(x) > 1000",
+    "SELECT * FROM dataset WHERE lab >= 0",
+)
+
+
+def _build(storage=None, n=200):
+    rng = np.random.default_rng(11)
+    ds = dl.Dataset(storage)
+    ds.create_tensor("x", dtype="float32", min_chunk_size=512,
+                     max_chunk_size=1024)
+    ds.create_tensor("lab", htype="class_label", min_chunk_size=128,
+                     max_chunk_size=256)
+    for i in range(n):
+        band = i // 25
+        ds.append({"x": (rng.standard_normal(8).astype(np.float32)
+                         + np.float32(band * 10)),
+                   "lab": np.int64(band)})
+    ds.commit("fixture")
+    return ds
+
+
+def _make_prestats(base):
+    """Rewind a manifest-native dataset to the pre-stats, pre-manifest
+    format: no pointer, no segments, no chunk_stats sidecars."""
+    base.delete(MANIFEST_KEY)
+    for key in list(base.list_keys(SEGMENT_PREFIX)):
+        base.delete(key)
+    for key in list(base.list_keys()):
+        if key.endswith("chunk_stats.json"):
+            base.delete(key)
+
+
+# ------------------------------------------------------------- stats backfill
+def test_backfill_restores_native_prune_verdicts():
+    native_base = dl.MemoryProvider()
+    native = _build(native_base)
+    native_plans = {}
+    native_results = {}
+    for q in QUERIES:
+        v = native.query(q, use_stats=True)
+        native_plans[q] = v.scan_plan
+        native_results[q] = (v.indices.tolist(),
+                            [a.tolist() for a in v.tensor("x").numpy()]
+                            if len(v) else [])
+
+    # same data, pre-stats format
+    pre_base = dl.MemoryProvider()
+    _build(pre_base)
+    _make_prestats(pre_base)
+    pre = dl.Dataset(pre_base)
+    assert pre.manifest is None
+    for q in QUERIES:
+        v = pre.query(q, use_stats=True)
+        if v.scan_plan is not None:
+            assert v.scan_plan["rows_pruned"] == 0      # nothing to prune on
+            assert v.scan_plan["stats_coverage"] == 0.0
+        assert v.indices.tolist() == native_results[q][0]
+
+    report = pre.maintenance().backfill_stats()
+    assert report.details["chunks_backfilled"] > 0
+    for q in QUERIES:
+        v = pre.query(q, use_stats=True)
+        # identical verdict partition AND identical results
+        for k in ("rows_pruned", "rows_sure", "rows_verify",
+                  "chunks_pruned"):
+            assert v.scan_plan[k] == native_plans[q][k], (q, k)
+        assert v.scan_plan["stats_coverage"] == 1.0
+        assert v.indices.tolist() == native_results[q][0]
+        got = [a.tolist() for a in v.tensor("x").numpy()] if len(v) else []
+        assert got == native_results[q][1]
+
+
+def test_backfill_is_idempotent_and_dry_run_writes_nothing():
+    base = dl.MemoryProvider()
+    _build(base, n=50)
+    _make_prestats(base)
+    ds = dl.Dataset(base)
+    dry = ds.maintenance().backfill_stats(dry_run=True)
+    assert dry.details["chunks_backfilled"] > 0
+    assert not any(k.endswith("chunk_stats.json") for k in base.list_keys())
+    ds.maintenance().backfill_stats()
+    again = ds.maintenance().backfill_stats()
+    assert again.details["chunks_backfilled"] == 0
+
+
+def test_backfill_survives_reopen_and_commit():
+    base = dl.MemoryProvider()
+    _build(base, n=100)
+    _make_prestats(base)
+    ds = dl.Dataset(base)
+    ds.maintenance().backfill_stats()
+    ds.commit("post backfill")          # adopts a manifest too
+    fresh = dl.Dataset(base)
+    v = fresh.query("SELECT * FROM dataset WHERE lab == 1", use_stats=True)
+    assert v.scan_plan["rows_pruned"] > 0
+    assert v.indices.tolist() == list(range(25, 50))
+
+
+# ------------------------------------------------------ exact tiled stats
+def test_tiled_samples_keep_exact_stats():
+    ds = dl.Dataset()
+    ds.create_tensor("img", dtype="float32", min_chunk_size=1 << 10,
+                     max_chunk_size=1 << 12)
+    big = np.full((64, 64), 7.0, np.float32)        # 16KB raw -> tiled
+    big[0, 0] = 3.0
+    ds.img.append(big)
+    ds.img.append(np.full((64, 64), 9.0, np.float32))
+    ds.flush()
+    st_ = ds.img.chunk_stats_of(0)
+    assert st_ is not None and st_.exact
+    assert st_.lo <= 3.0 and st_.hi >= 9.0
+    # and the planner can now prune on tiled tensors
+    ds.commit("tiled")
+    on = ds.query("SELECT * FROM dataset WHERE MAX(img) > 100",
+                  use_stats=True)
+    assert len(on) == 0 and on.scan_plan["rows_pruned"] == 2
+
+
+def test_tiled_stats_bound_lossy_roundtrip():
+    ds = dl.Dataset()
+    ds.create_tensor("img", dtype="float32", sample_compression="quant8",
+                     min_chunk_size=1 << 10, max_chunk_size=1 << 12)
+    rng = np.random.default_rng(3)
+    arr = rng.uniform(-5, 5, (80, 80)).astype(np.float32)
+    ds.img.append(arr)
+    ds.flush()
+    st_ = ds.img.chunk_stats_of(0)
+    assert st_ is not None and st_.exact
+    decoded = ds.img.read(0)            # what queries actually see
+    assert st_.lo <= float(decoded.min())
+    assert st_.hi >= float(decoded.max())
+
+
+def test_backfilled_tiled_stats_match_native():
+    base = dl.MemoryProvider()
+    ds = dl.Dataset(base)
+    ds.create_tensor("img", dtype="float32", min_chunk_size=1 << 10,
+                     max_chunk_size=1 << 12)
+    for v in (2.0, 11.0):
+        ds.img.append(np.full((64, 64), v, np.float32))
+    ds.commit("tiled")
+    native = ds.img.chunk_stats_of(0)
+    _make_prestats(base)
+    pre = dl.Dataset(base)
+    assert pre.img.chunk_stats_of(0) is None
+    pre.maintenance().backfill_stats()
+    pre2 = dl.Dataset(base)
+    back = pre2.img.chunk_stats_of(0)
+    assert back is not None and back.exact == native.exact is True
+    assert back.lo == native.lo and back.hi == native.hi
+    assert back.n_elements == native.n_elements
+
+
+# --------------------------------------------------------------- compaction
+def test_compaction_collapses_delta_chain(monkeypatch):
+    monkeypatch.setattr(manifestlib, "AUTO_CONSOLIDATE_BYTES", 0)
+    base = dl.MemoryProvider()
+    ds = _build(base, n=30)
+    for i in range(3):
+        ds.x.append(np.full(8, float(i), np.float32))
+        ds.commit(f"delta {i}")
+    assert len(ds.manifest.segments) > 1
+    report = ds.maintenance().compact_manifest()
+    assert len(ds.manifest.segments) == 1
+    assert report.details["nodes_folded"] == len(ds.vc.commits)
+    s3 = dl.SimulatedS3Provider(base, time_scale=0)
+    ds2 = dl.Dataset(s3)
+    assert len(ds2.x) == 33 and len(ds2.lab) == 30
+    assert s3.stats["requests"] <= 2
+
+
+def test_delta_chain_auto_checkpoints(monkeypatch):
+    monkeypatch.setattr(manifestlib, "AUTO_CONSOLIDATE_BYTES", 0)
+    base = dl.MemoryProvider()
+    ds = _build(base, n=20)
+    for i in range(manifestlib.MAX_DELTA_SEGMENTS + 2):
+        ds.x.append(np.full(8, float(i), np.float32))
+        ds.commit(f"c{i}")
+    assert len(ds.manifest.segments) <= manifestlib.MAX_DELTA_SEGMENTS
+
+
+def test_compaction_adopts_legacy_and_readopts_stale():
+    base = dl.MemoryProvider()
+    ds = _build(base, n=40)
+    ds.x.append(np.zeros(8, np.float32))
+    ds.flush()                                  # head goes stale
+    assert not ds.manifest.covers(ds.commit_id)
+    ds.maintenance().compact_manifest()
+    assert ds.manifest.covers(ds.commit_id)     # re-adopted from loose
+    s3 = dl.SimulatedS3Provider(base, time_scale=0)
+    ds2 = dl.Dataset(s3)
+    assert len(ds2.x) == 41
+    assert s3.stats["requests"] <= 2
+
+
+# ------------------------------------------------------------------- GC
+def _snapshot_all_commits(ds):
+    """{(commit, tensor, row) -> value list} across the full tree."""
+    out = {}
+    for nid, node in ds.vc.commits.items():
+        if not node.committed:
+            continue
+        for t in ds.vc.schema_tensors(nid):
+            bound = ds.tensor_at(t, nid)
+            for i in range(len(bound)):
+                out[(nid, t, i)] = bound.read(i).tolist()
+    return out
+
+
+def test_gc_removes_planted_orphans_only():
+    base = dl.MemoryProvider()
+    ds = _build(base, n=60)
+    nid = ds.commit_id
+    base.put(f"versions/{nid}/tensors/x/chunks/cdeadbeef0000", b"orphan")
+    base.put("versions/ffffffffffffffff/tensors/x/chunks/c123", b"dead node")
+    base.put(f"{SEGMENT_PREFIX}seg-99999999-aaaaaaaa.json", b"{}")
+    before = _snapshot_all_commits(ds)
+    dry = ds.maintenance().gc_orphans(dry_run=True)
+    assert len(dry.actions) >= 3
+    assert base.exists(f"versions/{nid}/tensors/x/chunks/cdeadbeef0000")
+    report = ds.maintenance().gc_orphans(dry_run=False)
+    assert set(dry.actions) == set(report.actions)
+    assert not base.exists(f"versions/{nid}/tensors/x/chunks/cdeadbeef0000")
+    assert not base.exists("versions/ffffffffffffffff/tensors/x/chunks/c123")
+    assert _snapshot_all_commits(ds) == before
+
+
+def test_gc_keeps_deleted_tensors_chunks_reachable_from_history():
+    ds = _build(n=30)
+    ds.create_tensor("y", dtype="int64")
+    ds.y.extend([np.int64(i) for i in range(30)])
+    cid = ds.commit("with y")
+    ds.delete_tensor("y")
+    ds.commit("without y")
+    ds.maintenance().gc_orphans(dry_run=False)
+    old = ds.tensor_at("y", cid)
+    assert [int(old.read(i)) for i in range(3)] == [0, 1, 2]
+
+
+def test_gc_collects_uncommitted_deleted_tensor():
+    base = dl.MemoryProvider()
+    ds = _build(base, n=20)
+    ds.create_tensor("tmp", dtype="int64", min_chunk_size=64,
+                     max_chunk_size=128)
+    ds.tmp.extend([np.int64(i) for i in range(20)])
+    ds.flush()
+    ds.delete_tensor("tmp")             # never committed: chunks orphaned
+    ds.flush()
+    report = ds.maintenance().gc_orphans(dry_run=False)
+    assert any("/tensors/tmp/chunks/" in k for k in report.actions)
+    assert not any("/tensors/tmp/chunks/" in k
+                   for k in base.list_keys("versions/"))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["append", "update", "branch",
+                                           "commit"]),
+                          st.integers(0, 9), st.integers(-50, 50)),
+                min_size=1, max_size=10))
+def test_gc_never_deletes_reachable_chunks_property(script):
+    """Random commit/branch/edit histories: after a full GC sweep, every
+    sample of every tensor at every commit reads back unchanged."""
+    ds = dl.Dataset()
+    ds.create_tensor("x", dtype="int64", min_chunk_size=128,
+                     max_chunk_size=256)
+    for i in range(10):
+        ds.x.append(np.full(4, i, np.int64))
+    ds.commit("base")
+    n_branches = 0
+    for op, idx, val in script:
+        if op == "append":
+            ds.x.append(np.full(4, val, np.int64))
+        elif op == "update":
+            ds.x[idx % len(ds.x)] = np.full(4, val, np.int64)
+        elif op == "branch" and n_branches < 3:
+            ds.checkout(f"b{n_branches}", create=True)
+            n_branches += 1
+        elif op == "commit":
+            ds.commit(f"edit {idx}")
+    ds.flush()
+    before = _snapshot_all_commits(ds)
+    ds.maintenance().gc_orphans(dry_run=False)
+    assert _snapshot_all_commits(ds) == before
+    # head still readable and writable afterwards
+    ds.x.append(np.full(4, 99, np.int64))
+    assert int(ds.x[len(ds.x) - 1][0]) == 99
+
+
+def test_runner_runs_all_jobs():
+    ds = _build(n=30)
+    reports = ds.maintenance().run(dry_run=True)
+    assert [r.job for r in reports] == ["backfill_stats", "compact_manifest",
+                                       "gc_orphans"]
+    assert all(r.dry_run for r in reports)
+    with pytest.raises(ValueError):
+        ds.maintenance().run(jobs=("nope",))
