@@ -33,6 +33,38 @@ STEPS = 36
 LAT, BW = 0.030, 50e6     # cross-region object store
 TIME_SCALE = 0.0          # pure accounting; wall = compute, sim = IO
 
+#: steady-state stall budget for the deep-lake section (smoke gate):
+#: seconds the simulated per-connection IO may exceed compute — the scan
+#: pipeline's cross-unit prefetch must keep the training step the
+#: bottleneck, so the stall stays ~0 (§4.5, Fig 6's "(d) ~= (a)" claim)
+STALL_BUDGET_S = 1.0
+
+
+#: regression slack over the recorded baseline + an absolute noise floor
+#: (compute wall time jitters between machines; stall ~0 makes a bare
+#: multiplicative bound meaninglessly tight)
+STALL_REGRESSION_SLACK = 1.25
+STALL_NOISE_FLOOR_S = 0.25
+
+
+def _baseline_stall(smoke: bool) -> float:
+    """Newest recorded stall_seconds of a run with the SAME workload size
+    (smoke vs full — their stalls are not comparable); inf when the
+    history has no matching datapoint."""
+    import json
+
+    from . import io_report
+    try:
+        with open(io_report.PATH) as f:
+            hist = json.load(f)["benches"]["fig6_streaming_train"]
+        for entry in reversed(hist):
+            stall = entry.get("stall", {})
+            if stall.get("smoke") == int(smoke):
+                return float(stall["stall_seconds"])
+    except (OSError, KeyError, ValueError, TypeError):
+        pass
+    return float("inf")
+
 
 def _train_step_fn():
     key = jax.random.PRNGKey(0)
@@ -67,12 +99,14 @@ def _consume(params, step, batch_iter, steps=STEPS):
     return compute
 
 
-def main() -> List[str]:
+def main(smoke: bool = False) -> List[str]:
+    n_images = 240 if smoke else N_IMAGES
+    steps = 12 if smoke else STEPS
     lines = []
-    images = make_images(N_IMAGES, (64, 64))
-    labels = [i % 10 for i in range(N_IMAGES)]
+    images = make_images(n_images, (64, 64))
+    labels = [i % 10 for i in range(n_images)]
     rng = np.random.default_rng(0)
-    order = lambda: rng.permutation(N_IMAGES)
+    order = lambda: rng.permutation(n_images)
 
     # ---------------- (a) local
     params, step = _train_step_fn()
@@ -82,13 +116,13 @@ def main() -> List[str]:
     def local_batches():
         while True:
             idx = order()
-            for i in range(0, N_IMAGES - BATCH, BATCH):
+            for i in range(0, n_images - BATCH, BATCH):
                 sel = idx[i:i + BATCH]
                 yield imgs_arr[sel], labs_arr[sel]
 
-    compute = _consume(params, step, local_batches())
+    compute = _consume(params, step, local_batches(), steps=steps)
     local_wall = compute
-    lines.append(row("fig6_local", local_wall / STEPS * 1e6, "baseline"))
+    lines.append(row("fig6_local", local_wall / steps * 1e6, "baseline"))
 
     # ---------------- (b) file mode: sequential GET per sample
     s3 = dl.SimulatedS3Provider(time_scale=TIME_SCALE, latency_s=LAT,
@@ -98,7 +132,7 @@ def main() -> List[str]:
     def filemode_batches():
         while True:
             idx = order()
-            for i in range(0, N_IMAGES - BATCH, BATCH):
+            for i in range(0, n_images - BATCH, BATCH):
                 sel = idx[i:i + BATCH]
                 xs = np.stack([file_store_read(s3, int(j)) for j in sel])
                 yield xs, labs_arr[sel]
@@ -107,11 +141,11 @@ def main() -> List[str]:
 
     s3.reset_stats()
     params, step = _train_step_fn()
-    compute = _consume(params, step, filemode_batches())
+    compute = _consume(params, step, filemode_batches(), steps=steps)
     wall_b = compute + s3.stats["sim_seconds"]   # sequential: IO adds up
     # snapshot BEFORE the fast-file section resets the shared provider
     filemode_stats = io_report.provider_snapshot(s3)
-    lines.append(row("fig6_s3_filemode", wall_b / STEPS * 1e6,
+    lines.append(row("fig6_s3_filemode", wall_b / steps * 1e6,
                      f"slowdown{wall_b / local_wall:.1f}x"))
 
     # ---------------- (c) fast file mode: threaded GETs, still per-sample
@@ -121,18 +155,18 @@ def main() -> List[str]:
     def fastfile_batches():
         while True:
             idx = order()
-            for i in range(0, N_IMAGES - BATCH, BATCH):
+            for i in range(0, n_images - BATCH, BATCH):
                 sel = idx[i:i + BATCH]
                 xs = np.stack(list(pool.map(
                     lambda j: file_store_read(s3, int(j)), sel)))
                 yield xs, labs_arr[sel]
 
     params, step = _train_step_fn()
-    compute = _consume(params, step, fastfile_batches())
+    compute = _consume(params, step, fastfile_batches(), steps=steps)
     wall_c = compute + s3.stats["sim_seconds"] / 8   # 8-way overlapped IO
     # snapshot too (earlier revisions dropped this section's stats)
     fastfile_stats = io_report.provider_snapshot(s3)
-    lines.append(row("fig6_s3_fastfile", wall_c / STEPS * 1e6,
+    lines.append(row("fig6_s3_fastfile", wall_c / steps * 1e6,
                      f"slowdown{wall_c / local_wall:.1f}x"))
 
     # ---------------- (d) deep lake streaming
@@ -151,30 +185,57 @@ def main() -> List[str]:
                 yield b["images"], b["labels"]
 
     params, step = _train_step_fn()
-    compute = _consume(params, step, lake_batches())
+    compute = _consume(params, step, lake_batches(), steps=steps)
     # chunked fetch overlaps compute through the prefetch queue: the critical
     # path is max(compute, per-connection IO), plus residual handoff
     wall_d = max(compute, s3b.stats["sim_seconds"] / 8) \
         + 0.1 * min(compute, s3b.stats["sim_seconds"] / 8)
-    lines.append(row("fig6_deeplake_stream", wall_d / STEPS * 1e6,
+    lines.append(row("fig6_deeplake_stream", wall_d / steps * 1e6,
                      f"slowdown{wall_d / local_wall:.2f}x_"
                      f"reqs{s3b.stats['requests']}_"
                      f"coal{s3b.stats['coalesced_requests']}_"
                      f"down{s3b.stats['bytes_down']}_"
                      f"sim{s3b.stats['sim_seconds']:.3f}"))
 
+    # steady-state stall: seconds the per-connection simulated IO exceeds
+    # compute — with the pipeline's cross-unit prefetch this must stay ~0
+    # (training step remains the bottleneck).  The smoke gate enforces the
+    # absolute budget AND no regression vs. the recorded same-size
+    # baseline (slack + noise floor); it runs BEFORE record() so a failing
+    # stall can never become the next run's baseline (no self-ratchet).
+    stall_d = max(0.0, s3b.stats["sim_seconds"] / 8 - compute)
+    baseline = _baseline_stall(smoke)
+    lake_stats = io_report.provider_snapshot(s3b)
+    lines.append(row("fig6_stall", stall_d * 1e6,
+                     f"budget{STALL_BUDGET_S:.2f}s_prefhits"
+                     f"{lake_stats.get('engine_prefetch_hits', 0)}_wasted"
+                     f"{lake_stats.get('engine_prefetch_wasted_bytes', 0)}"))
+    if smoke:
+        limit = STALL_BUDGET_S
+        if baseline != float("inf"):
+            limit = min(limit, max(STALL_REGRESSION_SLACK * baseline,
+                                   STALL_NOISE_FLOOR_S))
+        assert stall_d <= limit, (
+            f"steady-state stall {stall_d:.3f}s exceeds gate {limit:.3f}s "
+            f"(budget {STALL_BUDGET_S}s, baseline {baseline})")
+
     io_report.record("fig6_streaming_train", {
         "s3_filemode": filemode_stats,
         "s3_fastfile": fastfile_stats,
-        "deeplake_stream": io_report.provider_snapshot(s3b),
+        "deeplake_stream": lake_stats,
         "walls": {"local_s": local_wall, "filemode_s": wall_b,
                   "fastfile_s": wall_c, "deeplake_s": wall_d},
+        "stall": {"stall_seconds": stall_d, "budget_s": STALL_BUDGET_S,
+                  "smoke": int(smoke)},
         "loader": {"io_requests": loader.stats.io_requests,
                    "bytes_fetched": loader.stats.bytes_fetched,
-                   "samples": loader.stats.samples},
+                   "samples": loader.stats.samples,
+                   "wait_seconds": loader.stats.wait_seconds},
     })
     return lines
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    import sys
+
+    print("\n".join(main(smoke="--smoke" in sys.argv[1:])))

@@ -44,13 +44,21 @@ MAX_HISTORY = 20
 
 
 def provider_snapshot(provider) -> Dict[str, float]:
-    """Point-in-time copy of a cost-bearing provider's stats counters.
+    """Point-in-time copy of a cost-bearing provider's stats counters,
+    plus the fetch-engine counters of any engine whose chain reaches this
+    provider (``engine_`` prefix: ``engine_prefetch_hits``,
+    ``engine_prefetch_wasted_bytes``, ...) so prefetch efficacy is
+    visible in ``BENCH_io.json`` next to the request counts.
 
     Take it right after the measured section, before the provider is
     reused or ``reset_stats()`` runs; the copy is safe to record later.
     """
-    return {k: v for k, v in provider.stats.items()
-            if isinstance(v, (int, float)) and not isinstance(v, bool)}
+    out = {k: v for k, v in provider.stats.items()
+           if isinstance(v, (int, float)) and not isinstance(v, bool)}
+    from repro.core import fetch as fetchlib
+    for k, v in fetchlib.engine_stats_for(provider).items():
+        out[f"engine_{k}"] = v
+    return out
 
 
 def record(bench: str, datapoint: Dict[str, dict], path: str = PATH) -> None:

@@ -1,12 +1,21 @@
 #!/usr/bin/env bash
 # One-command gate: tier-1 test suite + TQL pruning/coalescing benchmark
 # (smoke mode) + cold-open budget & maintenance smoke (backfill ->
-# prune-parity, GC dry-run, compaction) + BENCH_io.json validation.
+# prune-parity, GC dry-run, compaction) + fig6 streaming smoke with a
+# stall-seconds budget (cross-unit prefetch must keep compute the
+# bottleneck) + BENCH_io.json validation + no-tracked-bytecode guard.
 # Usage: scripts/check.sh  (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== hygiene: no tracked bytecode =="
+if git ls-files '*.pyc' '*.pyo' | grep -q .; then
+  echo "ERROR: compiled bytecode files are tracked:" >&2
+  git ls-files '*.pyc' '*.pyo' >&2
+  exit 1
+fi
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q
@@ -16,6 +25,9 @@ python -m benchmarks.bench_tql --smoke
 
 echo "== cold-open budget + maintenance smoke =="
 python -m benchmarks.bench_maintenance --smoke
+
+echo "== fig6 streaming smoke (stall-seconds budget) =="
+python -m benchmarks.bench_fig6_streaming_train --smoke
 
 echo "== BENCH_io.json validation =="
 python -m benchmarks.io_report --validate

@@ -31,6 +31,23 @@ import numpy as np
 from .chunks import ChunkStats
 
 
+def ords_of_boundaries(last_idx: Union[Sequence[int], np.ndarray],
+                       global_indices: Union[Sequence[int], np.ndarray]
+                       ) -> np.ndarray:
+    """Vectorized global-index -> chunk-ord map over a chunk boundary
+    table (``last_idx`` = inclusive last global sample index per chunk,
+    ascending).  The single implementation behind
+    :meth:`ChunkEncoder.ords_of` and the manifest's
+    :meth:`~repro.core.manifest.ColumnStats.ords_of`, so planner verdicts
+    are identical whichever source serves the scan index."""
+    arr = np.asarray(global_indices, dtype=np.int64)
+    bounds = np.asarray(last_idx, dtype=np.int64)
+    n = int(bounds[-1]) + 1 if len(bounds) else 0
+    if arr.size and (int(arr.min()) < 0 or int(arr.max()) >= n):
+        raise IndexError(f"indices out of range [0, {n})")
+    return np.searchsorted(bounds, arr, side="left")
+
+
 class ChunkEncoder:
     def __init__(self) -> None:
         self._last_idx: List[int] = []   # inclusive last global sample idx per chunk
@@ -77,12 +94,7 @@ class ChunkEncoder:
 
     def ords_of(self, global_indices: Union[Sequence[int], np.ndarray]) -> np.ndarray:
         """Vectorized ``chunk_ord_of`` over an index array (scan planning)."""
-        arr = np.asarray(global_indices, dtype=np.int64)
-        n = self.num_samples
-        if arr.size and (int(arr.min()) < 0 or int(arr.max()) >= n):
-            raise IndexError(f"indices out of range [0, {n})")
-        return np.searchsorted(np.asarray(self._last_idx, dtype=np.int64),
-                               arr, side="left")
+        return ords_of_boundaries(self._last_idx, global_indices)
 
     def lookup(self, global_idx: int) -> Tuple[str, int]:
         """global index -> (chunk name, local index inside that chunk)."""

@@ -1,27 +1,42 @@
-"""Streaming dataloader (§4.5): chunk-aware parallel fetch + decode + shuffle
-buffer + collate, designed so the *training step*, not the pipeline, is the
-bottleneck.
+"""Streaming dataloader (§4.5) on the unified scan pipeline: **plan →
+schedule → prefetch → stream-decode**, designed so the *training step*, not
+the pipeline, is the bottleneck.
 
-Pipeline per epoch:
+Per epoch:
 
- 1. **Order plan** — view positions, shuffled chunk-group-wise: samples are
+ 1. **Plan** — view positions, shuffled chunk-group-wise: samples are
     grouped by the chunk (of the largest "primary" tensor) they live in; chunk
     groups are visited in random order, samples shuffled within group.  Each
     chunk is therefore fetched ~once per epoch while the emission stream is
     still well mixed — the paper's "shuffled stream access ... without a
     separate shuffle cluster" (§3.5), with the sample-level shuffle buffer
-    providing the final decorrelation.
- 2. **Fetch units** — contiguous runs of planned positions are work items on
-    the :class:`SmartScheduler`.  A pool of threads (the C++-worker analogue:
+    providing the final decorrelation.  A query view arrives with its TQL
+    scan plan already applied: pruned chunks were dropped before the loader
+    ever saw them.
+ 2. **Schedule** — contiguous runs of planned positions become fetch units
+    on the :class:`SmartScheduler`.  ``unit_size`` and ``prefetch_units``
+    default to values derived from the fetch engine's latency/bandwidth
+    estimates via :meth:`CostModel.derive_unit_size` /
+    :meth:`~repro.core.scheduler.CostModel.derive_prefetch_units` (the old
+    fixed defaults remain the local-storage fallback and can be pinned
+    explicitly).
+ 3. **Prefetch** — the whole order plan registers with a
+    :class:`~repro.core.pipeline.ScanPipeline`; as workers start and finish
+    units, the pipeline keeps a ``prefetch_units``-deep, byte-bounded
+    window of upcoming units' chunks in flight on the shared
+    :class:`~repro.core.fetch.FetchEngine` — **across unit boundaries**, so
+    the fetch horizon always runs ahead of the worker pool instead of only
+    warming the first units of the epoch.  Teardown cancels only this
+    loader's queued prefetches.
+ 4. **Stream-decode** — a pool of threads (the C++-worker analogue:
     numpy/zlib decode releases the GIL) fetches each needed chunk ONCE per
-    unit — as a single coalesced request via :meth:`Tensor.read_batch`,
-    full GET vs. ranged reads decided by the fetch engine's cost model —
-    decodes only the needed samples in place, applies the user transform,
-    and deposits samples under a :class:`MemoryBudget` gate.
- 3. **Emission** — shuffle mode draws uniformly from the ready buffer once it
-    reaches ``shuffle_buffer`` samples; sequential mode emits in exact plan
-    order via a reorder buffer.  Samples are collated (stack / list) into
-    batch dicts.
+    unit — as a single coalesced request via :meth:`Tensor.read_batch`
+    (resident prefetched blobs are sliced for free), full GET vs. ranged
+    reads decided by the engine's cost model — decodes only the needed
+    samples, applies the user transform, and deposits samples under a
+    :class:`MemoryBudget` gate.  Shuffle mode then draws uniformly from
+    the ready buffer; sequential mode emits in exact plan order via a
+    reorder buffer; samples are collated (stack / list) into batch dicts.
 
 The loader is re-iterable; every epoch reshuffles with ``seed + epoch``.
 """
@@ -38,8 +53,14 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
 import numpy as np
 
 from . import fetch as fetchlib
+from .pipeline import ScanPipeline, derive_schedule_params
 from .scheduler import CostModel, MemoryBudget, SmartScheduler
 from .views import DatasetView
+
+#: fixed fallbacks for cost-free (local/memory) providers, where adaptive
+#: sizing has no latency signal to work from
+DEFAULT_UNIT_SIZE = 16
+DEFAULT_PREFETCH_UNITS = 8
 
 
 @dataclass
@@ -70,11 +91,13 @@ class LoaderStats:
 
 
 class _Unit:
-    __slots__ = ("positions", "needed_at")
+    __slots__ = ("positions", "needed_at", "index")
 
-    def __init__(self, positions: List[int], needed_at: float) -> None:
+    def __init__(self, positions: List[int], needed_at: float,
+                 index: int) -> None:
         self.positions = positions
         self.needed_at = needed_at
+        self.index = index      # plan-order rank; the pipeline's step key
 
 
 class DeepLakeLoader:
@@ -91,8 +114,8 @@ class DeepLakeLoader:
         collate: str = "stack",            # stack | list | callable
         drop_last: bool = False,
         seed: int = 0,
-        prefetch_units: int = 8,
-        unit_size: int = 16,
+        prefetch_units: Optional[int] = None,
+        unit_size: Optional[int] = None,
         memory_budget_bytes: int = 512 << 20,
         ranged_reads: Optional[bool] = None,
     ) -> None:
@@ -106,8 +129,11 @@ class DeepLakeLoader:
         self.collate = collate
         self.drop_last = drop_last
         self.seed = seed
-        self.prefetch_units = prefetch_units
-        self.unit_size = max(1, unit_size)
+        # None = adaptive: re-derived every epoch from the fetch engine's
+        # latency/bandwidth EWMA + observed per-unit decode times
+        self.prefetch_units = None if prefetch_units is None \
+            else max(1, prefetch_units)
+        self.unit_size = None if unit_size is None else max(1, unit_size)
         self.memory = MemoryBudget(memory_budget_bytes)
         self.ranged_reads = ranged_reads
         self.costs = CostModel()
@@ -164,40 +190,29 @@ class DeepLakeLoader:
             plan.extend(g)
         return plan
 
-    # ------------------------------------------------------------ fetch unit
-    def _prefetch_upcoming(self, units: List["_Unit"]) -> None:
-        """Warm the fetch engine with the leading units' chunks so the
-        first batches don't pay cold-start latency.  Futures carry this
-        loader as owner: teardown cancels only them, and fetches they
-        cause are attributed to this loader's stats.  Queued bytes are
-        bounded by half the destination buffer (LRU tier or resident
-        store), chunk sizes estimated from the stats sidecar."""
-        if not fetchlib.coalescing_enabled():
-            return  # A/B mode: measure the pre-batching request pattern
+    # ------------------------------------------------------------ scheduling
+    def _schedule_params(self) -> tuple:
+        """(unit_size, prefetch_units) for this epoch: explicit values win;
+        otherwise derived from the engine's latency/bandwidth estimates
+        (cost-bearing providers) or the fixed local defaults."""
+        unit_size, pf_units = self.unit_size, self.prefetch_units
+        if unit_size is not None and pf_units is not None:
+            return unit_size, pf_units
         if fetchlib.provider_cost_params(self.view.dataset.storage) is None:
-            return  # local/memory: prefetch threads cost more than they save
+            d_us, d_pf = DEFAULT_UNIT_SIZE, DEFAULT_PREFETCH_UNITS
+        else:
+            d_us, d_pf = derive_schedule_params(
+                self._engine, self.costs, self._estimate_sample_bytes(),
+                self.memory.max_bytes)
+        return (unit_size if unit_size is not None else d_us,
+                pf_units if pf_units is not None else d_pf)
 
-        def account(nbytes: int) -> None:
-            self.stats.bytes_fetched += nbytes
-            self.stats.io_requests += 1
-            self.costs.note("io_requests", 1)
-
-        queued_bytes = 0
-        for name in self.tensor_names:
-            if name in self.view.derived:
-                continue
-            t = self.view._base_tensor(name)
-            ords: List[int] = []
-            seen: set = set()
-            for u in units:
-                for p in u.positions:
-                    o = t.encoder.chunk_ord_of(int(self.view.indices[p]))
-                    if o not in seen:
-                        seen.add(o)
-                        ords.append(o)
-            queued_bytes = t.prefetch_chunks(ords, owner=self,
-                                             on_fetched=account,
-                                             queued_bytes=queued_bytes)
+    def _account_prefetch(self, nbytes: int) -> None:
+        """Physical fetches the pipeline's prefetch window caused are
+        attributed to this loader's stats (never dedup'd re-requests)."""
+        self.stats.bytes_fetched += nbytes
+        self.stats.io_requests += 1
+        self.costs.note("io_requests", 1)
 
     def _estimate_sample_bytes(self) -> int:
         total = 0
@@ -258,26 +273,36 @@ class DeepLakeLoader:
         n = len(plan)
         if n == 0:
             return
+        unit_size, prefetch_units = self._schedule_params()
         units = [
-            _Unit(plan[i: i + self.unit_size], needed_at=float(i))
-            for i in range(0, n, self.unit_size)
+            _Unit(plan[i: i + unit_size], needed_at=float(i),
+                  index=i // unit_size)
+            for i in range(0, n, unit_size)
         ]
         sched = SmartScheduler(self.costs)
         ready: "queue.Queue[Optional[List[tuple]]]" = queue.Queue()
         est_bytes = self._estimate_sample_bytes()
-        inflight = threading.Semaphore(self.prefetch_units)
+        inflight = threading.Semaphore(prefetch_units)
         stop = threading.Event()
 
         for u in units:
             sched.submit(u, u.needed_at, "unit")
         sched.close()
-        self._prefetch_upcoming(units[: self.prefetch_units])
+        # the whole order plan registers with the scan pipeline: the
+        # prefetch window follows the workers across unit boundaries
+        pipe = ScanPipeline.for_units(
+            self.view, [t for t in self.tensor_names
+                        if t not in self.view.derived],
+            [u.positions for u in units], prefetch_units=prefetch_units,
+            owner=self, on_fetched=self._account_prefetch)
+        pipe.on_unit_start(0)  # warm the leading window before workers spin
 
         def worker() -> None:
             while not stop.is_set():
                 u = sched.take(timeout=0.1)
                 if u is None:
                     break
+                pipe.on_unit_start(u.index)
                 inflight.acquire()
                 if stop.is_set():
                     inflight.release()
@@ -291,7 +316,11 @@ class DeepLakeLoader:
                     sched.submit(u, u.needed_at, "unit")
                     continue
                 try:
-                    ready.put(self._fetch_unit(u))
+                    result = self._fetch_unit(u)
+                    # unit decoded: its chunks leave the prefetch window,
+                    # freeing budget for the next units' chunks
+                    pipe.on_unit_done(u.index)
+                    ready.put(result)
                 except Exception as e:  # surface worker errors to consumer
                     ready.put(e)  # type: ignore[arg-type]
 
@@ -361,7 +390,7 @@ class DeepLakeLoader:
         finally:
             stop.set()
             sched.close()
-            self._engine.cancel_pending(owner=self)  # drop OUR prefetches
+            pipe.close()  # drop OUR queued prefetches (owner-scoped)
             # unblock any workers stuck on inflight/memory gates
             for _ in threads:
                 inflight.release()

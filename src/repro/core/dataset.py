@@ -312,9 +312,15 @@ class Dataset:
         return self.commit(f"merge {ref!r} into {self.branch!r}")
 
     # ------------------------------------------------------------------ query
-    def query(self, tql: str, engine: str = "auto", use_stats: bool = True):
+    def query(self, tql: str, engine: str = "auto", use_stats: bool = True,
+              stream: Optional[bool] = None):
+        """Run a TQL query.  ``stream``: None = auto (WHERE evaluates per
+        chunk group on the scan pipeline when the view spans several
+        groups), False = whole-view column stack, True = force streaming.
+        Both modes return byte-identical result sets."""
         from .tql import execute_query
-        return execute_query(self, tql, engine=engine, use_stats=use_stats)
+        return execute_query(self, tql, engine=engine, use_stats=use_stats,
+                             stream=stream)
 
     def dataloader(self, **kw):
         from .dataloader import DeepLakeLoader

@@ -207,7 +207,12 @@ class FetchEngine:
         self._inflight: Dict[str, Tuple[Future, object]] = {}  # key -> (fut, owner)
         self._resident: "OrderedDict[str, bytes]" = OrderedDict()
         self._resident_size = 0
-        self.stats = {"requests": 0, "ranges": 0, "bytes": 0, "hits": 0}
+        # prefetch-efficacy bookkeeping: resident blobs not yet consumed
+        # (key -> nbytes) and in-flight fetches already consumed by a waiter
+        self._unconsumed: Dict[str, int] = {}
+        self._inflight_consumed: set = set()
+        self.stats = {"requests": 0, "ranges": 0, "bytes": 0, "hits": 0,
+                      "prefetch_hits": 0, "prefetch_wasted_bytes": 0}
 
     @property
     def provider(self) -> StorageProvider:
@@ -225,28 +230,70 @@ class FetchEngine:
             if data is not None:
                 self._resident.move_to_end(key)
                 self.stats["hits"] += 1
+                self._mark_consumed(key)
                 return data
             entry = self._inflight.get(key)
         if entry is not None and entry[0].done():
             try:
-                return entry[0].result()
+                blob = entry[0].result()
             except (CancelledError, Exception):
                 return None
+            with self._lock:
+                self._mark_inflight_consumed(key)
+            return blob
         return None
 
-    def _admit(self, key: str, data: bytes) -> None:
-        # an LRU tier above the charged provider already holds full objects
-        if self.cache_above or len(data) > self.resident_bytes:
+    def _mark_consumed(self, key: str) -> None:
+        """A resident prefetched blob was read (lock held): first
+        consumption counts as a prefetch hit."""
+        if self._unconsumed.pop(key, None) is not None:
+            self.stats["prefetch_hits"] += 1
+
+    def _mark_inflight_consumed(self, key: str) -> None:
+        """An in-flight prefetch's result was consumed before admission
+        (lock held)."""
+        if key not in self._inflight_consumed:
+            self._inflight_consumed.add(key)
+            self.stats["prefetch_hits"] += 1
+
+    def _waste(self, key: str, nbytes: int) -> None:
+        """A prefetched blob leaves the engine unconsumed (lock held)."""
+        if self._unconsumed.pop(key, None) is not None:
+            self.stats["prefetch_wasted_bytes"] += nbytes
+
+    #: bound on consumption-tracking keys when an LRU tier holds the blobs
+    _TRACK_KEYS_MAX = 4096
+
+    def _admit(self, key: str, data: bytes, consumed: bool = False) -> None:
+        # an LRU tier above the charged provider already holds full objects;
+        # track the KEY (no blob) so a later engine read of it still counts
+        # as a prefetch hit — eviction there is invisible, so such entries
+        # can only hit, never count as wasted
+        if self.cache_above:
+            if not consumed:
+                with self._lock:
+                    self._unconsumed[key] = 0
+                    while len(self._unconsumed) > self._TRACK_KEYS_MAX:
+                        self._unconsumed.pop(next(iter(self._unconsumed)))
+            return
+        if len(data) > self.resident_bytes:
+            if not consumed:  # fetched, never held, never read: pure waste
+                with self._lock:
+                    self.stats["prefetch_wasted_bytes"] += len(data)
             return
         with self._lock:
             old = self._resident.pop(key, None)
             if old is not None:
                 self._resident_size -= len(old)
+                self._waste(key, len(old))
             self._resident[key] = data
             self._resident_size += len(data)
+            if not consumed:
+                self._unconsumed[key] = len(data)
             while self._resident_size > self.resident_bytes and self._resident:
-                _, v = self._resident.popitem(last=False)
+                k, v = self._resident.popitem(last=False)
                 self._resident_size -= len(v)
+                self._waste(k, len(v))
 
     def discard(self, key: str) -> None:
         """Writer invalidation: drop the resident blob AND abandon any
@@ -257,6 +304,10 @@ class FetchEngine:
             v = self._resident.pop(key, None)
             if v is not None:
                 self._resident_size -= len(v)
+                self._waste(key, len(v))
+            else:
+                self._unconsumed.pop(key, None)  # key-only tracking entry
+            self._inflight_consumed.discard(key)
             entry = self._inflight.pop(key, None)
         if entry is not None:
             entry[0].cancel()  # best effort; a running fetch is abandoned
@@ -281,9 +332,12 @@ class FetchEngine:
         if entry is None:
             return None
         try:
-            return entry[0].result()
+            blob = entry[0].result()
         except (CancelledError, Exception):
             return None
+        with self._lock:
+            self._mark_inflight_consumed(key)
+        return blob
 
     def fetch_full(self, key: str) -> bytes:
         """Whole-object read, resident/in-flight aware.
@@ -302,6 +356,8 @@ class FetchEngine:
         t0 = time.perf_counter()
         data = self.provider.get(key)
         self._observe(1, 0, len(data), time.perf_counter() - t0)
+        with self._lock:  # prefetched into an LRU tier above: still a hit
+            self._mark_consumed(key)
         return data
 
     def fetch_ranges(self, key: str, ranges: Sequence[Range],
@@ -333,6 +389,8 @@ class FetchEngine:
             return out
         spans, assign = coalesce_ranges(ranges, self.est.gap_threshold())
         t0 = time.perf_counter()
+        with self._lock:  # prefetched into an LRU tier above: still a hit
+            self._mark_consumed(key)
         payloads = self.provider.get_ranges(key, spans)
         nbytes = sum(len(p) for p in payloads)
         self._observe(len(spans), len(ranges), nbytes,
@@ -364,6 +422,9 @@ class FetchEngine:
                 missing.append(k)
         if missing:
             t0 = time.perf_counter()
+            with self._lock:  # LRU-tier prefetch consumption
+                for k in missing:
+                    self._mark_consumed(k)
             fetched = self.provider.get_many(missing)
             nbytes = sum(len(v) for v in fetched.values())
             self._observe(len(fetched), 0, nbytes,
@@ -456,10 +517,12 @@ class FetchEngine:
                 current = cur is not None and cur[0] is f
                 if current:
                     del self._inflight[key]
+                consumed = key in self._inflight_consumed
+                self._inflight_consumed.discard(key)
             # admit only while still current: a discard() (writer rewrote
             # the key) or supersession while in flight abandons the result
             if current and not f.cancelled() and f.exception() is None:
-                self._admit(key, f.result())
+                self._admit(key, f.result(), consumed=consumed)
 
         fut.add_done_callback(_done)
         return fut
@@ -498,3 +561,24 @@ def engine_for(provider: StorageProvider) -> FetchEngine:
             eng = FetchEngine(provider)
             _engines[provider] = eng
         return eng
+
+
+def engine_stats_for(provider: StorageProvider) -> Dict[str, int]:
+    """Summed stats of every live engine whose provider chain contains
+    ``provider`` (walking ``.base`` links).  Benchmarks snapshot the
+    cost-bearing provider at the bottom of a cache chain while the engine
+    is keyed on the chain's top — this bridges the two so prefetch-efficacy
+    counters (``prefetch_hits``, ``prefetch_wasted_bytes``) land in
+    ``BENCH_io.json`` next to the provider's request counters."""
+    out: Dict[str, int] = {}
+    with _engines_lock:
+        items = [(p, e) for p, e in _engines.items()]
+    for top, eng in items:
+        p: Optional[StorageProvider] = top
+        while isinstance(p, StorageProvider):
+            if p is provider:
+                for k, v in eng.stats.items():
+                    out[k] = out.get(k, 0) + int(v)
+                break
+            p = getattr(p, "base", None)
+    return out

@@ -18,7 +18,14 @@ collection, checkpointing, and vacuum):
     never-covered nodes re-read from the loose per-file layout — into one
     fresh consolidated segment and collapses the pointer to it (the
     Delta-checkpoint pattern).  Legacy datasets without a manifest adopt
-    one here.  After compaction a cold ``Dataset`` open costs exactly two
+    one here.  Node snapshots are rebuilt through
+    :meth:`VersionControl.node_snapshot`, which now derives the manifest's
+    **column-statistics section** (format v2) from each tensor's encoder +
+    stats sidecar — so compaction is also how a legacy or pre-v2 dataset
+    gains plan-at-open: after it, TQL ``WHERE`` planning runs from the
+    2-request cold open with zero tensor binds (run ``backfill_stats``
+    first on pre-stats datasets so the lifted section carries real
+    bounds).  After compaction a cold ``Dataset`` open costs exactly two
     requests: pointer + one segment.  Superseded segment objects are left
     on storage on purpose (a reader that fetched the old pointer a moment
     ago may still be reading them) and become orphans for the GC.
@@ -181,7 +188,11 @@ class MaintenanceRunner:
         nodes = {nid: vc.node_snapshot(nid) for nid in vc.commits}
         report.details.update(
             nodes_folded=len(nodes), segments_folded=segments_before,
-            stale_readopted=stale_before, adopted=int(adopted))
+            stale_readopted=stale_before, adopted=int(adopted),
+            # tensors whose scan index (chunk bounds + stats) was lifted
+            # into the manifest's column-statistics section: plan-at-open
+            # coverage after this compaction
+            column_stats_lifted=sum(len(ns.stats) for ns in nodes.values()))
         if dry_run:
             return report
         if vc.manifest is None:

@@ -19,7 +19,7 @@ Storage layout (keys relative to the dataset root)
 
 Pointer schema::
 
-    {"format":     "deeplake-repro-manifest-v1",
+    {"format":     "deeplake-repro-manifest-v2",
      "generation": <int, bumped by every successful CAS>,
      "segments":   [<segment key>, ...],   # newest first
      "vc":         {...} | null,           # version_control_info snapshot
@@ -27,9 +27,11 @@ Pointer schema::
 
 Segment schema::
 
-    {"format": "deeplake-repro-manifest-v1",
+    {"format": "deeplake-repro-manifest-v2",
      "nodes": {<node id>: {"schema": [<tensor>, ...],
-                           "tensors": {<tensor>: {<state file>: b64|null}}}}}
+                           "tensors": {<tensor>: {<state file>: b64|null}},
+                           "stats":   {<tensor>: {"last_idx": [...],
+                                                  "chunks": [{...}|null]}}}}}
 
 Each segment entry is a **complete snapshot of one commit node**: the raw
 bytes of every per-tensor state file (``meta.json``, ``chunk_encoder``,
@@ -38,6 +40,22 @@ bytes of every per-tensor state file (``meta.json``, ``chunk_encoder``,
 whole-node replacement therefore reconstructs the catalog exactly; the
 loose per-file layout stays on storage untouched, so legacy readers (and
 the fallback path) always see a complete dataset.
+
+Column-statistics section (format v2, plan-at-open)
+---------------------------------------------------
+
+``"stats"`` is a decoded *scan index* per tensor: the chunk-boundary table
+(``last_idx``, the encoder's inclusive last-global-index per chunk) plus
+the per-chunk :class:`~repro.core.chunks.ChunkStats` records, in chunk-ord
+order.  It duplicates information already inside the b64 ``chunk_encoder``
+/ ``chunk_stats.json`` state bytes, but in a form
+:func:`repro.core.tql.planner.plan_where` can consume directly — so a TQL
+``WHERE`` on a committed dataset is planned straight from the 2-request
+cold open, before any :class:`~repro.core.tensor.Tensor` binds.  The
+section is optional everywhere: v1 segments (and nodes snapshotted without
+decodable encoder bytes) simply lack it and readers fall back to binding
+tensors.  v1 pointers/segments load unchanged; the first publication
+rewrites the pointer as v2.
 
 CAS protocol (optimistic concurrency)
 -------------------------------------
@@ -102,13 +120,18 @@ import base64
 import json
 import uuid
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Set
+from typing import Callable, Dict, List, Optional, Sequence, Set, Union
 
+import numpy as np
+
+from .chunks import ChunkStats
 from .storage import StorageError, StorageProvider
 
 MANIFEST_KEY = "manifest.json"
 SEGMENT_PREFIX = "manifests/"
-FORMAT = "deeplake-repro-manifest-v1"
+FORMAT = "deeplake-repro-manifest-v2"
+#: readable formats: v1 predates the column-statistics section
+COMPAT_FORMATS = ("deeplake-repro-manifest-v1", FORMAT)
 
 #: fold to a single consolidated segment while the payload stays this small
 AUTO_CONSOLIDATE_BYTES = 4 << 20
@@ -131,23 +154,78 @@ def _b64d(s: Optional[str]) -> Optional[bytes]:
 
 
 @dataclass
+class ColumnStats:
+    """Manifest-resident scan index of one tensor (format v2).
+
+    ``last_idx[i]`` is the inclusive last global sample index of chunk
+    ``i`` (the chunk-encoder boundary table) and ``chunk_stats[i]`` its
+    :class:`~repro.core.chunks.ChunkStats` record (None when the chunk
+    predates the stats sidecar).  Together they are everything
+    ``plan_where`` needs to classify chunk groups — no tensor bind, no
+    storage request.
+    """
+
+    last_idx: np.ndarray
+    chunk_stats: List[Optional[ChunkStats]]
+
+    @property
+    def num_samples(self) -> int:
+        return int(self.last_idx[-1]) + 1 if len(self.last_idx) else 0
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.last_idx)
+
+    def ords_of(self, indices: Union[Sequence[int], np.ndarray]) -> np.ndarray:
+        """Vectorized global-index -> chunk-ord map (the same
+        implementation :meth:`ChunkEncoder.ords_of` uses, so the
+        manifest-served planner path can never diverge from the
+        bound-tensor path)."""
+        from .chunk_encoder import ords_of_boundaries
+        return ords_of_boundaries(self.last_idx, indices)
+
+    def stats_of(self, chunk_ord: int) -> Optional[ChunkStats]:
+        return self.chunk_stats[int(chunk_ord)]
+
+    def to_json(self) -> dict:
+        return {"last_idx": [int(x) for x in self.last_idx],
+                "chunks": [None if s is None else s.to_json()
+                           for s in self.chunk_stats]}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ColumnStats":
+        return cls(
+            last_idx=np.asarray(d.get("last_idx", []), dtype=np.int64),
+            chunk_stats=[None if s is None else ChunkStats.from_json(s)
+                         for s in d.get("chunks", [])])
+
+
+@dataclass
 class NodeState:
     """Complete state snapshot of one commit node: schema + raw state-file
-    bytes per tensor (``None`` marks a file the node never wrote)."""
+    bytes per tensor (``None`` marks a file the node never wrote), plus the
+    optional decoded column-statistics section (format v2)."""
 
     schema: List[str] = field(default_factory=list)
     tensors: Dict[str, Dict[str, Optional[bytes]]] = field(default_factory=dict)
+    #: tensor -> ColumnStats; absent for v1 segments / undecodable state
+    stats: Dict[str, ColumnStats] = field(default_factory=dict)
 
     def to_json(self) -> dict:
-        return {"schema": list(self.schema),
-                "tensors": {t: {f: _b64e(b) for f, b in files.items()}
-                            for t, files in self.tensors.items()}}
+        out = {"schema": list(self.schema),
+               "tensors": {t: {f: _b64e(b) for f, b in files.items()}
+                           for t, files in self.tensors.items()}}
+        if self.stats:
+            out["stats"] = {t: cs.to_json() for t, cs in self.stats.items()}
+        return out
 
     @classmethod
     def from_json(cls, d: dict) -> "NodeState":
         return cls(schema=list(d.get("schema", [])),
                    tensors={t: {f: _b64d(s) for f, s in files.items()}
-                            for t, files in d.get("tensors", {}).items()})
+                            for t, files in d.get("tensors", {}).items()},
+                   stats={t: ColumnStats.from_json(s)
+                          for t, s in d.get("stats", {}).items()})
 
 
 def _new_segment_key(generation: int) -> str:
@@ -195,7 +273,7 @@ class Manifest:
         if raw is None:
             return None
         pointer = json.loads(raw.decode())
-        if pointer.get("format") != FORMAT:
+        if pointer.get("format") not in COMPAT_FORMATS:
             raise StorageError(f"unsupported manifest format: "
                                f"{pointer.get('format')!r}")
         counters = {"requests": 1, "bytes": len(raw)}
@@ -244,6 +322,15 @@ class Manifest:
         if ns is None:
             return None
         return ns.tensors.get(tensor, {}).get(fname)
+
+    def column_stats(self, node_id: str,
+                     tensor: str) -> Optional[ColumnStats]:
+        """The covered snapshot's scan index of one tensor, or None when
+        the node is uncovered/stale or the segment predates format v2 —
+        callers then fall back to binding the tensor."""
+        if not self.covers(node_id):
+            return None
+        return self.nodes[node_id].stats.get(tensor)
 
     # ------------------------------------------------------- pointer updates
     def _pointer_dict(self) -> dict:
@@ -339,6 +426,9 @@ class Manifest:
                 total += len(t) + 32
                 for f, b in files.items():
                     total += len(f) + 16 + (0 if b is None else len(b) * 4 // 3)
+            for t, cs in ns.stats.items():
+                # ~20 chars per boundary int, ~220 per ChunkStats record
+                total += len(t) + 32 + cs.num_chunks * 240
         return total
 
     def commit_update(self, node_states: Dict[str, NodeState],

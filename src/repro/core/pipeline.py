@@ -1,0 +1,349 @@
+"""Unified scan pipeline: plan → schedule → prefetch → stream-decode.
+
+The paper's performance story (§3.5, §4.3–4.5) is that the query planner,
+the streaming loader, and the fetch layer behave as ONE pipeline that keeps
+the training step — never I/O — the bottleneck.  This module is that
+pipeline's spine: a :class:`ScanPlan`-shaped chunk-group schedule owned by
+:class:`ScanPipeline`, consumed by every layer of the read path:
+
+* **plan** — :func:`repro.core.tql.planner.plan_where` classifies chunk
+  groups from :class:`ScanSource` statistics.  Sources resolve
+  manifest-first (:meth:`DatasetView.scan_source
+  <repro.core.views.DatasetView.scan_source>`): on a committed dataset the
+  chunk-boundary table and per-chunk stats ride in the manifest's
+  column-statistics section, so planning costs **zero tensor binds and
+  zero storage requests** beyond the cold open itself.
+* **schedule** — the pipeline partitions a view's row positions into
+  chunk groups (TQL streaming) or fetch units (the loader's order plan),
+  with ``unit_size`` / ``prefetch_units`` derived from the fetch engine's
+  latency/bandwidth model via :meth:`CostModel.derive_unit_size
+  <repro.core.scheduler.CostModel.derive_unit_size>` instead of fixed
+  defaults.
+* **prefetch** — a rolling, byte-bounded window of whole-chunk prefetches
+  runs ahead of consumption, across unit boundaries: while chunk group
+  ``k`` decodes, group ``k+1``'s blobs are already in flight on
+  :meth:`FetchEngine.prefetch <repro.core.fetch.FetchEngine.prefetch>`.
+  The window never queues more than half the destination buffer, so a
+  deep scan cannot evict its own staged blobs; teardown cancels only this
+  pipeline's still-queued fetches.
+* **stream-decode** — :meth:`ScanPipeline.stream` yields one chunk group
+  at a time; the TQL executor evaluates WHERE per group as blobs arrive
+  instead of stacking whole columns first.
+
+One pipeline instance serves one scan; engines (and their resident
+stores) stay shared per provider, so concurrent pipelines dedup in-flight
+chunks against each other.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple, Union)
+
+import numpy as np
+
+from . import fetch as fetchlib
+from .chunks import ChunkStats
+from .manifest import ColumnStats
+from .scheduler import CostModel
+
+
+# --------------------------------------------------------------- scan sources
+class ScanSource:
+    """Read-only view of one tensor's chunk layout + statistics, enough
+    for planning and scheduling without touching payloads."""
+
+    name: str
+
+    def ords_of(self, indices) -> np.ndarray:          # pragma: no cover
+        raise NotImplementedError
+
+    def stats_of(self, chunk_ord: int) -> Optional[ChunkStats]:
+        raise NotImplementedError                       # pragma: no cover
+
+
+class TensorScanSource(ScanSource):
+    """Source backed by a bound :class:`~repro.core.tensor.Tensor`
+    (sees live open-chunk state on a dirty head)."""
+
+    def __init__(self, tensor) -> None:
+        self.tensor = tensor
+        self.name = tensor.name
+
+    def ords_of(self, indices) -> np.ndarray:
+        return self.tensor.encoder.ords_of(indices)
+
+    def stats_of(self, chunk_ord: int) -> Optional[ChunkStats]:
+        return self.tensor.chunk_stats_of(chunk_ord)
+
+
+class ManifestScanSource(ScanSource):
+    """Source served from the manifest's column-statistics section —
+    no tensor bind, no storage request (plan-at-open)."""
+
+    def __init__(self, name: str, column_stats: ColumnStats) -> None:
+        self.name = name
+        self.cs = column_stats
+
+    def ords_of(self, indices) -> np.ndarray:
+        return self.cs.ords_of(indices)
+
+    def stats_of(self, chunk_ord: int) -> Optional[ChunkStats]:
+        return self.cs.stats_of(chunk_ord)
+
+
+# ------------------------------------------------------------ prefetch window
+class _PrefetchWindow:
+    """Rolling byte-bounded whole-chunk prefetch over an ordered key plan.
+
+    ``plan[i]`` holds the ``(key, est_bytes)`` pairs first needed at step
+    ``i`` (a chunk group or a fetch unit), deduplicated to their first
+    step.  ``top_up`` queues steps in order while outstanding bytes stay
+    under the budget (half the destination buffer — LRU tier or the
+    engine's resident store), so staged-but-unconsumed blobs are never
+    evicted by the window's own later prefetches; ``release`` returns a
+    completed step's bytes to the budget.  One step is always admitted
+    when the window is empty, so a single oversized step still streams.
+    """
+
+    def __init__(self, engine: "fetchlib.FetchEngine",
+                 plan: List[List[Tuple[str, int]]], owner: object,
+                 on_fetched: Optional[Callable[[int], None]] = None) -> None:
+        self.engine = engine
+        self.plan = plan
+        self.owner = owner
+        self.on_fetched = on_fetched
+        self.budget = (engine.cache_above or engine.resident_bytes) // 2
+        self._step_bytes = [sum(b for _, b in step) for step in plan]
+        self._next = 0                      # first step not yet queued
+        self._released = [False] * len(plan)
+        self.outstanding = 0
+        # the loader's worker pool drives top_up/release concurrently;
+        # pointer + byte accounting must move atomically
+        self._lock = threading.Lock()
+
+    def top_up(self, upto_step: int) -> None:
+        """Queue prefetches for steps ``[next, upto_step]`` while the byte
+        budget allows (cross-step: the pointer runs ahead of consumption).
+        Steps already consumed on demand (workers outran the window) are
+        skipped, never prefetched after the fact."""
+        upto = min(upto_step, len(self.plan) - 1)
+        while True:
+            with self._lock:
+                if self._next > upto:
+                    return
+                step = self._next
+                if self._released[step]:    # consumed on demand: skip
+                    self._next += 1
+                    continue
+                nb = self._step_bytes[step]
+                if self.outstanding and self.outstanding + nb > self.budget:
+                    return  # the rest is fetched (coalesced) on demand
+                self.outstanding += nb
+                self._next += 1
+            for key, _est in self.plan[step]:
+                self.engine.prefetch(key, owner=self.owner,
+                                     on_fetched=self.on_fetched)
+
+    def release(self, step: int) -> None:
+        """Step ``step`` was consumed: return its bytes to the budget (a
+        step consumed before it was ever queued is only marked, so
+        ``top_up`` skips it)."""
+        with self._lock:
+            if self._released[step]:
+                return
+            self._released[step] = True
+            if step < self._next:           # was queued: bytes outstanding
+                self.outstanding = max(0, self.outstanding
+                                       - self._step_bytes[step])
+
+    def cancel(self) -> int:
+        return self.engine.cancel_pending(owner=self.owner)
+
+
+# -------------------------------------------------------------- scan pipeline
+class ScanPipeline:
+    """Chunk-group schedule of one scan over a :class:`DatasetView`.
+
+    Two entry points, one schedule currency:
+
+    * :meth:`for_query` — chunk-group streaming for the TQL executor:
+      :meth:`stream` yields ``(positions, subview)`` per group, with the
+      next group's chunks prefetched while the current one decodes.
+    * :meth:`for_units` — the loader's order plan: fetch units register
+      here and :meth:`on_unit_start` keeps a ``prefetch_units``-deep
+      window of upcoming units' chunks in flight **across unit
+      boundaries** (the old per-epoch one-shot warmup only covered the
+      leading units).
+
+    Prefetch is active only against cost-bearing (remote) providers with
+    coalescing enabled — on local/memory storage prefetch threads cost
+    more than they save; scheduling and streaming still apply.
+    """
+
+    def __init__(self, view, tensors: Sequence[str], *,
+                 owner: object = None,
+                 on_fetched: Optional[Callable[[int], None]] = None) -> None:
+        self.view = view
+        self.names = [n for n in tensors
+                      if n not in view.derived and n in view.tensor_names]
+        self.owner = owner if owner is not None else self
+        self.on_fetched = on_fetched
+        self.engine = fetchlib.engine_for(view.dataset.storage)
+        self.active = (fetchlib.coalescing_enabled()
+                       and fetchlib.provider_cost_params(
+                           view.dataset.storage) is not None)
+        self._window: Optional[_PrefetchWindow] = None
+        self._groups: List[np.ndarray] = []
+        self._ord_cols: List[np.ndarray] = []
+        self._horizon = 0
+
+    # ------------------------------------------------------------ query mode
+    @classmethod
+    def for_query(cls, view, tensors: Sequence[str],
+                  owner: object = None) -> Optional["ScanPipeline"]:
+        """Pipeline over the chunk groups of ``view`` (rows grouped by the
+        tuple of chunks they live in across ``tensors``, in first-
+        appearance order).  None when no base tensor is scannable."""
+        pipe = cls(view, tensors, owner=owner)
+        if not pipe.names or not len(view):
+            return None
+        ord_cols = []
+        for n in pipe.names:
+            src = view.scan_source(n)
+            try:
+                ord_cols.append(src.ords_of(view.indices))
+            except IndexError:
+                return None
+        key_matrix = np.stack(ord_cols, axis=1)        # (rows, tensors)
+        _uniq, inverse = np.unique(key_matrix, axis=0, return_inverse=True)
+        order_rows = np.argsort(inverse, kind="stable")
+        bounds = np.flatnonzero(np.diff(inverse[order_rows])) + 1
+        parts = np.split(order_rows, bounds)           # parts[g]: positions
+        firsts = np.full(len(parts), len(view), dtype=np.int64)
+        np.minimum.at(firsts, inverse, np.arange(len(view)))
+        pipe._groups = [parts[g] for g in np.argsort(firsts, kind="stable")]
+        pipe._ord_cols = ord_cols
+        return pipe
+
+    @property
+    def n_groups(self) -> int:
+        return len(self._groups)
+
+    def _query_keyplan(self) -> List[List[Tuple[str, int]]]:
+        """Per-group (chunk key, est bytes), dedup'd to first need."""
+        seen: set = set()
+        plan: List[List[Tuple[str, int]]] = []
+        tensors = [self.view._base_tensor(n) for n in self.names]
+        for positions in self._groups:
+            step: List[Tuple[str, int]] = []
+            for t, ords in zip(tensors, self._ord_cols):
+                o = int(ords[positions[0]])  # one ord tuple per group
+                key, est = _chunk_key_est(t, o)
+                if key is not None and key not in seen:
+                    seen.add(key)
+                    step.append((key, est))
+            plan.append(step)
+        return plan
+
+    def stream(self) -> Iterator[Tuple[np.ndarray, Any]]:
+        """Yield ``(positions, subview)`` per chunk group, prefetching the
+        window of upcoming groups while the current one decodes.  The
+        caller evaluates each subview and scatters results back by
+        position; teardown (exhaustion or ``close``) cancels the
+        pipeline's still-queued prefetches."""
+        if self.active and self._window is None:
+            self._window = _PrefetchWindow(self.engine, self._query_keyplan(),
+                                           self.owner, self.on_fetched)
+        try:
+            for gi, positions in enumerate(self._groups):
+                if self._window is not None:
+                    self._window.top_up(gi + 1)  # group k decodes, k+1 flies
+                yield positions, self.view[positions]
+                if self._window is not None:
+                    self._window.release(gi)
+        finally:
+            self.close()
+
+    # ----------------------------------------------------------- loader mode
+    @classmethod
+    def for_units(cls, view, tensors: Sequence[str],
+                  units: Sequence[Sequence[int]], *, prefetch_units: int,
+                  owner: object = None,
+                  on_fetched: Optional[Callable[[int], None]] = None
+                  ) -> "ScanPipeline":
+        """Pipeline over the loader's fetch units (``units[i]`` = view
+        positions of unit ``i``, in plan order)."""
+        pipe = cls(view, tensors, owner=owner, on_fetched=on_fetched)
+        pipe._horizon = max(0, int(prefetch_units))
+        if not pipe.active or not pipe.names or not units:
+            return pipe
+        bound = [view._base_tensor(n) for n in pipe.names]
+        ord_cols = [t.encoder.ords_of(view.indices) for t in bound]
+        seen: set = set()
+        plan: List[List[Tuple[str, int]]] = []
+        for unit in units:
+            step: List[Tuple[str, int]] = []
+            for t, ords in zip(bound, ord_cols):
+                for p in unit:
+                    o = int(ords[p])
+                    key, est = _chunk_key_est(t, o)
+                    if key is not None and key not in seen:
+                        seen.add(key)
+                        step.append((key, est))
+            plan.append(step)
+        pipe._window = _PrefetchWindow(pipe.engine, plan, pipe.owner,
+                                       on_fetched)
+        return pipe
+
+    def on_unit_start(self, unit_index: int) -> None:
+        """A worker began unit ``unit_index``: keep the next
+        ``prefetch_units`` units' chunks in flight (cross-unit: the
+        window pointer runs ahead of the worker pool)."""
+        if self._window is not None:
+            self._window.top_up(unit_index + self._horizon)
+
+    def on_unit_done(self, unit_index: int) -> None:
+        """Unit consumed: return its chunk bytes to the window budget and
+        immediately extend the horizon with the freed headroom."""
+        if self._window is not None:
+            self._window.release(unit_index)
+            self._window.top_up(unit_index + self._horizon)
+
+    # -------------------------------------------------------------- teardown
+    def close(self) -> int:
+        """Cancel this pipeline's queued-but-not-started prefetches
+        (running fetches complete and park for other consumers)."""
+        if self._window is not None:
+            return self._window.cancel()
+        return 0
+
+
+def _chunk_key_est(tensor, chunk_ord: int) -> Tuple[Optional[str], int]:
+    """(storage key, estimated bytes) of one chunk; (None, 0) for the open
+    chunk (never prefetched: its bytes live in the builder)."""
+    name = tensor.encoder.name_of(chunk_ord)
+    if tensor._builder is not None and name == tensor._open_name:
+        return None, 0
+    st = tensor.stats.get(name)
+    est = st.nbytes if st is not None and st.nbytes \
+        else tensor.meta.max_chunk_size
+    return tensor._chunk_key(name), int(est)
+
+
+# ------------------------------------------------------------ schedule sizing
+def derive_schedule_params(engine: "fetchlib.FetchEngine",
+                           cost_model: CostModel, sample_bytes: int,
+                           memory_budget_bytes: int) -> Tuple[int, int]:
+    """(unit_size, prefetch_units) from the engine's latency/bandwidth
+    estimates (provider-seeded or EWMA-learned) + the cost model's
+    observed per-unit decode times — the adaptive replacement for the old
+    fixed ``unit_size=16`` / ``prefetch_units=8`` defaults."""
+    est = engine.est
+    unit_size = cost_model.derive_unit_size(est.latency_s, est.bandwidth_bps,
+                                            sample_bytes)
+    prefetch_units = cost_model.derive_prefetch_units(
+        est.latency_s, est.bandwidth_bps, unit_size * max(sample_bytes, 1),
+        memory_budget_bytes)
+    return unit_size, prefetch_units

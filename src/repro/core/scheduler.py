@@ -17,6 +17,7 @@ Two of the paper's three loader properties live here:
 from __future__ import annotations
 
 import heapq
+import math
 import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
@@ -84,6 +85,53 @@ class CostModel:
     def estimate(self, klass: str) -> Tuple[float, float]:
         with self._lock:
             return self._io.get(klass, 1e-3), self._cpu.get(klass, 1e-4)
+
+    def has_estimate(self, klass: str) -> bool:
+        with self._lock:
+            return klass in self._io or klass in self._cpu
+
+    # ------------------------------------------------- adaptive scan sizing
+    #: bounds for derived fetch-unit sizes / prefetch depths (samples, units)
+    UNIT_SIZE_BOUNDS = (8, 256)
+    PREFETCH_UNIT_BOUNDS = (2, 32)
+
+    def derive_unit_size(self, latency_s: float, bandwidth_bps: float,
+                         sample_bytes: int) -> int:
+        """Fetch-unit size (samples) from the storage cost model.
+
+        A unit's useful payload should at least match the provider's
+        latency-bandwidth product (the bytes one round-trip could have
+        carried): smaller units pay proportionally more request overhead
+        per sample, larger ones only add buffering.  Clamped to
+        :data:`UNIT_SIZE_BOUNDS`.
+        """
+        target_bytes = max(1.0, latency_s * bandwidth_bps)
+        lo, hi = self.UNIT_SIZE_BOUNDS
+        return int(min(hi, max(lo, round(target_bytes / max(sample_bytes, 1)))))
+
+    def derive_prefetch_units(self, latency_s: float, bandwidth_bps: float,
+                              unit_bytes: int,
+                              memory_budget_bytes: Optional[int] = None
+                              ) -> int:
+        """Prefetch depth (units in flight) from the cost model + EWMA.
+
+        Classic pipeline sizing: depth ≈ unit fetch time over unit
+        consume time, so the consumer never drains the window faster than
+        fetches refill it.  Fetch time comes from the latency/bandwidth
+        model; consume time from the observed ``"unit"`` CPU EWMA once
+        iterations have fed it (a conservative prior before that).
+        Optionally bounded so the whole window fits in half the loader's
+        memory budget.  Clamped to :data:`PREFETCH_UNIT_BOUNDS`.
+        """
+        fetch_s = latency_s + unit_bytes / max(bandwidth_bps, 1.0)
+        _io, cpu_s = self.estimate("unit")
+        if not self.has_estimate("unit"):
+            cpu_s = 1e-2  # prior: ~10ms of decode+transform per unit
+        depth = int(math.ceil(fetch_s / max(cpu_s, 1e-4))) + 1
+        lo, hi = self.PREFETCH_UNIT_BOUNDS
+        if memory_budget_bytes:
+            hi = max(lo, min(hi, memory_budget_bytes // (2 * max(unit_bytes, 1))))
+        return int(min(hi, max(lo, depth)))
 
 
 @dataclass(order=True)

@@ -1,17 +1,37 @@
-"""TQL execution (§4.3).
+"""TQL execution (§4.3): streaming chunk-group evaluation on the scan
+pipeline.
 
-The parsed query becomes a computational graph of tensor operations evaluated
-over a dataset view.  Two engines:
+The parsed query becomes a computational graph of tensor operations
+evaluated over a dataset view, in the unified pipeline order **plan →
+schedule → prefetch → stream-decode** (:mod:`repro.core.pipeline`):
 
-* **vectorized** — when every referenced tensor is fixed-shape, columns are
-  stacked once and the whole WHERE/ORDER expression evaluates as array math.
-  With ``engine="jax"`` the expression graph is jitted through XLA — this is
+1. **plan** — :func:`~.planner.plan_where` classifies chunk groups
+   prune/sure/verify from scan statistics (manifest-first: on a committed
+   dataset this costs zero tensor binds and zero storage requests);
+2. **schedule** — the verify tail becomes a :class:`ScanPipeline` chunk-
+   group schedule in verdict order;
+3. **prefetch** — while group ``k`` decodes, the pipeline hands group
+   ``k+1``'s chunks to :meth:`FetchEngine.prefetch`, byte-bounded so the
+   scan never evicts its own staged blobs;
+4. **stream-decode** — the WHERE predicate evaluates per chunk group as
+   blobs arrive, instead of stacking whole columns first: peak memory is
+   one chunk group, not one column set, and fetch overlaps evaluation.
+
+Two evaluation engines per group:
+
+* **vectorized** — when every referenced tensor is fixed-shape, the
+  group's columns are stacked and the whole expression evaluates as array
+  math.  With ``engine="jax"`` the expression graph is jitted through XLA —
   the paper's "execution of the query can be delegated to external tensor
   computation frameworks" (§4.3).
 * **row-wise** — always-correct fallback (ragged tensors, UDFs without a
   batched form, CONTAINS over text, ...).
 
-Pipeline order matches the paper's example: WHERE → ORDER BY → ARRANGE BY
+Both paths, and the streaming vs. whole-view execution modes, produce
+byte-identical result sets (predicates are row-local; ``RANDOM()``
+disables streaming because it draws from a view-wide stream).
+
+Clause order matches the paper's example: WHERE → ORDER BY → ARRANGE BY
 (stable regroup) → SAMPLE BY → LIMIT/OFFSET → SELECT projections.
 """
 
@@ -22,44 +42,13 @@ from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from .. import fetch
+from ..pipeline import ScanPipeline
 from ..views import DatasetView
 from .ast_nodes import (BinOp, Call, Index, ListExpr, Literal, Node, Query,
                         SelectItem, SliceSpec, TensorRef, UnaryOp)
 from .functions import get_function
 from .parser import parse
-from .planner import ScanPlan, plan_where
-
-
-def _prefetch_verify_chunks(view: DatasetView, tensors: List[str]) -> None:
-    """Warm the fetch engine with the verify rows' chunks, in verdict order.
-
-    Only worthwhile against a latency-modeled (remote) provider; the
-    prefetched blobs land in the engine's resident store (or the LRU cache
-    tier above the remote), where both the vectorized column stack and the
-    row-wise fallback pick them up without issuing further requests.
-    Queued bytes are bounded by half the destination buffer so a huge
-    verify tail cannot evict its own prefetches before they are consumed
-    (chunk sizes estimated from the stats sidecar).
-    """
-    storage = view.dataset.storage
-    if not fetch.coalescing_enabled():
-        return  # A/B mode: measure the pre-batching request pattern
-    if fetch.provider_cost_params(storage) is None:
-        return
-    queued_bytes = 0
-    for name in tensors:
-        if name in view.derived or name not in view.tensor_names:
-            continue
-        t = view._base_tensor(name)
-        try:
-            ords = t.encoder.ords_of(view.indices)
-        except IndexError:
-            continue
-        _, first_pos = np.unique(ords, return_index=True)
-        queued_bytes = t.prefetch_chunks(
-            ords[np.sort(first_pos)],  # verdict order, deduped
-            queued_bytes=queued_bytes)
+from .planner import ScanPlan, _referenced, plan_where
 
 
 class Unvectorizable(Exception):
@@ -279,10 +268,15 @@ def _substitute(node: Node, aliases: Dict[str, Node]) -> Node:
 
 class Executor:
     def __init__(self, query: Query, engine: str = "auto",
-                 use_stats: bool = True) -> None:
+                 use_stats: bool = True,
+                 stream: Optional[bool] = None) -> None:
         self.query = query
         self.engine = engine
         self.use_stats = use_stats
+        #: WHERE execution mode: None = auto (stream when the view spans
+        #: multiple chunk groups), False = whole-view column stack (the
+        #: pre-pipeline path, kept for A/B equivalence), True = force
+        self.stream = stream
         self.scan_plan: Optional[ScanPlan] = None  # set by run() when planned
         self.seed = _query_seed(repr(query))
         self.rng = np.random.default_rng(self.seed)
@@ -320,6 +314,30 @@ class Executor:
             return out
 
     def _where_mask(self, view: DatasetView, node: Node) -> np.ndarray:
+        """Per-row WHERE mask, streamed per chunk group on the scan
+        pipeline: group ``k+1``'s chunks prefetch while group ``k``
+        evaluates, and only one group's columns are resident at a time.
+        Falls back to the whole-view evaluation (:meth:`_mask_of`) when
+        streaming is disabled, meaningless (single group, no base
+        tensors) or unsound (``RANDOM()`` draws from a view-wide
+        stream).  Both modes return byte-identical masks."""
+        if self.stream is False or node.calls("RANDOM") or not len(view):
+            return self._mask_of(view, node)
+        names = [n for n in _referenced(node)
+                 if n not in view.derived and n in view.tensor_names]
+        if not names:
+            return self._mask_of(view, node)
+        pipe = ScanPipeline.for_query(view, names, owner=self)
+        if pipe is None or (self.stream is None and pipe.n_groups <= 1):
+            if pipe is not None:
+                pipe.close()
+            return self._mask_of(view, node)
+        mask = np.zeros(len(view), dtype=bool)
+        for positions, sub in pipe.stream():
+            mask[positions] = self._mask_of(sub, node)
+        return mask
+
+    def _mask_of(self, view: DatasetView, node: Node) -> np.ndarray:
         """Per-row boolean mask under `_truthy` semantics (all elements true,
         empty is False) — the vectorized path must agree with the row path."""
         mask = self.eval_all(view, node)
@@ -343,12 +361,11 @@ class Executor:
                 self.scan_plan = plan
                 if plan is not None and plan.effective:
                     # stats pushdown: pruned chunks are never fetched; only
-                    # 'verify' rows pay predicate evaluation, with their
-                    # chunks prefetched in verdict order
+                    # 'verify' rows pay predicate evaluation, streamed per
+                    # chunk group in verdict order on the scan pipeline
                     parts = [plan.sure]
                     if len(plan.verify):
                         sub = view[plan.verify]
-                        _prefetch_verify_chunks(sub, plan.tensors)
                         keep = self._where_mask(sub, q.where)
                         parts.append(plan.verify[np.nonzero(keep)[0]])
                     view = view[np.sort(np.concatenate(parts)).astype(np.int64)]
@@ -421,7 +438,8 @@ class Executor:
 
 
 def execute_query(source: Union["Dataset", DatasetView], text: str,
-                  engine: str = "auto", use_stats: bool = True) -> DatasetView:
+                  engine: str = "auto", use_stats: bool = True,
+                  stream: Optional[bool] = None) -> DatasetView:
     q = parse(text)
     if isinstance(source, DatasetView):
         if q.version:
@@ -435,4 +453,5 @@ def execute_query(source: Union["Dataset", DatasetView], text: str,
                if t not in base.tensor_names and t not in aliases]
     if missing:
         raise KeyError(f"query references unknown tensors: {missing}")
-    return Executor(q, engine=engine, use_stats=use_stats).run(base)
+    return Executor(q, engine=engine, use_stats=use_stats,
+                    stream=stream).run(base)

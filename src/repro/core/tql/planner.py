@@ -411,6 +411,13 @@ class ScanPlan:
 def plan_where(view, where: Node) -> Optional[ScanPlan]:
     """Classify every row of ``view`` under ``where`` using chunk statistics.
 
+    Statistics come from :meth:`DatasetView.scan_source
+    <repro.core.views.DatasetView.scan_source>`: on a committed
+    (manifest-covered) dataset the chunk-boundary table and per-chunk
+    records ride in the manifest's column-statistics section, so planning
+    runs straight off the cold open — zero tensor binds, zero storage
+    requests (plan-at-open).  Legacy/stale nodes fall back to binding.
+
     Returns None when planning is impossible or meaningless: no base tensors
     referenced, RANDOM() present, or indices outside a tensor's range.  A
     returned plan is always sound: pruned rows are certainly False, sure rows
@@ -422,15 +429,15 @@ def plan_where(view, where: Node) -> Optional[ScanPlan]:
              if n not in view.derived and n in view.tensor_names]
     if not names:
         return None
-    tensors = {}
+    sources = {}
     ord_cols = []
     for n in names:
-        t = view._base_tensor(n)
+        src = view.scan_source(n)
         try:
-            ords = t.encoder.ords_of(view.indices)
+            ords = src.ords_of(view.indices)
         except IndexError:
             return None
-        tensors[n] = t
+        sources[n] = src
         ord_cols.append(ords)
     key_matrix = np.stack(ord_cols, axis=1)  # (rows, tensors)
     _uniq, inverse = np.unique(key_matrix, axis=0, return_inverse=True)
@@ -444,7 +451,7 @@ def plan_where(view, where: Node) -> Optional[ScanPlan]:
     def leaf(tname: str, chunk_ord: int) -> Interval:
         k = (tname, chunk_ord)
         if k not in stats_cache:
-            st = tensors[tname].chunk_stats_of(chunk_ord)
+            st = sources[tname].stats_of(chunk_ord)
             coverage["consulted"] += 1
             if st is None or not st.exact:
                 coverage["missing"] += 1

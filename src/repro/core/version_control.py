@@ -46,7 +46,10 @@ import uuid
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
+import numpy as np
+
 from . import manifest as manifestlib
+from .chunk_encoder import ChunkEncoder, ChunkStatsTable
 from .storage import StorageError, StorageProvider
 
 VC_INFO_KEY = "version_control_info.json"
@@ -263,12 +266,64 @@ class VersionControl:
 
     def node_snapshot(self, node_id: str) -> manifestlib.NodeState:
         """Complete :class:`~repro.core.manifest.NodeState` of one node
-        (schema + raw bytes of every state file of every tensor)."""
+        (schema + raw bytes of every state file of every tensor), including
+        the decoded column-statistics section (manifest format v2) so the
+        TQL planner can classify chunk groups straight from the cold-open
+        pointer fold, before any tensor binds."""
         schema = self.schema_tensors(node_id)
         tensors = {
             t: {f: self.get_state(t, f, node_id) for f in self.ALL_STATE_FILES}
             for t in schema}
-        return manifestlib.NodeState(schema=schema, tensors=tensors)
+        stats: Dict[str, manifestlib.ColumnStats] = {}
+        for t in schema:
+            cs = self._column_stats_from_state(tensors[t])
+            if cs is not None:
+                stats[t] = cs
+        return manifestlib.NodeState(schema=schema, tensors=tensors,
+                                     stats=stats)
+
+    @staticmethod
+    def _column_stats_from_state(
+            files: Dict[str, Optional[bytes]]
+    ) -> Optional[manifestlib.ColumnStats]:
+        """Decode a tensor's encoder + stats-sidecar bytes into the
+        manifest's scan index (None when the encoder bytes are absent or
+        unreadable — the section is an optimization, never load-bearing)."""
+        enc_raw = files.get("chunk_encoder")
+        if not enc_raw:
+            return None
+        try:
+            enc = ChunkEncoder.deserialize(enc_raw)
+        except Exception:
+            return None
+        st_raw = files.get("chunk_stats.json")
+        try:
+            table = ChunkStatsTable.deserialize(st_raw) if st_raw \
+                else ChunkStatsTable()
+        except Exception:
+            table = ChunkStatsTable()
+        names = enc.chunk_names()
+        return manifestlib.ColumnStats(
+            last_idx=np.asarray([enc.chunk_span(o)[1]
+                                 for o in range(len(names))],
+                                dtype=np.int64),
+            chunk_stats=[table.get(n) for n in names])
+
+    def column_stats(self, tensor: str, node_id: Optional[str] = None
+                     ) -> Optional[manifestlib.ColumnStats]:
+        """Bind-free scan index of one tensor: served from the manifest's
+        column-statistics section when the node is covered (zero requests),
+        None otherwise — callers fall back to binding the tensor."""
+        if self.manifest is None:
+            return None
+        return self.manifest.column_stats(node_id or self.current_id, tensor)
+
+    def tensor_length(self, tensor: str,
+                      node_id: Optional[str] = None) -> Optional[int]:
+        """Row count of a tensor without binding it (manifest scan index),
+        or None when the node is uncovered."""
+        cs = self.column_stats(tensor, node_id)
+        return None if cs is None else cs.num_samples
 
     # ------------------------------------------------------------ node state
     @property

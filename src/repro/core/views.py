@@ -64,13 +64,22 @@ class DatasetView:
     # ------------------------------------------------------------- factory
     @classmethod
     def full(cls, dataset, node_id: Optional[str] = None) -> "DatasetView":
-        if node_id is None:
-            n = dataset.min_len if dataset.tensor_names else 0
-        else:
-            names = dataset.vc.schema_tensors(node_id)
-            n = min((len(Tensor(t, dataset.vc, node_id=node_id)) for t in names),
-                    default=0)
-        return cls(dataset, np.arange(n), node_id=node_id)
+        """All rows of ``dataset`` at a version.  Row counts come from the
+        manifest's column-statistics section when the node is covered, so
+        opening the full view of a committed dataset binds no tensors."""
+        names = dataset.vc.schema_tensors(node_id)
+        lengths = []
+        for t in names:
+            if node_id is None and t in dataset._tensors:
+                n = len(dataset._tensors[t])  # live handle may be unflushed
+            else:
+                n = dataset.vc.tensor_length(t, node_id)
+            if n is None:  # uncovered/legacy node: bind for the count
+                n = (len(dataset._tensor(t)) if node_id is None
+                     else len(Tensor(t, dataset.vc, node_id=node_id)))
+            lengths.append(n)
+        return cls(dataset, np.arange(min(lengths, default=0)),
+                   node_id=node_id)
 
     # ------------------------------------------------------------- tensors
     @property
@@ -86,6 +95,26 @@ class DatasetView:
             else:
                 self._bound[name] = Tensor(name, self.dataset.vc, node_id=self.node_id)
         return self._bound[name]
+
+    def scan_source(self, name: str):
+        """Chunk layout + statistics of one base tensor for planning and
+        scheduling (:mod:`repro.core.pipeline`), resolved manifest-first:
+
+        * an already-bound tensor (this view's cache, or the dataset's
+          live handle, which may hold unflushed appends) always wins;
+        * else a covered node's manifest column-statistics section serves
+          the scan index with **zero tensor binds and zero requests**;
+        * else the tensor is bound (legacy / stale-node fallback).
+        """
+        from .pipeline import ManifestScanSource, TensorScanSource
+        if name in self._bound:
+            return TensorScanSource(self._bound[name])
+        if self.node_id is None and name in self.dataset._tensors:
+            return TensorScanSource(self.dataset._tensors[name])
+        cs = self.dataset.vc.column_stats(name, self.node_id)
+        if cs is not None:
+            return ManifestScanSource(name, cs)
+        return TensorScanSource(self._base_tensor(name))
 
     def tensor(self, name: str) -> TensorView:
         return TensorView(self._base_tensor(name), self.indices)
@@ -140,10 +169,11 @@ class DatasetView:
                    node_id=d["node"], tensors=d["tensors"])
 
     # --------------------------------------------------------------- chaining
-    def query(self, tql: str, engine: str = "auto",
-              use_stats: bool = True) -> "DatasetView":
+    def query(self, tql: str, engine: str = "auto", use_stats: bool = True,
+              stream: Optional[bool] = None) -> "DatasetView":
         from .tql import execute_query
-        return execute_query(self, tql, engine=engine, use_stats=use_stats)
+        return execute_query(self, tql, engine=engine, use_stats=use_stats,
+                             stream=stream)
 
     def dataloader(self, **kw):
         from .dataloader import DeepLakeLoader

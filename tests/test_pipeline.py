@@ -1,0 +1,304 @@
+"""Unified scan pipeline: plan-at-open, streaming TQL execution parity,
+cross-unit prefetch, adaptive schedule sizing, prefetch-efficacy counters."""
+
+import json
+import time
+
+import numpy as np
+import pytest
+
+import repro.core as dl
+from repro.core import fetch as fetchlib
+from repro.core.manifest import (COMPAT_FORMATS, MANIFEST_KEY, ColumnStats,
+                                 Manifest)
+from repro.core.pipeline import ScanPipeline, derive_schedule_params
+from repro.core.scheduler import CostModel
+from repro.core.tql import parse, plan_where
+from repro.core.views import DatasetView
+
+
+def _build(storage=None, n=300, dims=64, n_tensors=2):
+    """Clustered multi-tensor dataset, small chunks (pruning granularity)."""
+    rng = np.random.default_rng(7)
+    ds = dl.Dataset(storage)
+    for j in range(n_tensors):
+        ds.create_tensor(f"t{j}", dtype="float32", min_chunk_size=1 << 11,
+                         max_chunk_size=1 << 12)
+    for i in range(n):
+        band = i // 50
+        ds.append({f"t{j}": (rng.standard_normal(dims).astype(np.float32)
+                             + np.float32(10 * band + j))
+                   for j in range(n_tensors)})
+    ds.commit("fixture")
+    return ds
+
+
+# --------------------------------------------------------------- plan-at-open
+def test_plan_where_zero_binds_zero_requests_on_cold_open():
+    """Acceptance: plan_where on a committed dataset produces verdicts
+    straight from the 2-request cold open — no tensor binds, no further
+    storage requests (the manifest's column-statistics section)."""
+    base = dl.MemoryProvider()
+    _build(base)
+    s3 = dl.SimulatedS3Provider(base, time_scale=0)
+    ds = dl.Dataset(s3)
+    open_requests = s3.stats["requests"]
+    assert open_requests <= 3  # cold-open budget
+
+    view = DatasetView.full(ds)          # row count from the manifest too
+    q = parse("SELECT * FROM dataset WHERE MIN(t0) > 20 AND t1 < 100")
+    plan = plan_where(view, q.where)
+    assert plan is not None and plan.effective
+    assert len(plan.pruned) > 0
+    assert s3.stats["requests"] == open_requests, \
+        "planning issued storage requests"
+    assert view._bound == {} and ds._tensors == {}, \
+        "planning bound a tensor"
+    assert plan.stats_coverage == 1.0
+
+
+def test_manifest_v1_pointer_still_loads():
+    """Backward compat: a v1 pointer/segment set (no column-statistics
+    section) loads, plans via the tensor-bind fallback, identical rows."""
+    base = dl.MemoryProvider()
+    ds = _build(base)
+    expect = ds.query("SELECT * FROM dataset WHERE MIN(t0) > 20")
+    # rewrite the manifest as v1: drop stats sections + format markers
+    ptr = json.loads(base.get(MANIFEST_KEY).decode())
+    ptr["format"] = "deeplake-repro-manifest-v1"
+    for seg_key in ptr["segments"]:
+        seg = json.loads(base.get(seg_key).decode())
+        seg["format"] = "deeplake-repro-manifest-v1"
+        for node in seg["nodes"].values():
+            node.pop("stats", None)
+        base.put(seg_key, json.dumps(seg).encode())
+    base.put(MANIFEST_KEY, json.dumps(ptr).encode())
+
+    ds2 = dl.Dataset(base)
+    assert ds2.manifest is not None
+    assert ds2.vc.column_stats("t0") is None        # v1: no scan index
+    got = ds2.query("SELECT * FROM dataset WHERE MIN(t0) > 20")
+    assert got.indices.tolist() == expect.indices.tolist()
+
+
+def test_column_stats_roundtrip_with_missing_records():
+    cs = ColumnStats(last_idx=np.asarray([9, 19, 29], np.int64),
+                     chunk_stats=[None, None, None])
+    rt = ColumnStats.from_json(cs.to_json())
+    assert rt.num_samples == 30 and rt.num_chunks == 3
+    assert rt.stats_of(1) is None
+    assert rt.ords_of([0, 9, 10, 29]).tolist() == [0, 0, 1, 2]
+    with pytest.raises(IndexError):
+        cs.ords_of([30])
+
+
+def test_backfill_then_compaction_restores_plan_at_open():
+    """Legacy pre-stats dataset: backfill + compaction must yield a
+    manifest whose column-statistics section plans with zero binds."""
+    base = dl.MemoryProvider()
+    _build(base)
+    # strip manifest + stats sidecars: simulate a pre-PR-1 dataset
+    base.delete(MANIFEST_KEY)
+    for key in list(base.list_keys("manifests/")):
+        base.delete(key)
+    for key in list(base.list_keys()):
+        if key.endswith("chunk_stats.json"):
+            base.delete(key)
+    legacy = dl.Dataset(base)
+    legacy.maintenance().backfill_stats()
+    report = legacy.maintenance().compact_manifest()
+    assert report.details["column_stats_lifted"] > 0
+
+    ds = dl.Dataset(base)
+    view = DatasetView.full(ds)
+    plan = plan_where(view, parse(
+        "SELECT * FROM dataset WHERE MIN(t0) > 20").where)
+    assert plan is not None and len(plan.pruned) > 0
+    assert view._bound == {} and ds._tensors == {}
+
+
+# ------------------------------------------------------- streaming execution
+QUERIES = [
+    "SELECT * FROM dataset WHERE MIN(t0) > 20",
+    "SELECT * FROM dataset WHERE t0 > 15 AND t1 < 41",
+    "SELECT * FROM dataset WHERE MEAN(t0) + MEAN(t1) > 50",
+    "SELECT * FROM dataset WHERE t0 != 3",
+    "SELECT t0, MEAN(t1) AS m FROM dataset WHERE m > 30 ORDER BY m",
+]
+
+
+@pytest.mark.parametrize("use_stats", [True, False])
+def test_streaming_results_byte_identical(use_stats):
+    """Acceptance: TQL results byte-identical on both execution paths
+    (streamed chunk groups vs whole-view column stack)."""
+    ds = _build()
+    for q in QUERIES:
+        a = ds.query(q, use_stats=use_stats, stream=True)
+        b = ds.query(q, use_stats=use_stats, stream=False)
+        assert a.indices.tolist() == b.indices.tolist(), q
+        for t in ("t0", "t1"):
+            np.testing.assert_array_equal(a[t].numpy(), b[t].numpy())
+
+
+def test_streaming_prefetches_ahead_one_request_per_chunk():
+    """Verify-tail streaming: each consulted chunk is fetched at most
+    once (whole-chunk prefetch, picked up by the group decode)."""
+    base = dl.MemoryProvider()
+    _build(base)
+    s3 = dl.SimulatedS3Provider(base, time_scale=0)
+    ds = dl.Dataset(s3)
+    nchunks = sum(ds[t].num_chunks for t in ds.tensor_names)
+    expect = _build().query("SELECT * FROM dataset WHERE MIN(t0) > 20",
+                            use_stats=False).indices.tolist()
+    s3.reset_stats()
+    view = ds.query("SELECT * FROM dataset WHERE MIN(t0) > 20")
+    assert view.indices.tolist() == expect
+    assert s3.stats["requests"] <= nchunks
+    eng = fetchlib.engine_for(s3)
+    assert eng.stats["prefetch_hits"] > 0
+
+
+def test_random_disables_streaming_and_matches_row_path():
+    ds = _build(n=80)
+    q = "SELECT * FROM dataset WHERE RANDOM() > 0.5"
+    a = ds.query(q)            # auto mode must fall back to whole-view
+    b = ds.query(q, stream=False)
+    assert a.indices.tolist() == b.indices.tolist()
+
+
+# ------------------------------------------------------- cross-unit prefetch
+def _remote_loader_ds(n=200, chunk=1 << 12):
+    base = dl.MemoryProvider()
+    rng = np.random.default_rng(3)
+    ds = dl.Dataset(base)
+    ds.create_tensor("x", dtype="float32", min_chunk_size=chunk // 2,
+                     max_chunk_size=chunk)
+    ds.create_tensor("lab", htype="class_label")
+    for i in range(n):
+        ds.append({"x": rng.standard_normal(64).astype(np.float32),
+                   "lab": np.int64(i)})
+    ds.commit("c")
+    s3 = dl.SimulatedS3Provider(base, time_scale=0)
+    return dl.Dataset(s3), s3
+
+
+def test_cross_unit_prefetch_spans_unit_boundaries():
+    """The prefetch window must reach past the leading units: with a
+    window deeper than one unit, chunks of later units are already in
+    flight/resident when their workers start."""
+    ds, s3 = _remote_loader_ds()
+    loader = ds.dataloader(batch_size=16, num_workers=2, unit_size=8,
+                           prefetch_units=6, seed=0)
+    s3.reset_stats()
+    labs = [int(v) for b in loader for v in b["lab"]]
+    assert labs == list(range(200))
+    eng = fetchlib.engine_for(ds.storage)
+    assert eng.stats["prefetch_hits"] > 0
+    # every chunk fetched ~once: prefetch + read dedup via the engine
+    nchunks = ds["x"].num_chunks + ds["lab"].num_chunks
+    assert s3.stats["requests"] <= nchunks + 2
+
+
+def test_early_teardown_cancels_loader_prefetches():
+    """Satellite: breaking out of iteration cancels the loader's queued
+    prefetches (owner-scoped) and the loader stays re-iterable."""
+    ds, s3 = _remote_loader_ds()
+    loader = ds.dataloader(batch_size=8, num_workers=2, unit_size=4,
+                           prefetch_units=8, seed=0)
+    it = iter(loader)
+    next(it)
+    it.close()  # early teardown -> finally -> pipeline.close()
+    eng = fetchlib.engine_for(ds.storage)
+    deadline = time.time() + 5
+    while time.time() < deadline:
+        with eng._lock:
+            mine = [k for k, (f, o) in eng._inflight.items() if o is loader]
+        if not mine:
+            break
+        time.sleep(0.05)
+    assert not mine, "loader-owned prefetches survived teardown"
+    # the engine still serves other consumers and the loader re-iterates
+    labs = [int(v) for b in loader for v in b["lab"]]
+    assert sorted(labs) == list(range(200))
+
+
+def test_prefetch_window_never_evicts_own_staged_blobs():
+    """Satellite: the byte-bounded window must stage at most half the
+    resident store, so its own later prefetches never evict staged,
+    still-unconsumed blobs (prefetch_wasted_bytes stays 0)."""
+    ds, s3 = _remote_loader_ds(n=400, chunk=1 << 13)
+    eng = fetchlib.engine_for(ds.storage)
+    eng.resident_bytes = 64 << 10   # tiny store: whole scan won't fit
+    loader = ds.dataloader(batch_size=16, num_workers=2, unit_size=8,
+                           prefetch_units=16, seed=0)
+    labs = [int(v) for b in loader for v in b["lab"]]
+    assert sorted(labs) == list(range(400))
+    assert eng.stats["prefetch_hits"] > 0
+    assert eng.stats["prefetch_wasted_bytes"] == 0
+
+
+# ----------------------------------------------------------- epoch behaviour
+def test_epoch_reshuffle_seed_determinism():
+    """Satellite: (seed, epoch) fully determines the order plan — two
+    fresh loaders replay identical epochs; consecutive epochs differ."""
+    ds, _ = _remote_loader_ds(n=120)
+    mk = lambda: ds.dataloader(batch_size=8, shuffle=True, num_workers=4,
+                               unit_size=8, seed=11)
+    a, b = mk(), mk()
+    plans_a = [a._plan(np.random.default_rng(11 + e)) for e in range(3)]
+    plans_b = [b._plan(np.random.default_rng(11 + e)) for e in range(3)]
+    assert plans_a == plans_b
+    assert plans_a[0] != plans_a[1] != plans_a[2]
+    # full iteration: same multiset each epoch, deterministic sequential
+    seq = ds.dataloader(batch_size=8, shuffle=False, num_workers=4, seed=11)
+    e1 = [int(v) for bt in seq for v in bt["lab"]]
+    e2 = [int(v) for bt in seq for v in bt["lab"]]
+    assert e1 == e2 == list(range(120))
+    sh1 = [int(v) for bt in a for v in bt["lab"]]
+    sh2 = [int(v) for bt in a for v in bt["lab"]]
+    assert sorted(sh1) == sorted(sh2) == list(range(120))
+    assert sh1 != sh2
+
+
+# -------------------------------------------------------- adaptive schedule
+def test_adaptive_schedule_params_derive_from_cost_model():
+    ds, _ = _remote_loader_ds()
+    loader = ds.dataloader(batch_size=16)       # adaptive defaults
+    us, pf = loader._schedule_params()
+    lo_u, hi_u = CostModel.UNIT_SIZE_BOUNDS
+    lo_p, hi_p = CostModel.PREFETCH_UNIT_BOUNDS
+    assert lo_u <= us <= hi_u and lo_p <= pf <= hi_p
+    # 30ms x 50MB/s => ~1.5MB per unit; 64-float samples = 256B payload
+    assert us > 16, "remote schedule should exceed the local default"
+    # explicit values always win
+    pinned = ds.dataloader(batch_size=16, unit_size=5, prefetch_units=3)
+    assert pinned._schedule_params() == (5, 3)
+
+
+def test_local_providers_keep_fixed_defaults():
+    base = dl.MemoryProvider()
+    ds = _build(base, n=40)
+    loader = ds.dataloader(batch_size=8)
+    assert loader._schedule_params() == (16, 8)
+
+
+def test_derive_params_respects_memory_budget():
+    cm = CostModel()
+    eng = fetchlib.FetchEngine(dl.SimulatedS3Provider(time_scale=0))
+    us, pf = derive_schedule_params(eng, cm, sample_bytes=1 << 20,
+                                    memory_budget_bytes=8 << 20)
+    assert us * (1 << 20) * pf <= 8 << 20 or pf == CostModel.PREFETCH_UNIT_BOUNDS[0]
+
+
+# -------------------------------------------------------------- io reporting
+def test_provider_snapshot_includes_engine_counters():
+    from benchmarks import io_report
+    base = dl.MemoryProvider()
+    _build(base)
+    s3 = dl.SimulatedS3Provider(base, time_scale=0)
+    ds = dl.Dataset(s3)
+    ds.query("SELECT * FROM dataset WHERE MIN(t0) > 20")
+    snap = io_report.provider_snapshot(s3)
+    assert "engine_prefetch_hits" in snap
+    assert "engine_prefetch_wasted_bytes" in snap
+    assert snap["requests"] > 0

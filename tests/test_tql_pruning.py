@@ -200,16 +200,20 @@ def test_versioned_query_uses_that_versions_stats():
 
 
 def test_selective_query_fetches_fewer_chunks_from_s3():
-    s3 = dl.SimulatedS3Provider(time_scale=0)
-    ds = _build(storage=s3)
+    # independent provider+dataset per measurement: the scan pipeline
+    # parks prefetched chunks in the provider's shared engine, so a second
+    # query over the same provider would measure a warm resident store
     q = "SELECT * FROM dataset WHERE MEAN(x) > 45 AND lab != 7"
-    execute_query(ds, q, use_stats=False)   # warm tensor-state caches
-    s3.reset_stats()
-    off = execute_query(ds, q, use_stats=False)
-    full = dict(s3.stats)
-    s3.reset_stats()
-    on = execute_query(ds, q, use_stats=True)
-    pruned = dict(s3.stats)
+
+    def measure(use_stats):
+        s3 = dl.SimulatedS3Provider(time_scale=0)
+        ds = _build(storage=s3)  # state caches warm (built in-process)
+        s3.reset_stats()
+        view = execute_query(ds, q, use_stats=use_stats)
+        return view, dict(s3.stats)
+
+    off, full = measure(False)
+    on, pruned = measure(True)
     assert on.indices.tolist() == off.indices.tolist()
     assert len(on) > 0
     # strictly fewer requests and payload bytes than the full scan
