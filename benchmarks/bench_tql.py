@@ -137,7 +137,94 @@ def _bench_stats_pushdown() -> List[str]:
         f"req{per['requests']}to{coal['requests']}"
         f"_bytes{full['bytes_down']}to{coal['bytes_down']}"
         f"_sim{per['sim_seconds']:.3f}to{coal['sim_seconds']:.3f}"))
+    lines.extend(_bench_topk_membership())
     lines.extend(_bench_sparse_coalescing())
+    return lines
+
+
+def _bench_topk_membership() -> List[str]:
+    """Top-k + membership pushdown over simulated S3 (the PR-5 datapoint).
+
+    Same clustered selective dataset shape as the pushdown bench, plus a
+    gapped ``class_label`` column (even values only).  Two gates:
+
+    * ``ORDER BY x LIMIT 8``: the top-k plan streams chunk groups
+      best-bound-first and terminates on the k-th-element cutoff; its
+      request count must be **≤ half** the legacy whole-column sort's
+      (which fetches every chunk group), results byte-identical;
+    * ``lab == odd`` / ``lab IN [odds]``: the membership sketches prune
+      every chunk — **zero** payload requests, the verdict rides in the
+      manifest's column-statistics section from the cold open.
+    """
+    from repro.core.storage import MemoryProvider, SimulatedS3Provider
+
+    from . import io_report
+
+    rng = np.random.default_rng(9)
+    base = MemoryProvider()
+    ds = dl.Dataset(base)
+    ds.create_tensor("x", dtype="float32", min_chunk_size=1 << 12,
+                     max_chunk_size=1 << 13)
+    ds.create_tensor("lab", htype="class_label", min_chunk_size=256,
+                     max_chunk_size=512)
+    for i in range(4000):
+        band = i // 250
+        ds.append({"x": (rng.standard_normal(16).astype(np.float32)
+                         + np.float32(100 * band)),
+                   "lab": np.int64(band * 2)})      # evens: odds are gaps
+    ds.commit("topk bench")
+
+    q_topk = "SELECT * FROM dataset ORDER BY MEAN(x) DESC LIMIT 8"
+    lines = []
+    results = {}
+    for label, stream in (("topk_legacy", False), ("topk_pushdown", None)):
+        s3 = SimulatedS3Provider(base, time_scale=0.0)
+        remote = dl.Dataset(s3)
+        s3.reset_stats()
+        with Timer() as t:
+            view = remote.query(q_topk, engine="numpy", stream=stream)
+        stats = io_report.provider_snapshot(s3)
+        results[label] = (view, stats)
+        plan = view.topk_plan or {}
+        lines.append(row(f"tql_{label}_s3", t.elapsed * 1e6,
+                         f"rows{len(view)}_req{stats['requests']}"
+                         f"_down{stats['bytes_down']}"
+                         f"_skip{plan.get('groups_skipped', 0)}"))
+    legacy_view, legacy = results["topk_legacy"]
+    topk_view, topk = results["topk_pushdown"]
+    assert topk_view.indices.tolist() == legacy_view.indices.tolist(), \
+        "top-k pushdown changed the result set"
+    assert topk_view.topk_plan is not None \
+        and topk_view.topk_plan["groups_skipped"] > 0, \
+        "top-k plan did not skip any chunk group"
+    assert topk["requests"] * 2 <= legacy["requests"], \
+        (f"top-k gained <2x on requests: "
+         f"{legacy['requests']} -> {topk['requests']}")
+
+    # membership: odd labels exist in no chunk -> sketches prune everything
+    member = {}
+    for label, qm in (("eq", "SELECT * FROM dataset WHERE lab == 3"),
+                      ("in", "SELECT * FROM dataset WHERE lab IN [3, 5]")):
+        s3 = SimulatedS3Provider(base, time_scale=0.0)
+        remote = dl.Dataset(s3)
+        s3.reset_stats()
+        view = remote.query(qm, engine="numpy")
+        stats = io_report.provider_snapshot(s3)
+        assert len(view) == 0, f"{qm}: expected an empty result"
+        assert stats["requests"] == 0, \
+            f"{qm}: sketch pruning fetched payloads ({stats['requests']})"
+        assert view.scan_plan["rows_verify"] == 0, \
+            f"{qm}: sketches left verify rows"
+        member[f"membership_{label}"] = stats
+        lines.append(row(f"tql_membership_{label}_s3", 0.0,
+                         f"rows0_req{stats['requests']}"))
+    io_report.record("tql_topk_membership", {
+        "topk_legacy": legacy, "topk_pushdown": topk, **member})
+    lines.append(row(
+        "tql_topk_savings", 0.0,
+        f"req{legacy['requests']}to{topk['requests']}"
+        f"_skip{topk_view.topk_plan['groups_skipped']}"
+        f"of{topk_view.topk_plan['groups']}"))
     return lines
 
 

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # One-command gate: tier-1 test suite + TQL pruning/coalescing benchmark
-# (smoke mode) + cold-open budget & maintenance smoke (backfill ->
-# prune-parity, GC dry-run, compaction) + fig6 streaming smoke with a
+# (smoke mode, incl. the top-k gate: ORDER BY + LIMIT must fetch <= half
+# the legacy chunk groups, and sketch-pruned membership queries must issue
+# zero payload requests) + cold-open budget & maintenance smoke (backfill
+# -> prune-parity, GC dry-run, compaction) + fig6 streaming smoke with a
 # stall-seconds budget (cross-unit prefetch must keep compute the
 # bottleneck) + BENCH_io.json validation + no-tracked-bytecode guard.
 # Usage: scripts/check.sh  (from the repo root)

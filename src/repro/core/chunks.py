@@ -34,25 +34,72 @@ False, which tells the query planner to treat the chunk as unknown.  On the
 append path tiled samples stay exact: the tensor hands the builder the
 reassembled array a reader would decode.
 
+Membership sketches (equality / IN / CONTAINS pushdown)
+-------------------------------------------------------
+
+Bounds answer range predicates; ``=`` / ``IN`` / ``CONTAINS`` need
+*membership*.  The accumulator therefore also tracks a per-chunk value
+sketch over one of two domains, chosen by dtype:
+
+* ``dom="int"`` — every element value of bool/int samples (``class_label``,
+  ``tokens``, masks), provided each sample has ≤ ``SKETCH_MAX_ELEMS``
+  elements (keeps the ingest path cheap; larger samples disable the
+  sketch for the whole chunk);
+* ``dom="str"`` — the whole decoded sample string of 1-D ``uint8``
+  samples ≤ ``SKETCH_MAX_STR`` bytes (the ``text`` htype), decoded with
+  ``errors="replace"`` — the *same* decode TQL's ``CONTAINS`` applies, so
+  substring verdicts from the sketch can never diverge from execution.
+
+Float samples never sketch (rounding makes equality pruning unsound).
+Wire form, inside each sidecar record:
+
+* ``≤ SKETCH_DICT_MAX`` (64) distinct values → ``dct`` holds the exact
+  sorted value list and no bloom is stored (the dictionary subsumes it);
+* ``≤ SKETCH_MAX_DISTINCT`` (256) distinct, ``int`` domain only → ``dct``
+  is null and ``bloom`` holds a hex ``SKETCH_BLOOM_BYTES``-byte bloom
+  filter (``SKETCH_BLOOM_K`` blake2b-derived probes per value); a
+  ``str``-domain dictionary that overflows drops the sketch instead —
+  substring probes need the exact values, a bloom of whole strings
+  answers nothing;
+* more distinct values, oversized samples, or a non-sketchable dtype →
+  both null (``dom`` null too).
+
+``sketched`` marks records written by a sketch-aware writer: legacy
+records deserialize with ``sketched=False`` so ``backfill_stats`` knows
+to lift them (a null sketch on a *sketched* record is a definitive
+"inapplicable", not a gap).  Soundness rules consumed by the planner
+(:meth:`ChunkStats.might_contain`):
+
+* a sketch is consulted only when the record is ``exact`` and
+  ``sketched`` and the probe value matches the sketch domain;
+* ``might_contain`` may return false positives (cost: a verify verdict)
+  but never false negatives: the dictionary is the exact distinct-value
+  set, and the bloom only ever *adds* bits — so "absent" is a proof;
+* empty samples contribute no values; membership verdicts must therefore
+  derive the empty-sample outcome from ``min_elems``, never the sketch.
+
 Stats are persisted per tensor per version as a JSON sidecar under the
 existing :class:`~repro.core.storage.StorageProvider` key protocol:
 
     versions/{node}/tensors/{t}/chunk_stats.json
         {"chunks": {chunk_name: {count, nbytes, lo, hi, nan_count,
-                                 true_count, n_elements, min_elems, exact}}}
+                                 true_count, n_elements, min_elems, exact,
+                                 sketched, dom, dct, bloom}}}
 
 The sidecar is one of the version-control ``STATE_FILES``: ``commit`` copies
 it to the child node together with the chunk-encoder snapshot, so stats keep
 mapping chunk *names* (which never move between versions, §4.1) to bounds.
 ``tql/planner.py`` consumes these records to derive per-chunk
-prune/keep/verify verdicts for ``WHERE`` clauses without fetching payloads.
+prune/keep/verify verdicts for ``WHERE`` clauses without fetching payloads,
+and per-chunk ``ORDER BY`` key bounds for top-k chunk skipping.
 """
 
 from __future__ import annotations
 
+import hashlib
 import struct
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -63,6 +110,40 @@ FLAG_TILED = 0x01
 _FIXED = struct.Struct("<4sIIB3x16s16s")  # magic, header_sz, n, max_ndim, dtype, codec
 
 _NUMERIC_KINDS = "biuf"
+
+# ---- membership-sketch parameters (see module docstring for the format)
+SKETCH_DICT_MAX = 64        # exact dictionary capacity (distinct values)
+SKETCH_MAX_DISTINCT = 256   # beyond this the bloom is saturated: disable
+SKETCH_BLOOM_BYTES = 128    # 1024-bit filter
+SKETCH_BLOOM_K = 4          # probes per value
+SKETCH_MAX_ELEMS = 4096     # int-domain samples larger than this don't sketch
+SKETCH_MAX_STR = 256        # str-domain (uint8 text) sample byte cap
+
+
+def _sketch_encode(value: Union[int, str]) -> bytes:
+    """Canonical hash input of a sketch value; the domain prefix keeps the
+    int and str value spaces collision-free."""
+    if isinstance(value, str):
+        return b"s:" + value.encode("utf-8", "replace")
+    return b"i:%d" % int(value)
+
+
+def _bloom_positions(value: Union[int, str]) -> List[int]:
+    d = hashlib.blake2b(_sketch_encode(value), digest_size=16).digest()
+    nbits = SKETCH_BLOOM_BYTES * 8
+    return [int.from_bytes(d[4 * i:4 * i + 4], "big") % nbits
+            for i in range(SKETCH_BLOOM_K)]
+
+
+def _bloom_add(bits: bytearray, value: Union[int, str]) -> None:
+    for p in _bloom_positions(value):
+        bits[p >> 3] |= 1 << (p & 7)
+
+
+def bloom_might_contain(bloom_hex: str, value: Union[int, str]) -> bool:
+    """True unless the filter proves ``value`` was never inserted."""
+    bits = bytes.fromhex(bloom_hex)
+    return all(bits[p >> 3] & (1 << (p & 7)) for p in _bloom_positions(value))
 
 
 def _lo_bound(v) -> float:
@@ -85,6 +166,11 @@ class ChunkStats:
     False when at least one sample could not be inspected (undecodable
     payload, or a tile descriptor seen without its source array) — the
     planner must then treat the chunk as unknown.
+
+    ``dom``/``dct``/``bloom`` are the membership sketch (module docstring:
+    value domains, capacities, soundness rules); ``sketched`` distinguishes
+    "sketch-aware writer decided no sketch applies" from "record predates
+    sketches" so the maintenance backfill can lift legacy records.
     """
 
     count: int = 0          # samples
@@ -96,13 +182,18 @@ class ChunkStats:
     n_elements: int = 0     # total elements across samples
     min_elems: int = 0      # smallest per-sample element count
     exact: bool = True
+    sketched: bool = False  # record written by a sketch-aware writer
+    dom: Optional[str] = None            # 'int' | 'str' | None
+    dct: Optional[List] = None           # exact distinct values (sorted)
+    bloom: Optional[str] = None          # hex bloom (dct overflowed)
 
     def to_json(self) -> dict:
         return {"count": self.count, "nbytes": self.nbytes,
                 "lo": self.lo, "hi": self.hi,
                 "nan_count": self.nan_count, "true_count": self.true_count,
                 "n_elements": self.n_elements, "min_elems": self.min_elems,
-                "exact": self.exact}
+                "exact": self.exact, "sketched": self.sketched,
+                "dom": self.dom, "dct": self.dct, "bloom": self.bloom}
 
     @classmethod
     def from_json(cls, d: dict) -> "ChunkStats":
@@ -110,6 +201,25 @@ class ChunkStats:
         for k, v in d.items():
             setattr(s, k, v)
         return s
+
+    # ---- membership (sound: False positives allowed, negatives never)
+    def sketch_usable(self, dom: str) -> bool:
+        """True when membership probes over domain ``dom`` may consult this
+        record's sketch (exact, sketch-aware, same value domain)."""
+        return (self.exact and self.sketched and self.dom == dom
+                and (self.dct is not None or self.bloom is not None))
+
+    def might_contain(self, value: Union[int, str]) -> bool:
+        """Sound membership: False ⇒ ``value`` appears in *no* sample of the
+        chunk (its domain: elements for ``int``, whole sample strings for
+        ``str``).  True means present *or unknown* — including any probe the
+        sketch cannot answer (wrong domain, inexact, legacy record)."""
+        dom = "str" if isinstance(value, str) else "int"
+        if not self.sketch_usable(dom):
+            return True
+        if self.dct is not None:
+            return value in self.dct
+        return bloom_might_contain(self.bloom, value)
 
 
 class _StatsAccumulator:
@@ -128,10 +238,50 @@ class _StatsAccumulator:
         self.n_elements = 0
         self.min_elems: Optional[int] = None
         self.exact = True
+        self._values: set = set()       # distinct sketch values so far
+        self._dom: Optional[str] = None
+        self._sketch_ok = True
 
     def mark_inexact(self, n_samples: int = 1) -> None:
         self.count += n_samples
         self.exact = False
+
+    def _disable_sketch(self) -> None:
+        self._sketch_ok = False
+        self._values = set()
+        self._dom = None
+
+    def _sketch_sample(self, arr: np.ndarray, kind: str) -> None:
+        """Fold one sample's values into the membership sketch (or disable
+        it for the chunk when the sample falls outside the sketchable
+        envelope — see the module docstring's domain rules)."""
+        if not self._sketch_ok:
+            return
+        if kind == "f":  # float equality pruning is never sound
+            self._disable_sketch()
+            return
+        if kind == "u" and arr.dtype.itemsize == 1:
+            # text htype domain: the whole decoded sample string, with the
+            # same lossy decode CONTAINS applies at execution time
+            if arr.ndim != 1 or arr.size > SKETCH_MAX_STR:
+                self._disable_sketch()
+                return
+            self._values.add(
+                np.ascontiguousarray(arr).tobytes().decode(errors="replace"))
+            dom = "str"
+        else:
+            if arr.size > SKETCH_MAX_ELEMS:
+                self._disable_sketch()
+                return
+            self._values.update(int(v) for v in np.unique(arr))
+            dom = "int"
+        if self._dom is None:
+            self._dom = dom
+        elif self._dom != dom:          # mixed domains: cannot happen for a
+            self._disable_sketch()      # fixed-dtype tensor, but stay sound
+            return
+        if len(self._values) > SKETCH_MAX_DISTINCT:
+            self._disable_sketch()
 
     def observe(self, arr: np.ndarray) -> None:
         self.count += 1
@@ -145,7 +295,9 @@ class _StatsAccumulator:
         kind = arr.dtype.kind
         if kind not in _NUMERIC_KINDS:
             self.exact = False
+            self._disable_sketch()
             return
+        self._sketch_sample(arr, kind)
         if kind == "f":
             nan = size - int(np.count_nonzero(arr == arr))
             self.nan_count += nan
@@ -158,8 +310,28 @@ class _StatsAccumulator:
         self.lo = min(self.lo, lo)
         self.hi = max(self.hi, hi)
 
+    def _sketch_snapshot(self) -> Tuple[Optional[str], Optional[List],
+                                        Optional[str]]:
+        """(dom, dct, bloom) wire triple: exact dictionary while it fits,
+        bloom beyond that, nothing once saturated/inapplicable.  The bloom
+        is int-domain only — every str-domain consumer (CONTAINS substring
+        probes) needs the exact dictionary, so a bloom of whole strings
+        would be unreachable payload."""
+        if not self._sketch_ok or self._dom is None:
+            return None, None, None
+        values = sorted(self._values)
+        if len(values) <= SKETCH_DICT_MAX:
+            return self._dom, values, None
+        if self._dom != "int":
+            return None, None, None
+        bits = bytearray(SKETCH_BLOOM_BYTES)
+        for v in values:
+            _bloom_add(bits, v)
+        return self._dom, None, bytes(bits).hex()
+
     def snapshot(self, nbytes: int) -> ChunkStats:
         has_range = self.lo <= self.hi
+        dom, dct, bloom = self._sketch_snapshot()
         return ChunkStats(
             count=self.count, nbytes=int(nbytes),
             lo=self.lo if has_range else None,
@@ -167,7 +339,8 @@ class _StatsAccumulator:
             nan_count=self.nan_count, true_count=self.true_count,
             n_elements=self.n_elements,
             min_elems=int(self.min_elems or 0),
-            exact=self.exact)
+            exact=self.exact, sketched=True,
+            dom=dom, dct=dct, bloom=bloom)
 
 
 def _pad16(s: str) -> bytes:

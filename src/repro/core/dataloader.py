@@ -78,6 +78,9 @@ class LoaderStats:
     rows_pruned: int = 0
     chunks_pruned: int = 0
     stats_groups_decided: int = 0
+    # ORDER BY + LIMIT top-k accounting (view's topk plan): chunk groups the
+    # bound cutoff proved irrelevant, terminated before fetch or decode
+    topk_groups_skipped: int = 0
 
     def throughput(self) -> float:
         return self.samples / self.wall_seconds if self.wall_seconds else 0.0
@@ -153,6 +156,11 @@ class DeepLakeLoader:
             self.stats.stats_groups_decided = plan.get("groups_decided", 0)
             self.costs.note("chunks_pruned", self.stats.chunks_pruned)
             self.costs.note("rows_pruned", self.stats.rows_pruned)
+        topk = getattr(view, "topk_plan", None)
+        if topk:
+            self.stats.topk_groups_skipped = topk.get("groups_skipped", 0)
+            self.costs.note("topk_groups_skipped",
+                            self.stats.topk_groups_skipped)
 
     # ------------------------------------------------------------- planning
     def _primary_tensor(self) -> Optional[str]:

@@ -8,10 +8,15 @@ collection, checkpointing, and vacuum):
     Computes :class:`~repro.core.chunks.ChunkStats` sidecars for chunks
     that predate the stats format (PR-1), by decoding each uncovered
     chunk once — tiled samples are reassembled from their tiles so the
-    backfilled bounds are *exact*.  After a backfill, the TQL planner
-    prunes a pre-stats dataset exactly like a natively-written one, and
-    query results are byte-identical (stats are an optimization, never a
-    correctness input — this job only tightens the planner's intervals).
+    backfilled bounds are *exact*.  Records that exist but predate the
+    membership sketches (``sketched=False``, PR-5) are recomputed the
+    same way, so legacy datasets gain ``=``/``IN``/``CONTAINS`` prune
+    verdicts too (``sketches_lifted`` in the report; the planner's
+    ``ScanPlan.sketch_coverage`` shows the remaining gap).  After a
+    backfill, the TQL planner prunes a pre-stats dataset exactly like a
+    natively-written one, and query results are byte-identical (stats
+    are an optimization, never a correctness input — this job only
+    tightens the planner's intervals).
 
 ``compact_manifest``
     Folds the manifest's delta-segment chain — plus any stale or
@@ -116,6 +121,8 @@ class MaintenanceRunner:
         """Compute missing ChunkStats sidecars for one version (default:
         the current node).  Decodes each stat-less chunk exactly once;
         tiled samples fetch + reassemble their tiles so bounds are exact.
+        Pre-sketch records (``sketched=False``) are recomputed the same
+        way so legacy datasets gain membership sketches.
         """
         ds = self.ds
         ds.flush()
@@ -124,10 +131,17 @@ class MaintenanceRunner:
         report = MaintenanceReport("backfill_stats", dry_run)
         engine = fetch.engine_for(vc.storage)
         chunks_done = 0
+        sketches_lifted = 0
         for tname in vc.schema_tensors(nid):
             t = Tensor(tname, vc, node_id=nid)
-            missing = [n for n in t.encoder.chunk_names()
-                       if t.stats.get(n) is None]
+            missing = []
+            for n in t.encoder.chunk_names():
+                st = t.stats.get(n)
+                if st is None:
+                    missing.append(n)
+                elif not st.sketched:
+                    missing.append(n)
+                    sketches_lifted += 1
             if not missing:
                 continue
             for cname in missing:
@@ -143,6 +157,7 @@ class MaintenanceRunner:
             # table; drop them so the planner sees the new sidecar
             ds._tensors.clear()
         report.details.update(chunks_backfilled=chunks_done,
+                              sketches_lifted=sketches_lifted,
                               tensors_touched=len(report.actions))
         return report
 

@@ -41,8 +41,8 @@ whole-node replacement therefore reconstructs the catalog exactly; the
 loose per-file layout stays on storage untouched, so legacy readers (and
 the fallback path) always see a complete dataset.
 
-Column-statistics section (format v2, plan-at-open)
----------------------------------------------------
+Column-statistics section (format v2+, plan-at-open)
+----------------------------------------------------
 
 ``"stats"`` is a decoded *scan index* per tensor: the chunk-boundary table
 (``last_idx``, the encoder's inclusive last-global-index per chunk) plus
@@ -55,7 +55,21 @@ cold open, before any :class:`~repro.core.tensor.Tensor` binds.  The
 section is optional everywhere: v1 segments (and nodes snapshotted without
 decodable encoder bytes) simply lack it and readers fall back to binding
 tensors.  v1 pointers/segments load unchanged; the first publication
-rewrites the pointer as v2.
+rewrites the pointer as the current format.
+
+Format v3 (membership sketches + top-k bounds)
+----------------------------------------------
+
+v3 extends each record of the column-statistics section with the chunk's
+membership sketch — ``sketched`` / ``dom`` / ``dct`` / ``bloom``, wire
+format and soundness rules in :mod:`repro.core.chunks` — which the planner
+turns into ``=`` / ``IN`` / ``CONTAINS`` prune verdicts, and the executor's
+``ORDER BY … LIMIT`` top-k scan reads the same records for its chunk-skip
+bounds.  The node/segment/pointer *structure* is unchanged: v1 and v2
+manifests still load (their records deserialize with ``sketched=False``,
+so membership probes fall back to verify verdicts until ``backfill_stats``
++ ``compact_manifest`` lift the sketches), and a v3 reader folding a mixed
+chain treats each record independently.
 
 CAS protocol (optimistic concurrency)
 -------------------------------------
@@ -129,9 +143,11 @@ from .storage import StorageError, StorageProvider
 
 MANIFEST_KEY = "manifest.json"
 SEGMENT_PREFIX = "manifests/"
-FORMAT = "deeplake-repro-manifest-v2"
-#: readable formats: v1 predates the column-statistics section
-COMPAT_FORMATS = ("deeplake-repro-manifest-v1", FORMAT)
+FORMAT = "deeplake-repro-manifest-v3"
+#: readable formats: v1 predates the column-statistics section, v2 the
+#: membership sketches inside it (both degrade gracefully, never fail)
+COMPAT_FORMATS = ("deeplake-repro-manifest-v1",
+                  "deeplake-repro-manifest-v2", FORMAT)
 
 #: fold to a single consolidated segment while the payload stays this small
 AUTO_CONSOLIDATE_BYTES = 4 << 20
@@ -429,6 +445,15 @@ class Manifest:
             for t, cs in ns.stats.items():
                 # ~20 chars per boundary int, ~220 per ChunkStats record
                 total += len(t) + 32 + cs.num_chunks * 240
+                for s in cs.chunk_stats:  # + the membership sketch payload
+                    if s is None:
+                        continue
+                    if s.dct is not None:
+                        total += 8 + sum(
+                            (len(v) + 4) if isinstance(v, str) else 16
+                            for v in s.dct)
+                    if s.bloom:
+                        total += len(s.bloom) + 16
         return total
 
     def commit_update(self, node_states: Dict[str, NodeState],

@@ -231,6 +231,26 @@ class ScanPipeline:
     def n_groups(self) -> int:
         return len(self._groups)
 
+    def group_positions(self, g: int) -> np.ndarray:
+        """View positions of chunk group ``g`` (current stream order)."""
+        return self._groups[g]
+
+    def group_ords(self, g: int) -> List[int]:
+        """Chunk ord per planned tensor for group ``g`` — the key the
+        planner uses to look up that group's statistics records."""
+        first = int(self._groups[g][0])
+        return [int(col[first]) for col in self._ord_cols]
+
+    def reorder(self, order: Sequence[int]) -> None:
+        """Permute the chunk-group schedule before :meth:`stream` — the
+        top-k executor orders groups best-bound-first so the prefetch
+        window (whose key plan is derived from the group order at stream
+        start) carries the planner's priorities, and early termination
+        cuts the stream as soon as no remaining group can matter."""
+        if self._window is not None:
+            raise RuntimeError("cannot reorder a streaming pipeline")
+        self._groups = [self._groups[i] for i in order]
+
     def _query_keyplan(self) -> List[List[Tuple[str, int]]]:
         """Per-group (chunk key, est bytes), dedup'd to first need."""
         seen: set = set()

@@ -31,24 +31,35 @@ Both paths, and the streaming vs. whole-view execution modes, produce
 byte-identical result sets (predicates are row-local; ``RANDOM()``
 disables streaming because it draws from a view-wide stream).
 
+``ORDER BY key LIMIT k [OFFSET m]`` runs as a **top-k scan** on the same
+pipeline (:meth:`Executor._order_limit_topk`): chunk groups are ordered by
+their best achievable key bound (planner intervals over the chunk
+statistics), streamed best-bound-first with the prefetch window following
+that priority, and the stream terminates as soon as no remaining group's
+bound can beat or tie the running (m+k)-th-element cutoff — the last
+whole-column stacking in the read path is gone.  Skipped groups are never
+fetched; results stay byte-identical to the legacy sort (``stream=False``).
+
 Clause order matches the paper's example: WHERE → ORDER BY → ARRANGE BY
 (stable regroup) → SAMPLE BY → LIMIT/OFFSET → SELECT projections.
 """
 
 from __future__ import annotations
 
+import math
 import zlib
-from typing import Any, Dict, List, Optional, Sequence, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ..chunks import _hi_bound, _lo_bound
 from ..pipeline import ScanPipeline
 from ..views import DatasetView
 from .ast_nodes import (BinOp, Call, Index, ListExpr, Literal, Node, Query,
                         SelectItem, SliceSpec, TensorRef, UnaryOp)
 from .functions import get_function
 from .parser import parse
-from .planner import ScanPlan, _referenced, plan_where
+from .planner import (ScanPlan, _referenced, group_key_intervals, plan_where)
 
 
 class Unvectorizable(Exception):
@@ -251,6 +262,70 @@ class VectorEval:
         return const(p.start)
 
 
+# ----------------------------------------------------------------- top-k plan
+class _GroupBound:
+    """Best achievable ORDER BY rank of one chunk group, from the planner's
+    key interval.  The legacy comparator sorts ascending by (key, position)
+    with NaN last, then fully reverses for DESC — so NaN-capable (or
+    unknown) groups rank *first* under DESC, and 'beats or ties the cutoff'
+    reduces to a one-sided bound test against the interval edge, widened by
+    :func:`_lo_bound`/:func:`_hi_bound` so float rounding of an int64
+    cutoff can never skip a group that could still tie."""
+
+    __slots__ = ("desc", "nan_best", "val")
+
+    def __init__(self, iv, desc: bool) -> None:
+        self.desc = desc
+        known_vals = iv.known and iv.has_values
+        if desc:
+            self.nan_best = (not iv.known) or iv.has_nan
+            self.val = float(iv.hi) if known_vals else (
+                -math.inf if iv.known else math.inf)
+        else:
+            self.nan_best = False
+            self.val = float(iv.lo) if known_vals else (
+                math.inf if iv.known else -math.inf)
+
+    @property
+    def sort_key(self) -> Tuple[int, float]:
+        if self.desc:
+            return (0 if self.nan_best else 1, -self.val)
+        return (0, self.val)
+
+    def can_beat(self, cutoff) -> bool:
+        """May some row of this group rank at or above the k-th candidate?
+        Ties count: an equal key at another position can displace it."""
+        try:
+            cut_nan = math.isnan(float(cutoff))
+        except (TypeError, OverflowError):
+            cut_nan = False
+        if self.desc:
+            if self.nan_best:
+                return True     # NaN keys rank first under DESC
+            if cut_nan:
+                return False    # ...and numeric keys never reach them
+            return self.val >= _lo_bound(cutoff)
+        if cut_nan:
+            return True         # any numeric key beats a NaN cutoff (ASC)
+        return self.val <= _hi_bound(cutoff)
+
+
+def _topk_select(keys: np.ndarray, pos: np.ndarray, k: int,
+                 desc: bool) -> Tuple[np.ndarray, np.ndarray]:
+    """First ``k`` (key, position) pairs under the legacy ORDER BY
+    comparator, returned in final result order.  Restricting the comparator
+    to any candidate subset preserves relative order, so merging per-group
+    winners is exact: positions are re-sorted ascending first, making the
+    stable argsort's tiebreak identical to the whole-view sort's."""
+    po = np.argsort(pos, kind="stable")
+    keys, pos = keys[po], pos[po]
+    o = np.argsort(keys, kind="stable")
+    if desc:
+        o = o[::-1]
+    o = o[:k]
+    return keys[o], pos[o]
+
+
 # ------------------------------------------------------------------ executor
 def _substitute(node: Node, aliases: Dict[str, Node]) -> Node:
     """SQL alias support: replace TensorRef(alias) with its SELECT expr."""
@@ -278,6 +353,7 @@ class Executor:
         #: pre-pipeline path, kept for A/B equivalence), True = force
         self.stream = stream
         self.scan_plan: Optional[ScanPlan] = None  # set by run() when planned
+        self.topk_plan: Optional[dict] = None      # set when top-k pushed down
         self.seed = _query_seed(repr(query))
         self.rng = np.random.default_rng(self.seed)
         aliases = {it.alias: it.expr for it in query.items
@@ -351,6 +427,90 @@ class Executor:
             mask = mask.all(axis=tuple(range(1, mask.ndim)))
         return mask
 
+    # ------------------------------------------------------- ORDER BY / top-k
+    def _order_keys(self, view: DatasetView, node: Node) -> np.ndarray:
+        """Sort keys of ``view`` under ``node``.  Integer (and bool/float)
+        keys keep their native dtype — casting to float64 mis-orders int64
+        values above 2**53; only non-numeric results fall back to the
+        legacy float64 coercion."""
+        keys = np.asarray(self.eval_all(view, node))
+        if keys.dtype == object or keys.dtype.kind not in "biuf":
+            keys = keys.astype(np.float64)
+        return keys
+
+    def _order_limit_topk(self, view: DatasetView,
+                          q: Query) -> Optional[DatasetView]:
+        """``ORDER BY key LIMIT k [OFFSET m]`` as a top-k scan: chunk groups
+        stream best-bound-first (bounds from :func:`group_key_intervals`)
+        while a running (offset+limit)-th-element cutoff terminates the
+        stream as soon as no remaining group's bound can beat or tie it.
+
+        Returns the fully ordered-and-sliced view, or None when the legacy
+        whole-column sort must run instead (no LIMIT, ARRANGE/SAMPLE BY
+        downstream, ``stream=False``/``use_stats=False``, RANDOM() anywhere
+        in the query — its stream is order-dependent — derived-only keys,
+        or a single chunk group).  Selection is byte-identical to the
+        legacy path: candidates merge under the exact comparator the legacy
+        sort applies — stable ascending argsort by (key, position), fully
+        reversed for DESC, NaN keys last ascending — and a group is skipped
+        only when its bound is *strictly* worse than the cutoff, so ties
+        (which can displace by position) are always streamed."""
+        if (q.limit is None or q.arrange_by is not None
+                or q.sample_by is not None or self.stream is False
+                or not self.use_stats):
+            return None
+        k = int(q.limit) + int(q.offset)
+        if k <= 0:
+            return view[np.empty(0, dtype=np.int64)]
+        if k >= len(view):
+            return None  # every row ranks: nothing to skip
+        if any(c.name.upper() == "RANDOM" for c in self.query.find(Call)):
+            return None
+        names = [n for n in _referenced(q.order_by)
+                 if n not in view.derived and n in view.tensor_names]
+        if not names:
+            return None
+        pipe = ScanPipeline.for_query(view, names, owner=self)
+        if pipe is None or pipe.n_groups <= 1:
+            if pipe is not None:
+                pipe.close()
+            return None
+        desc = bool(q.order_desc)
+        bounds = [_GroupBound(iv, desc)
+                  for iv in group_key_intervals(view, pipe, q.order_by)]
+        order = sorted(range(len(bounds)), key=lambda g: bounds[g].sort_key)
+        pipe.reorder(order)  # prefetch window now follows bound priority
+        bounds = [bounds[g] for g in order]
+        k_keys: Optional[np.ndarray] = None
+        k_pos = np.empty(0, dtype=np.int64)
+        cutoff = None
+        scanned = 0
+        terminated = False
+        it = pipe.stream()
+        try:
+            for gi, (positions, sub) in enumerate(it):
+                if cutoff is not None and not bounds[gi].can_beat(cutoff):
+                    terminated = True
+                    break
+                keys_g = self._order_keys(sub, q.order_by)
+                if keys_g.ndim != 1 or len(keys_g) != len(positions):
+                    return None  # non-scalar keys: legacy whole-view sort
+                scanned += 1
+                ck = keys_g if k_keys is None \
+                    else np.concatenate([k_keys, keys_g])
+                cp = np.concatenate([k_pos, positions])
+                k_keys, k_pos = _topk_select(ck, cp, k, desc)
+                if len(k_pos) >= k:
+                    cutoff = k_keys[-1]
+        finally:
+            it.close()
+        self.topk_plan = {
+            "groups": pipe.n_groups, "groups_scanned": scanned,
+            "groups_skipped": pipe.n_groups - scanned,
+            "terminated_early": int(terminated),
+            "k": k, "order_desc": int(desc), "tensors": list(names)}
+        return view[k_pos[q.offset:]]
+
     def run(self, base: DatasetView) -> DatasetView:
         q = self.query
         view = base
@@ -374,11 +534,17 @@ class Executor:
                     view = view[np.nonzero(keep)[0]]
         # ORDER BY ----------------------------------------------------------
         if q.order_by is not None and len(view):
-            keys = np.asarray(self.eval_all(view, q.order_by), dtype=np.float64)
-            order = np.argsort(keys, kind="stable")
-            if q.order_desc:
-                order = order[::-1]
-            view = view[order]
+            topk = self._order_limit_topk(view, q)
+            if topk is not None:
+                # ORDER BY + LIMIT/OFFSET fully applied by the top-k plan
+                view = topk
+                q = Query(**{**q.__dict__, "limit": None, "offset": 0})
+            else:
+                keys = self._order_keys(view, q.order_by)
+                order = np.argsort(keys, kind="stable")
+                if q.order_desc:
+                    order = order[::-1]
+                view = view[order]
         # ARRANGE BY (stable regroup; §4.3 example) ---------------------------
         if q.arrange_by is not None and len(view):
             keys = self.eval_all(view, q.arrange_by)
@@ -408,6 +574,8 @@ class Executor:
         out = self._project(view)
         if self.scan_plan is not None:
             out.scan_plan = self.scan_plan.report()
+        if self.topk_plan is not None:
+            out.topk_plan = dict(self.topk_plan)
         return out
 
     def _project(self, view: DatasetView) -> DatasetView:

@@ -21,7 +21,15 @@ Soundness rules (all conservative — unknown always falls back to verify):
 * NaN elements make ``== < <= > >=`` possibly-False and ``!=`` possibly-True
   (IEEE semantics); possibly-empty samples make any comparison
   possibly-False;
-* expressions the planner cannot analyze (UDFs, CONTAINS, IN, subscripts,
+* ``tensor = literal`` / ``tensor IN [...]`` / ``CONTAINS(tensor, literal)``
+  additionally consult the chunk's membership sketch
+  (:meth:`~repro.core.chunks.ChunkStats.might_contain`): a value the sketch
+  *proves absent* yields a definitive verdict (false positives merely cost a
+  verify), with the empty-sample outcome derived from ``min_elems`` because
+  empty samples contribute no sketch values — ``x == v`` and
+  ``CONTAINS(x, v)`` are False on an empty sample but ``x IN [...]`` is
+  True (``isin(empty, ...).all()`` is vacuously True);
+* expressions the planner cannot analyze (UDFs, subscripts,
   string literals, ...) evaluate to the unknown interval TOP;
 * computed values (literals the engine may cast to float32, arithmetic,
   MEAN/STD/SQRT/CAST_FLOAT) are widened outward by the worst-case float32
@@ -44,8 +52,9 @@ from typing import Dict, FrozenSet, List, Optional
 
 import numpy as np
 
-from .ast_nodes import BinOp, Call, Literal, Node, TensorRef, UnaryOp
-from ..chunks import _hi_bound, _lo_bound
+from .ast_nodes import (BinOp, Call, ListExpr, Literal, Node, TensorRef,
+                        UnaryOp)
+from ..chunks import ChunkStats, _hi_bound, _lo_bound
 
 _CMP_OPS = ("==", "!=", ">", ">=", "<", "<=")
 
@@ -230,10 +239,44 @@ def _bool_interval(t: FrozenSet[bool]) -> Interval:
     return Interval(0.0, 1.0, has_nan=False, maybe_empty=False, known=True)
 
 
+# ------------------------------------------------------------- membership
+#: literal values the int sketch domain can reason about: actual chunk
+#: elements are int64-representable integers, so an equal-comparing literal
+#: either maps to one ("int") or provably equals no element ("never") —
+#: anything murkier (strings, huge ints, non-finite) bails ("bail").
+def _member_value(v):
+    if isinstance(v, bool):
+        return "int", int(v)
+    if isinstance(v, (int, np.integer)):
+        iv = int(v)
+        return ("int", iv) if -(2 ** 63) <= iv < 2 ** 63 else ("bail", None)
+    if isinstance(v, float):
+        if not math.isfinite(v):
+            return "bail", None
+        if not float(v).is_integer():
+            return "never", None  # non-integral: equals no int element
+        iv = int(v)
+        # integral but outside int64: a uint64 element CAN equal it under
+        # the executor's float comparison — bail, never claim absence
+        return ("int", iv) if -(2 ** 63) <= iv < 2 ** 63 else ("bail", None)
+    return "bail", None
+
+
+def _ref_and_literal(a: Node, b: Node):
+    if isinstance(a, TensorRef) and isinstance(b, Literal):
+        return a, b
+    if isinstance(b, TensorRef) and isinstance(a, Literal):
+        return b, a
+    return None, None
+
+
 # --------------------------------------------------------------- AST analysis
 class _Analyzer:
-    def __init__(self, env: Dict[str, Interval]) -> None:
+    def __init__(self, env: Dict[str, Interval],
+                 sketches: Optional[Dict[str, Optional[ChunkStats]]] = None
+                 ) -> None:
         self.env = env
+        self.sketches = sketches or {}
 
     # -- truth ---------------------------------------------------------------
     def truth(self, node: Node) -> FrozenSet[bool]:
@@ -244,11 +287,118 @@ class _Analyzer:
                     return frozenset(a and b for a in lt for b in rt)
                 return frozenset(a or b for a in lt for b in rt)
             if node.op in _CMP_OPS:
-                return _cmp_truth(self.interval(node.left),
+                base = _cmp_truth(self.interval(node.left),
                                   self.interval(node.right), node.op)
+                memb = self._membership(node)
+                if memb is not None:
+                    # both are sound supersets of the possible row truths,
+                    # so their intersection is too (guard the impossible)
+                    both = base & memb
+                    return both if both else base
+                return base
+            if node.op == "in":
+                memb = self._membership(node)
+                if memb is not None:
+                    return memb
+        if isinstance(node, Call):
+            memb = self._membership(node)
+            if memb is not None:
+                return memb
         if isinstance(node, UnaryOp) and node.op == "not":
             return frozenset(not v for v in self.truth(node.operand))
         return _truthify(self.interval(node))
+
+    # -- membership sketches -------------------------------------------------
+    def _sketch_for(self, name: str, dom: str) -> Optional[ChunkStats]:
+        st = self.sketches.get(name)
+        if st is None or not st.sketch_usable(dom):
+            return None
+        return st
+
+    @staticmethod
+    def _maybe_empty(st: ChunkStats) -> bool:
+        return st.min_elems == 0 or st.count == 0
+
+    def _membership(self, node: Node) -> Optional[FrozenSet[bool]]:
+        """Sketch verdict for ``=``/``!=``/``IN``/``CONTAINS`` over one base
+        tensor and literal values; None = the sketch cannot refine.  All
+        branches mirror the executor's row semantics exactly (`_truthy`
+        over elementwise comparison; ``isin(sample, list).all()``;
+        ``CONTAINS``'s text/elementwise split)."""
+        if isinstance(node, BinOp) and node.op in ("==", "!="):
+            ref, lit = _ref_and_literal(node.left, node.right)
+            if ref is None:
+                return None
+            kind, v = _member_value(lit.value)
+            if kind == "bail":
+                return None
+            st = self._sketch_for(ref.name, "int")
+            if st is None:
+                return None
+            if kind == "int" and st.might_contain(v):
+                return None
+            # v provably equals no element of any sample in the chunk
+            if node.op == "==":
+                return ONLY_F          # empty samples are False too
+            out = {True}               # all elements differ -> row True
+            if self._maybe_empty(st):
+                out.add(False)         # ...but an empty comparison is False
+            return frozenset(out)
+        if isinstance(node, BinOp) and node.op == "in" \
+                and isinstance(node.left, TensorRef) \
+                and isinstance(node.right, ListExpr):
+            if not all(isinstance(it, Literal) for it in node.right.items):
+                return None
+            vals = []
+            for it in node.right.items:
+                kind, v = _member_value(it.value)
+                if kind == "bail":
+                    return None
+                if kind == "int":
+                    vals.append(v)     # "never" values match no element
+            st = self._sketch_for(node.left.name, "int")
+            if st is None:
+                return None
+            if not any(st.might_contain(v) for v in vals):
+                # no element of any sample is in the list
+                out = {False}
+                if self._maybe_empty(st):
+                    out.add(True)      # isin(empty, ...).all() is True
+                return frozenset(out)
+            if st.dct is not None and set(st.dct) <= set(vals):
+                return ONLY_T          # every element everywhere is listed
+            return None
+        if isinstance(node, Call) and node.name.upper() == "CONTAINS" \
+                and len(node.args) == 2 \
+                and isinstance(node.args[0], TensorRef) \
+                and isinstance(node.args[1], Literal):
+            name, needle = node.args[0].name, node.args[1].value
+            if isinstance(needle, str):
+                # text domain: dictionary only (a bloom of whole strings
+                # cannot answer substring probes); "" is in every string
+                st = self._sketch_for(name, "str")
+                if st is None or st.dct is None or needle == "":
+                    return None
+                hits = sum(needle in s for s in st.dct)
+                if hits == 0:
+                    return ONLY_F      # empty samples decode to "" -> False
+                if hits == len(st.dct) and not self._maybe_empty(st):
+                    return ONLY_T
+                return None
+            kind, v = _member_value(needle)
+            if kind == "bail":
+                return None
+            st = self._sketch_for(name, "int")
+            if st is None:
+                return None
+            if kind == "never":        # non-integral float: in no int sample
+                return ONLY_F
+            if not st.might_contain(v):
+                return ONLY_F          # isin(v, empty).all() is False too
+            if st.dct == [v] and not self._maybe_empty(st):
+                return ONLY_T          # the only element value everywhere
+            return None
+        return None
 
     # -- intervals -----------------------------------------------------------
     def interval(self, node: Node) -> Interval:
@@ -378,6 +528,7 @@ class ScanPlan:
     tensors: List[str]        # tensors whose stats were consulted
     chunks_consulted: int = 0      # distinct (tensor, chunk) stats lookups
     chunks_stats_missing: int = 0  # lookups without a usable (exact) record
+    chunks_sketchless: int = 0     # usable records predating the sketches
 
     @property
     def effective(self) -> bool:
@@ -391,6 +542,16 @@ class ScanPlan:
             return 1.0
         return 1.0 - self.chunks_stats_missing / self.chunks_consulted
 
+    @property
+    def sketch_coverage(self) -> float:
+        """Fraction of consulted chunks written sketch-aware — below 1.0
+        the membership pushdown (=/IN/CONTAINS) degrades to verify on the
+        legacy records until ``backfill_stats`` lifts them."""
+        if not self.chunks_consulted:
+            return 1.0
+        return 1.0 - ((self.chunks_stats_missing + self.chunks_sketchless)
+                      / self.chunks_consulted)
+
     def report(self) -> dict:
         return {
             "rows": self.n_rows,
@@ -403,7 +564,9 @@ class ScanPlan:
             "chunks_pruned": self.chunks_pruned,
             "chunks_consulted": self.chunks_consulted,
             "chunks_stats_missing": self.chunks_stats_missing,
+            "chunks_sketchless": self.chunks_sketchless,
             "stats_coverage": self.stats_coverage,
+            "sketch_coverage": self.sketch_coverage,
             "tensors": list(self.tensors),
         }
 
@@ -441,28 +604,34 @@ def plan_where(view, where: Node) -> Optional[ScanPlan]:
         ord_cols.append(ords)
     key_matrix = np.stack(ord_cols, axis=1)  # (rows, tensors)
     _uniq, inverse = np.unique(key_matrix, axis=0, return_inverse=True)
-    stats_cache: Dict[tuple, Interval] = {}
+    stats_cache: Dict[tuple, tuple] = {}
     # stats-coverage accounting: how many consulted chunks carried a usable
     # record (on manifest datasets the sidecar is served straight from the
     # consolidated snapshot; the maintenance backfill job drives the
-    # missing count of a pre-stats dataset to zero)
-    coverage = {"consulted": 0, "missing": 0}
+    # missing count of a pre-stats dataset to zero) — and how many of those
+    # predate the membership sketches (same backfill lifts them)
+    coverage = {"consulted": 0, "missing": 0, "sketchless": 0}
 
-    def leaf(tname: str, chunk_ord: int) -> Interval:
+    def leaf(tname: str, chunk_ord: int):
         k = (tname, chunk_ord)
         if k not in stats_cache:
             st = sources[tname].stats_of(chunk_ord)
             coverage["consulted"] += 1
             if st is None or not st.exact:
                 coverage["missing"] += 1
-            stats_cache[k] = interval_from_stats(st)
+            elif not st.sketched:
+                coverage["sketchless"] += 1
+            stats_cache[k] = (interval_from_stats(st), st)
         return stats_cache[k]
 
     verdicts = np.empty(len(_uniq), dtype=np.int8)  # 0 prune, 1 sure, 2 verify
     decided = 0
     for g, key in enumerate(_uniq):
-        env = {n: leaf(n, int(key[j])) for j, n in enumerate(names)}
-        t = _Analyzer(env).truth(where)
+        env: Dict[str, Interval] = {}
+        sketches: Dict[str, Optional[ChunkStats]] = {}
+        for j, n in enumerate(names):
+            env[n], sketches[n] = leaf(n, int(key[j]))
+        t = _Analyzer(env, sketches).truth(where)
         if t == ONLY_F:
             verdicts[g] = 0
             decided += 1
@@ -492,7 +661,31 @@ def plan_where(view, where: Node) -> Optional[ScanPlan]:
         groups=len(_uniq), groups_decided=decided,
         chunks_total=chunks_total, chunks_pruned=chunks_pruned,
         tensors=names, chunks_consulted=coverage["consulted"],
-        chunks_stats_missing=coverage["missing"])
+        chunks_stats_missing=coverage["missing"],
+        chunks_sketchless=coverage["sketchless"])
+
+
+def group_key_intervals(view, pipe, key_expr: Node) -> List[Interval]:
+    """Per-chunk-group interval of an ``ORDER BY`` key expression, under
+    the same soundness rules as :func:`plan_where` (float32-rounding
+    widened, int64-overflow guarded, NaN/empty flags) — the bound source
+    for the executor's top-k chunk skipping.  ``pipe`` is the
+    :class:`~repro.core.pipeline.ScanPipeline` built over ``view`` for the
+    key's base tensors; group ``g``'s interval bounds every key value a row
+    of that group can produce, so a group whose bound cannot beat the
+    running k-th-element cutoff is never streamed."""
+    sources = {n: view.scan_source(n) for n in pipe.names}
+    cache: Dict[tuple, Interval] = {}
+    out: List[Interval] = []
+    for g in range(pipe.n_groups):
+        env: Dict[str, Interval] = {}
+        for n, o in zip(pipe.names, pipe.group_ords(g)):
+            k = (n, o)
+            if k not in cache:
+                cache[k] = interval_from_stats(sources[n].stats_of(o))
+            env[n] = cache[k]
+        out.append(_Analyzer(env).interval(key_expr))
+    return out
 
 
 def _referenced(node: Node) -> List[str]:

@@ -48,6 +48,10 @@ class DatasetView:
     #: pushdown ran for this view's query (dict, see ScanPlan.report()); the
     #: dataloader reads it to account pruned chunks in LoaderStats.
     scan_plan = None
+    #: top-k report attached when ORDER BY + LIMIT ran as a best-bound-first
+    #: streamed scan (dict: groups, groups_scanned, groups_skipped, ...);
+    #: the dataloader accounts skipped groups like pruned chunks.
+    topk_plan = None
 
     def __init__(self, dataset, indices: np.ndarray,
                  node_id: Optional[str] = None,

@@ -130,7 +130,7 @@ def test_manifest_native_dataset_layout():
     base = dl.MemoryProvider()
     ds = _build(base)
     ptr = json.loads(base.get(MANIFEST_KEY).decode())
-    assert ptr["format"] == "deeplake-repro-manifest-v2"
+    assert ptr["format"] == "deeplake-repro-manifest-v3"
     assert ptr["vc"]["branches"]["main"] == ds.commit_id
     assert len(ptr["segments"]) >= 1
     seg = json.loads(base.get(ptr["segments"][0]).decode())

@@ -1,0 +1,126 @@
+"""Manifest format-v3 compatibility: v3 readers open v1 and v2 manifests
+(fallback binds / sketch-less records degrade to verify, never fail), and
+backfill + compaction lift membership sketches into the manifest so
+plan-at-open regains sketch verdicts on legacy datasets.
+"""
+
+import json
+
+import numpy as np
+
+import repro.core as dl
+from repro.core.manifest import (COMPAT_FORMATS, FORMAT, MANIFEST_KEY,
+                                 SEGMENT_PREFIX)
+from repro.core.tql import execute_query
+from repro.core.views import DatasetView
+
+
+def _build(storage=None, n=180):
+    ds = dl.Dataset(storage)
+    ds.create_tensor("lab", htype="class_label", min_chunk_size=128,
+                     max_chunk_size=256)
+    ds.create_tensor("x", dtype="float32", min_chunk_size=512,
+                     max_chunk_size=1024)
+    rng = np.random.default_rng(5)
+    for i in range(n):
+        band = i // 30
+        ds.append({"lab": np.int64(band * 2),
+                   "x": (rng.standard_normal(8).astype(np.float32)
+                         + np.float32(band * 10))})
+    ds.commit("fixture")
+    return ds
+
+
+def _rewrite_as(base, marker, strip_stats=False, strip_sketches=False):
+    """Rewrite the persisted manifest as an older format in place."""
+    ptr = json.loads(base.get(MANIFEST_KEY).decode())
+    ptr["format"] = marker
+    for seg_key in ptr["segments"]:
+        seg = json.loads(base.get(seg_key).decode())
+        seg["format"] = marker
+        for node in seg["nodes"].values():
+            if strip_stats:
+                node.pop("stats", None)
+            elif strip_sketches:
+                for cs in node.get("stats", {}).values():
+                    for rec in cs.get("chunks", []):
+                        if rec:
+                            for f in ("sketched", "dom", "dct", "bloom"):
+                                rec.pop(f, None)
+        base.put(seg_key, json.dumps(seg).encode())
+    base.put(MANIFEST_KEY, json.dumps(ptr).encode())
+
+
+def test_format_markers():
+    assert FORMAT == "deeplake-repro-manifest-v3"
+    assert "deeplake-repro-manifest-v1" in COMPAT_FORMATS
+    assert "deeplake-repro-manifest-v2" in COMPAT_FORMATS
+
+
+def test_v3_reader_opens_v2_manifest_sketchless_records_verify():
+    """v2 manifests (column stats, no sketches) load; bounds still prune,
+    membership probes degrade to verify, results identical."""
+    base = dl.MemoryProvider()
+    ds = _build(base)
+    expect = execute_query(ds, "SELECT * FROM dataset WHERE lab == 3")
+    _rewrite_as(base, "deeplake-repro-manifest-v2", strip_sketches=True)
+    ds2 = dl.Dataset(base)
+    assert ds2.vc.column_stats("lab") is not None  # scan index still served
+    got = execute_query(ds2, "SELECT * FROM dataset WHERE lab == 3")
+    assert got.indices.tolist() == expect.indices.tolist() == []
+    plan = got.scan_plan
+    assert plan["chunks_sketchless"] > 0 and plan["sketch_coverage"] < 1.0
+    # the odd-value gap needs the sketch: without it some rows verify
+    assert plan["rows_verify"] > 0
+    assert plan["stats_coverage"] == 1.0  # bounds themselves are intact
+
+
+def test_v3_reader_opens_v1_manifest_fallback_binds():
+    base = dl.MemoryProvider()
+    ds = _build(base)
+    expect = execute_query(ds, "SELECT * FROM dataset WHERE MIN(x) > 35")
+    _rewrite_as(base, "deeplake-repro-manifest-v1", strip_stats=True)
+    ds2 = dl.Dataset(base)
+    assert ds2.manifest is not None
+    assert ds2.vc.column_stats("lab") is None      # v1: no scan index
+    got = execute_query(ds2, "SELECT * FROM dataset WHERE MIN(x) > 35")
+    assert got.indices.tolist() == expect.indices.tolist()
+    # the bind fallback reads the (sketch-bearing) loose sidecar, so
+    # membership pruning still works end to end
+    v = execute_query(ds2, "SELECT * FROM dataset WHERE lab == 3")
+    assert len(v) == 0 and v.scan_plan["rows_verify"] == 0
+
+
+def test_backfill_and_compaction_lift_sketches_to_plan_at_open():
+    """Legacy dataset (no manifest, sketch-less sidecars): backfill lifts
+    the sketches, compaction publishes them, and a cold open then gets
+    membership prune verdicts with zero tensor binds and zero requests."""
+    base = dl.MemoryProvider()
+    _build(base)
+    base.delete(MANIFEST_KEY)
+    for key in list(base.list_keys(SEGMENT_PREFIX)):
+        base.delete(key)
+    for key in list(base.list_keys()):
+        if key.endswith("chunk_stats.json"):
+            doc = json.loads(base.get(key).decode())
+            for rec in doc.get("chunks", {}).values():
+                for f in ("sketched", "dom", "dct", "bloom"):
+                    rec.pop(f, None)
+            base.put(key, json.dumps(doc).encode())
+    legacy = dl.Dataset(base)
+    report = legacy.maintenance().backfill_stats()
+    assert report.details["sketches_lifted"] > 0
+    legacy.maintenance().compact_manifest()
+
+    s3 = dl.SimulatedS3Provider(base, time_scale=0)
+    cold = dl.Dataset(s3)
+    open_requests = s3.stats["requests"]
+    assert open_requests <= 3
+    view = DatasetView.full(cold)
+    v = execute_query(view, "SELECT * FROM view WHERE lab IN [1, 5]")
+    assert len(v) == 0 and v.scan_plan["rows_verify"] == 0
+    assert v.scan_plan["sketch_coverage"] == 1.0
+    assert s3.stats["requests"] == open_requests, \
+        "sketch planning issued storage requests"
+    assert view._bound == {} and cold._tensors == {}, \
+        "sketch planning bound a tensor"

@@ -1,0 +1,197 @@
+"""ORDER BY + LIMIT top-k pushdown: byte-identical equivalence with the
+legacy whole-column sort, int64 key precision, chunk-group skipping.
+
+The pushdown path (`Executor._order_limit_topk`) streams chunk groups
+best-bound-first and terminates on a running k-th-element cutoff; every
+test here cross-checks it against ``stream=False`` (the legacy path), which
+must agree byte-for-byte across ASC/DESC, ties, NaN keys, OFFSET, LIMIT
+beyond the result size, and RANDOM()-disabled plans.
+"""
+
+import numpy as np
+import pytest
+
+import repro.core as dl
+from repro.core.tql import execute_query
+
+from _hypothesis_compat import given, settings, strategies as st
+
+
+def _keyed_dataset(values, dtype="int64", chunk=96):
+    """One-key-per-row dataset, chunked small so top-k has granularity."""
+    ds = dl.Dataset()
+    ds.create_tensor("x", dtype=dtype, min_chunk_size=chunk // 2,
+                     max_chunk_size=chunk)
+    ds.create_tensor("tag", dtype="int64", min_chunk_size=chunk // 2,
+                     max_chunk_size=chunk)
+    for i, v in enumerate(values):
+        ds.append({"x": np.asarray(v, dtype=dtype), "tag": np.int64(i)})
+    ds.commit("fixture")
+    return ds
+
+
+def _both(ds, q):
+    on = execute_query(ds, q)                    # stream=None: auto/topk
+    off = execute_query(ds, q, stream=False)     # legacy whole-column sort
+    assert on.indices.tolist() == off.indices.tolist(), q
+    for k in on.derived:
+        a = [np.asarray(v).tolist() for v in on.derived[k]]
+        b = [np.asarray(v).tolist() for v in off.derived[k]]
+        assert a == b, q
+    return on
+
+
+# ------------------------------------------------------------ key precision
+def test_order_by_keeps_int64_precision():
+    """Satellite regression: float64-cast keys collapse int64 values above
+    2**53 into ties and mis-order them; native-dtype keys must not."""
+    base = 2 ** 53
+    vals = [base + 3, base, base + 1, base + 2, base + 5, base + 4]
+    ds = _keyed_dataset(vals * 4)  # shuffled-ish repeats across chunks
+    view = execute_query(ds, "SELECT * FROM dataset ORDER BY x ASC")
+    got = [int(np.asarray(v)) for v in
+           (ds.x.read(int(i)) for i in view.indices)]
+    assert got == sorted(int(v) for v in vals * 4)
+    # and through the top-k path (LIMIT engages the pushdown)
+    top = _both(ds, "SELECT * FROM dataset ORDER BY x ASC LIMIT 5")
+    got_top = [int(ds.x.read(int(i))) for i in top.indices]
+    assert got_top == sorted(int(v) for v in vals * 4)[:5]
+
+
+def test_order_by_desc_tie_order_matches_legacy():
+    """Legacy DESC is the full reversal of a stable ascending sort: ties
+    appear in descending position order.  The pushdown must reproduce it."""
+    ds = _keyed_dataset([5, 1, 5, 3, 5, 1, 3, 5] * 6)
+    v = _both(ds, "SELECT * FROM dataset ORDER BY x DESC LIMIT 10")
+    assert v.topk_plan is not None  # the pushdown actually ran
+
+
+# ------------------------------------------------------------- equivalence
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.integers(-40, 40), min_size=2, max_size=70),
+       st.booleans(),
+       st.integers(1, 12),
+       st.integers(0, 6))
+def test_topk_equivalence_int_keys(vals, desc, limit, offset):
+    ds = _keyed_dataset(vals)
+    q = (f"SELECT * FROM dataset ORDER BY x {'DESC' if desc else 'ASC'} "
+         f"LIMIT {limit} OFFSET {offset}")
+    _both(ds, q)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.floats(-5, 5), min_size=2, max_size=60),
+       st.booleans(),
+       st.integers(1, 9))
+def test_topk_equivalence_float_keys_with_nans(vals, desc, limit):
+    vals = [float("nan") if (i % 4 == 1) else v for i, v in enumerate(vals)]
+    ds = _keyed_dataset(vals, dtype="float32")
+    q = (f"SELECT * FROM dataset ORDER BY x {'DESC' if desc else 'ASC'} "
+         f"LIMIT {limit}")
+    _both(ds, q)
+
+
+def test_topk_limit_beyond_result_size():
+    ds = _keyed_dataset(list(range(30)))
+    v = _both(ds, "SELECT * FROM dataset ORDER BY x DESC LIMIT 500")
+    assert len(v) == 30
+    v = _both(ds, "SELECT * FROM dataset ORDER BY x LIMIT 500 OFFSET 25")
+    assert len(v) == 5
+
+
+def test_topk_after_where_and_with_projection():
+    ds = _keyed_dataset(list(range(80)))
+    _both(ds, "SELECT * FROM dataset WHERE x >= 10 ORDER BY x DESC LIMIT 7")
+    _both(ds, "SELECT x, tag AS t FROM dataset ORDER BY x DESC "
+              "LIMIT 5 OFFSET 2")
+    _both(ds, "SELECT MEAN(x) AS m FROM dataset ORDER BY x LIMIT 6")
+
+
+def test_topk_expression_keys():
+    rng = np.random.default_rng(3)
+    ds = dl.Dataset()
+    ds.create_tensor("v", dtype="float32", min_chunk_size=1 << 10,
+                     max_chunk_size=1 << 11)
+    for i in range(200):
+        ds.append({"v": (rng.standard_normal(16).astype(np.float32)
+                         + np.float32(5 * (i // 25)))})
+    ds.commit("c")
+    _both(ds, "SELECT * FROM dataset ORDER BY MEAN(v) DESC LIMIT 11")
+    _both(ds, "SELECT * FROM dataset ORDER BY MEAN(v) * -2 + 1 LIMIT 9")
+    _both(ds, "SELECT * FROM dataset ORDER BY ABS(MEAN(v) - 10) LIMIT 8")
+
+
+def test_random_disables_topk():
+    """RANDOM() anywhere in the query draws from an order-dependent stream:
+    the pushdown must stand down and both paths must still agree."""
+    ds = _keyed_dataset(list(range(60)))
+    for q in ("SELECT * FROM dataset WHERE RANDOM() < 2 "
+              "ORDER BY x DESC LIMIT 5",
+              "SELECT RANDOM() AS r, x FROM dataset ORDER BY x LIMIT 5"):
+        v = _both(ds, q)
+        assert v.topk_plan is None, q
+
+
+def test_arrange_and_sample_by_disable_topk():
+    ds = _keyed_dataset([1, 3, 2, 4] * 20)
+    v = _both(ds, "SELECT * FROM dataset ORDER BY x ARRANGE BY tag % 3 "
+                  "LIMIT 6")
+    assert v.topk_plan is None
+    v = execute_query(ds, "SELECT * FROM dataset ORDER BY x "
+                          "SAMPLE BY x LIMIT 6")
+    assert v.topk_plan is None and len(v) == 6
+
+
+# ---------------------------------------------------------- actual skipping
+def test_topk_skips_chunk_groups_and_requests():
+    """Selective top-k over simulated S3 fetches strictly fewer chunks than
+    the legacy whole-column sort, with identical results."""
+    q = "SELECT * FROM dataset ORDER BY x DESC LIMIT 8"
+
+    def measure(stream):
+        s3 = dl.SimulatedS3Provider(time_scale=0)
+        ds = dl.Dataset(s3)
+        ds.create_tensor("x", dtype="int64", min_chunk_size=128,
+                         max_chunk_size=256)
+        for i in range(400):
+            ds.append({"x": np.int64(i)})
+        ds.commit("c")
+        s3.reset_stats()
+        view = execute_query(ds, q, stream=stream)
+        return view, dict(s3.stats)
+
+    legacy, full = measure(False)
+    topk, pushed = measure(None)
+    assert topk.indices.tolist() == legacy.indices.tolist()
+    assert topk.topk_plan is not None
+    assert topk.topk_plan["groups_skipped"] > 0
+    assert topk.topk_plan["terminated_early"] == 1
+    assert pushed["requests"] * 2 <= full["requests"], \
+        (f"top-k did not halve requests: {full['requests']} -> "
+         f"{pushed['requests']}")
+    assert pushed["bytes_down"] < full["bytes_down"]
+
+
+def test_topk_report_reaches_dataloader_stats():
+    ds = _keyed_dataset(list(range(120)))
+    v = execute_query(ds, "SELECT * FROM dataset ORDER BY x DESC LIMIT 6")
+    assert v.topk_plan is not None and v.topk_plan["groups_skipped"] > 0
+    loader = v.dataloader(batch_size=4, tensors=["x"], num_workers=2)
+    rows = sum(len(b["x"]) for b in loader)
+    assert rows == 6
+    assert loader.stats.topk_groups_skipped == v.topk_plan["groups_skipped"]
+    assert loader.costs.counters["topk_groups_skipped"] > 0
+
+
+def test_topk_with_unknown_bounds_still_exact():
+    """Chunks without usable stats get unbounded (stream-first) bounds:
+    no skipping, same answer."""
+    ds = _keyed_dataset(list(range(50)))
+    view = execute_query(ds, "SELECT * FROM dataset")  # plain copy
+    for name in ("x", "tag"):
+        from repro.core.chunk_encoder import ChunkStatsTable
+        view._base_tensor(name).stats = ChunkStatsTable()
+    on = execute_query(view, "SELECT * FROM view ORDER BY x DESC LIMIT 5")
+    off = execute_query(view, "SELECT * FROM view ORDER BY x DESC LIMIT 5",
+                        stream=False)
+    assert on.indices.tolist() == off.indices.tolist()
