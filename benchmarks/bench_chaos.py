@@ -1,0 +1,148 @@
+"""Chaos bench: the hostile-storage hardening gate.
+
+Runs the same TQL query + streaming-loader workload twice over one dataset:
+once against a clean SimulatedS3 provider, once against the same provider
+with a seeded :class:`~repro.core.FaultPolicy` injecting timeouts, 5xx
+transients, slow-range straggles and torn reads.  The smoke gate (run by
+``scripts/check.sh``) asserts, BEFORE recording anything:
+
+* **zero corruption** — selected rows, stream order and payload bytes are
+  byte-identical between the clean and the faulted run (the retry/hedge
+  machinery absorbs every injected fault);
+* **visible absorption** — ``faults_injected`` > 0 on the provider and
+  ``engine_errors_transient`` > 0 on the fetch engine (faults actually
+  fired and were retried, not silently skipped);
+* **bounded amplification** — the faulted run issues at most
+  ``AMPLIFICATION_BUDGET``x the clean run's charged requests (retries +
+  hedges may not stampede the store; S3 SlowDown must not beget SlowDown).
+
+The datapoint lands in ``BENCH_io.json`` under ``chaos_hostile_storage``
+with full provider + ``engine_*`` counter snapshots (retries, hedges,
+hedge_wins, errors_transient, ...), so retry/hedge behaviour is tracked
+across PRs next to the request counts.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+import repro.core as dl
+
+from . import io_report
+from .common import Timer, row
+
+SEED = 20260807
+QUERY = "SELECT * FROM dataset WHERE MIN(val) > 580"
+
+#: charged-request ratio (faulted / clean) the smoke gate tolerates; the
+#: default fault rates total ~15% so geometric retry amplification sits
+#: near 1.2x — 1.5x leaves room for hedged duplicates without letting a
+#: retry storm pass unnoticed.
+AMPLIFICATION_BUDGET = 1.5
+
+FAULT_RATES = dict(timeout_rate=0.04, error_rate=0.04,
+                   straggle_rate=0.05, torn_rate=0.03)
+
+
+def _clustered_dataset(base: dl.StorageProvider, bands: int,
+                       per_band: int) -> None:
+    """Value-clustered fixture: tiny chunks so the query prunes most of
+    them via manifest stats and the stream touches many objects (more
+    reads = more injected faults per run)."""
+    ds = dl.Dataset(base)
+    ds.create_tensor("val", dtype="float32", min_chunk_size=1 << 11,
+                     max_chunk_size=1 << 12)
+    ds.create_tensor("lab", htype="class_label")
+    rng = np.random.default_rng(11)
+    for band in range(bands):
+        lo = band * 100.0
+        vals = rng.uniform(lo, lo + 90.0,
+                           size=(per_band, 64)).astype(np.float32)
+        for i in range(per_band):
+            ds.append({"val": vals[i], "lab": np.int64(band * per_band + i)})
+    ds.commit("chaos fixture")
+
+
+def _stream(storage: dl.StorageProvider) -> Tuple[list, list, bytes]:
+    """Query + ordered stream; returns everything the parity gate compares
+    (selected indices, label order, concatenated payload bytes)."""
+    ds = dl.Dataset(storage)
+    view = ds.query(QUERY, engine="numpy")
+    idx = view.indices.tolist()
+    loader = ds.dataloader(batch_size=32, shuffle=False, num_workers=2,
+                           seed=0)
+    labs, vals = [], []
+    for batch in loader:
+        labs.extend(int(v) for v in batch["lab"])
+        vals.append(np.asarray(batch["val"]))
+    payload = np.concatenate(vals).tobytes() if vals else b""
+    return idx, labs, payload
+
+
+def main(smoke: bool = False) -> List[str]:
+    bands, per_band = (8, 100) if smoke else (12, 200)
+    base = dl.MemoryProvider()
+    _clustered_dataset(base, bands, per_band)
+
+    # ---------------- clean pass (reference results + request baseline)
+    clean_s3 = dl.SimulatedS3Provider(base, time_scale=0)
+    with Timer() as t_clean:
+        clean = _stream(clean_s3)
+    clean_stats = io_report.provider_snapshot(clean_s3)
+
+    # ---------------- hostile pass: seeded faults on the same objects
+    policy = dl.FaultPolicy(seed=SEED, straggle_sleep_s=0.06, **FAULT_RATES)
+    chaos_s3 = dl.SimulatedS3Provider(base, time_scale=0,
+                                      fault_policy=policy)
+    with Timer() as t_chaos:
+        faulted = _stream(chaos_s3)
+    chaos_stats = io_report.provider_snapshot(chaos_s3)
+
+    # ---------------- gates (run BEFORE record(): a failing run must never
+    # become part of the tracked history)
+    assert faulted[0] == clean[0], "faulted run selected different rows"
+    assert faulted[1] == clean[1], "faulted run changed the stream order"
+    assert faulted[2] == clean[2], "faulted run corrupted payload bytes"
+    assert chaos_stats["faults_injected"] > 0, \
+        "fault policy injected nothing — the bench is not exercising chaos"
+    assert chaos_stats.get("engine_errors_transient", 0) > 0, \
+        "no transient was retried by the fetch engine"
+    for k in ("engine_retries", "engine_hedges", "engine_hedge_wins",
+              "engine_errors_permanent", "engine_stragglers"):
+        assert k in chaos_stats, f"engine counter {k} missing from snapshot"
+    amplification = chaos_stats["requests"] / max(clean_stats["requests"], 1)
+    assert amplification <= AMPLIFICATION_BUDGET, (
+        f"request amplification {amplification:.2f}x exceeds "
+        f"{AMPLIFICATION_BUDGET}x budget (clean {clean_stats['requests']}, "
+        f"chaos {chaos_stats['requests']})")
+
+    io_report.record("chaos_hostile_storage", {
+        "clean": clean_stats,
+        "chaos": chaos_stats,
+        "gate": {"amplification_x": amplification,
+                 "budget_x": AMPLIFICATION_BUDGET,
+                 "parity_ok": 1,
+                 "rows_streamed": len(clean[1]),
+                 "smoke": int(smoke)},
+    })
+
+    n = max(len(clean[1]), 1)
+    return [
+        row("chaos_clean_stream", t_clean.elapsed / n * 1e6,
+            f"reqs{clean_stats['requests']}_rows{len(clean[1])}"),
+        row("chaos_hostile_stream", t_chaos.elapsed / n * 1e6,
+            f"reqs{chaos_stats['requests']}_"
+            f"faults{chaos_stats['faults_injected']}_"
+            f"retries{chaos_stats.get('engine_retries', 0)}_"
+            f"hedges{chaos_stats.get('engine_hedges', 0)}_"
+            f"hedgewins{chaos_stats.get('engine_hedge_wins', 0)}_"
+            f"amp{amplification:.2f}x"),
+    ]
+
+
+if __name__ == "__main__":
+    import sys
+
+    print("\n".join(main(smoke="--smoke" in sys.argv[1:])))

@@ -8,14 +8,16 @@ import time
 
 
 def main() -> None:
-    from . import (bench_fig5_formats, bench_fig6_streaming_train,
-                   bench_fig7_utilization, bench_kernels, bench_tql)
+    from . import (bench_chaos, bench_fig5_formats,
+                   bench_fig6_streaming_train, bench_fig7_utilization,
+                   bench_kernels, bench_tql)
     modules = [
         ("fig5_formats", bench_fig5_formats),
         ("fig6_streaming_train", bench_fig6_streaming_train),
         ("fig7_utilization", bench_fig7_utilization),
         ("tql", bench_tql),
         ("kernels", bench_kernels),
+        ("chaos", bench_chaos),
     ]
     print("name,us_per_call,derived")
     for name, mod in modules:

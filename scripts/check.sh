@@ -5,7 +5,9 @@
 # zero payload requests) + cold-open budget & maintenance smoke (backfill
 # -> prune-parity, GC dry-run, compaction) + fig6 streaming smoke with a
 # stall-seconds budget (cross-unit prefetch must keep compute the
-# bottleneck) + BENCH_io.json validation + no-tracked-bytecode guard.
+# bottleneck) + chaos smoke (seeded storage faults: byte-identical stream
+# results, visible retry/hedge counters, request amplification <= 1.5x)
+# + BENCH_io.json validation + no-tracked-bytecode guard.
 # Usage: scripts/check.sh  (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -30,6 +32,9 @@ python -m benchmarks.bench_maintenance --smoke
 
 echo "== fig6 streaming smoke (stall-seconds budget) =="
 python -m benchmarks.bench_fig6_streaming_train --smoke
+
+echo "== chaos smoke (hostile-storage parity + amplification gate) =="
+python -m benchmarks.bench_chaos --smoke
 
 echo "== BENCH_io.json validation =="
 python -m benchmarks.io_report --validate

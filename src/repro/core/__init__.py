@@ -5,26 +5,30 @@ from .chunk_encoder import ChunkEncoder
 from .chunks import ChunkBuilder, parse_header, read_all_samples
 from .codecs import available as available_codecs, get_codec
 from .dataset import Dataset, Group, MergeConflict, dataset, empty_like
-from .fetch import (FetchEngine, coalescing_disabled, coalescing_enabled,
-                    engine_for)
+from .fetch import (FetchEngine, RetryPolicy, coalescing_disabled,
+                    coalescing_enabled, engine_for)
 from .htypes import available_htypes, get_htype, parse_htype
 from .maintenance import MaintenanceReport, MaintenanceRunner
 from .manifest import Manifest, ManifestConflict
-from .storage import (LocalProvider, LRUCacheProvider, MemoryProvider,
-                      SimulatedS3Provider, StorageError, StorageProvider,
-                      chain, coalesce_ranges, storage_from_path)
+from .storage import (FaultPolicy, LocalProvider, LRUCacheProvider,
+                      MemoryProvider, RetryExhausted, SimulatedS3Provider,
+                      StorageError, StorageProvider, StorageTimeout,
+                      TornReadError, TransientStorageError, chain,
+                      coalesce_ranges, retry_transient, storage_from_path)
 from .tensor import Tensor, TensorMeta
 from .version_control import VersionControl
 from .views import DatasetView, TensorView
 
 __all__ = [
-    "ChunkBuilder", "ChunkEncoder", "Dataset", "DatasetView", "FetchEngine",
-    "Group", "LRUCacheProvider", "LocalProvider", "MaintenanceReport",
-    "MaintenanceRunner", "Manifest", "ManifestConflict", "MemoryProvider",
-    "MergeConflict", "SimulatedS3Provider", "StorageError",
-    "StorageProvider", "Tensor", "TensorMeta", "TensorView",
-    "VersionControl", "available_codecs", "available_htypes", "chain",
-    "coalesce_ranges", "coalescing_disabled", "coalescing_enabled",
-    "dataset", "empty_like", "engine_for", "get_codec", "get_htype",
-    "parse_htype", "read_all_samples", "storage_from_path",
+    "ChunkBuilder", "ChunkEncoder", "Dataset", "DatasetView", "FaultPolicy",
+    "FetchEngine", "Group", "LRUCacheProvider", "LocalProvider",
+    "MaintenanceReport", "MaintenanceRunner", "Manifest", "ManifestConflict",
+    "MemoryProvider", "MergeConflict", "RetryExhausted", "RetryPolicy",
+    "SimulatedS3Provider", "StorageError", "StorageProvider",
+    "StorageTimeout", "Tensor", "TensorMeta", "TensorView", "TornReadError",
+    "TransientStorageError", "VersionControl", "available_codecs",
+    "available_htypes", "chain", "coalesce_ranges", "coalescing_disabled",
+    "coalescing_enabled", "dataset", "empty_like", "engine_for", "get_codec",
+    "get_htype", "parse_htype", "read_all_samples", "retry_transient",
+    "storage_from_path",
 ]

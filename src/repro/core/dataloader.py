@@ -244,6 +244,7 @@ class DeepLakeLoader:
         out: Dict[int, Dict[str, Any]] = {p: {} for p in unit.positions}
         io: Dict[str, Any] = {"io_s": 0.0, "cpu_s": 0.0, "bytes": 0,
                               "requests": 0}
+        faults_before = self._engine.fault_events()
         gidxs = [int(self.view.indices[p]) for p in unit.positions]
         for name in self.tensor_names:
             if name in self.view.derived:
@@ -264,7 +265,11 @@ class DeepLakeLoader:
             result.append((p, sample))
         t_io = io["io_s"]
         t_cpu = io["cpu_s"] + time.perf_counter() - t2
-        self.costs.observe("unit", t_io, t_cpu)
+        # a unit whose reads hit injected faults / retries / hedges carries
+        # backoff + duplicate-request time: keep it out of the unit EWMA
+        # that sizes next epoch's units and prefetch depth
+        self.costs.observe("unit", t_io, t_cpu,
+                           clean=self._engine.fault_events() == faults_before)
         if io["requests"]:
             self.costs.note("io_requests", io["requests"])
         self.stats.fetch_seconds += t_io

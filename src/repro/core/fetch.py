@@ -46,23 +46,47 @@ concurrent consumer's (engines are shared per provider).  A cancelled or
 failed in-flight future is never trusted by readers — they fall back to a
 direct synchronous fetch — so cancellation is always safe, merely wasteful.
 
+**Failure handling.**  Every physical fetch the engine issues runs under a
+:class:`RetryPolicy`: :class:`~repro.core.storage.TransientStorageError`
+(timeouts, 5xx, torn reads) retries with capped exponential backoff +
+jitter, and exhaustion raises :class:`~repro.core.storage.RetryExhausted`
+(a ``StorageError``) — counted in ``stats["errors_transient"]`` /
+``stats["retries"]`` / ``stats["errors_permanent"]``.  Permanent errors
+propagate immediately.  Prefetches additionally *hedge*: clean fetch wall
+times feed a :class:`~repro.distributed.fault_tolerance.StragglerDetector`
+EWMA, and a prefetch outliving ``hedge_multiplier ×`` that baseline fires
+a duplicate request — first responder wins, the loser's retries are
+cancelled, exactly one result is consumed (``stats["hedges"]`` /
+``stats["hedge_wins"]`` / ``stats["stragglers"]``).  Readers racing an
+in-flight prefetch (:meth:`FetchEngine.resident` /
+:meth:`FetchEngine.wait_inflight`) treat ONLY storage errors as a fallback
+to direct I/O (``stats["inflight_fallbacks"]``); any other exception (a
+decode bug, a programming error) re-raises — a failed prefetch must never
+masquerade as a cache miss.  Fault-polluted timings (retried or hedged
+requests) never feed the latency/bandwidth EWMA, so one straggler cannot
+distort ``gap_threshold`` / ``derive_unit_size`` for the rest of the epoch.
+
 Benchmarks can bracket a run with :func:`coalescing_disabled` to measure
 the per-range "before" datapoint against the coalesced "after".
 """
 
 from __future__ import annotations
 
+import random
 import threading
 import time
 import weakref
 from collections import OrderedDict
 from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
 from contextlib import contextmanager
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..distributed.fault_tolerance import StragglerDetector
 from .scheduler import CostModel
-from .storage import (LRUCacheProvider, Range, StorageProvider,
-                      coalesce_ranges, slice_spans)
+from .storage import (LRUCacheProvider, Range, RetryExhausted, StorageError,
+                      StorageProvider, TransientStorageError, coalesce_ranges,
+                      slice_spans)
 
 # Conservative prior for providers that expose no cost parameters (POSIX /
 # in-memory): sub-millisecond "requests", fast local bandwidth.  The EWMA
@@ -179,19 +203,42 @@ class CostEstimator:
         return cost_full <= amortization * cost_ranged
 
 
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Retry + hedging knobs for one :class:`FetchEngine`.
+
+    ``max_attempts`` bounds tries per physical request (first + retries);
+    backoff doubles from ``backoff_base_s`` up to ``backoff_cap_s``, with
+    up to ``jitter ×`` extra randomization per sleep.  A prefetch is
+    hedged (duplicated) once it outlives ``hedge_multiplier ×`` the
+    straggler detector's clean-fetch EWMA, floored at ``hedge_min_s`` so
+    micro-variance on fast stores can never trigger a duplicate;
+    ``hedge_multiplier <= 0`` disables hedging outright.
+    """
+
+    max_attempts: int = 4
+    backoff_base_s: float = 0.01
+    backoff_cap_s: float = 0.25
+    jitter: float = 0.5
+    hedge_multiplier: float = 3.0
+    hedge_min_s: float = 0.05
+
+
 class FetchEngine:
     """Batched fetch front-end shared by TQL, tensor reads, and the loader.
 
-    See the module docstring for the coalescing / dedup / cancellation
-    contract.  One engine exists per storage provider (``engine_for``); all
-    tensors and loaders bound to that provider share its resident store,
-    in-flight table, and thread pool.
+    See the module docstring for the coalescing / dedup / cancellation /
+    failure-handling contract.  One engine exists per storage provider
+    (``engine_for``); all tensors and loaders bound to that provider share
+    its resident store, in-flight table, thread pool, retry policy, and
+    straggler detector.
     """
 
     def __init__(self, provider: StorageProvider, *,
                  cost_model: Optional[CostModel] = None,
                  max_workers: int = 8,
-                 resident_bytes: int = 64 << 20) -> None:
+                 resident_bytes: int = 64 << 20,
+                 retry: Optional[RetryPolicy] = None) -> None:
         # weak ref: the engine registry must not keep providers (and with
         # them engines, blobs, pools) alive after their last external user
         self._provider_ref = weakref.ref(provider)
@@ -199,6 +246,14 @@ class FetchEngine:
         self.cache_above = cache_capacity_above(provider)
         self.resident_bytes = int(resident_bytes)
         self.max_workers = max(1, int(max_workers))
+        self.retry = retry if retry is not None else RetryPolicy()
+        # the distributed-training straggler detector doubles as the hedge
+        # trigger: clean fetch walls feed its EWMA, a fired hedge is the
+        # mitigation (patience=1: every straggler hedges immediately)
+        self.detector = StragglerDetector(
+            threshold=max(self.retry.hedge_multiplier, 1.0), patience=1)
+        self._backoff_rng = random.Random(0xFE7C)
+        self._op_seq = 0
         # two pools so a work task (which may block on a prefetch future)
         # can never starve the prefetch that would unblock it
         self._work_pool: Optional[ThreadPoolExecutor] = None
@@ -212,7 +267,11 @@ class FetchEngine:
         self._unconsumed: Dict[str, int] = {}
         self._inflight_consumed: set = set()
         self.stats = {"requests": 0, "ranges": 0, "bytes": 0, "hits": 0,
-                      "prefetch_hits": 0, "prefetch_wasted_bytes": 0}
+                      "prefetch_hits": 0, "prefetch_wasted_bytes": 0,
+                      "retries": 0, "errors_transient": 0,
+                      "errors_permanent": 0, "hedges": 0, "hedge_wins": 0,
+                      "stragglers": 0, "prefetch_failures": 0,
+                      "inflight_fallbacks": 0}
 
     @property
     def provider(self) -> StorageProvider:
@@ -236,8 +295,16 @@ class FetchEngine:
         if entry is not None and entry[0].done():
             try:
                 blob = entry[0].result()
-            except (CancelledError, Exception):
+            except CancelledError:
+                return None            # cancelled: caller fetches directly
+            except StorageError:
+                # the prefetch burned its whole retry budget; the caller's
+                # direct fetch gets a fresh one (counted, never silent)
+                with self._lock:
+                    self.stats["inflight_fallbacks"] += 1
                 return None
+            # anything else (decode bug, KeyError, ...) re-raises: a failed
+            # prefetch must never masquerade as a cache miss
             with self._lock:
                 self._mark_inflight_consumed(key)
             return blob
@@ -291,6 +358,14 @@ class FetchEngine:
             if not consumed:
                 self._unconsumed[key] = len(data)
             while self._resident_size > self.resident_bytes and self._resident:
+                # evict already-consumed blobs first (LRU among them): a
+                # staged, never-read prefetch is the one blob eviction
+                # would turn into pure waste
+                victim = next((k for k in self._resident
+                               if k not in self._unconsumed), None)
+                if victim is not None:
+                    self._resident_size -= len(self._resident.pop(victim))
+                    continue
                 k, v = self._resident.popitem(last=False)
                 self._resident_size -= len(v)
                 self._waste(k, len(v))
@@ -314,26 +389,89 @@ class FetchEngine:
 
     # -------------------------------------------------------- sync fetching
     def _observe(self, n_requests: int, n_ranges: int, nbytes: int,
-                 seconds: float) -> None:
+                 seconds: float, clean: bool = True) -> None:
+        """Account one logical fetch.  ``clean=False`` (the timing includes
+        injected faults, retry backoff, or a hedge race) still counts the
+        request but NEVER feeds the latency/bandwidth EWMA — one straggler
+        must not distort the coalescing threshold or unit sizing."""
         with self._lock:
             self.stats["requests"] += n_requests
             self.stats["ranges"] += n_ranges
             self.stats["bytes"] += nbytes
-        if n_requests:
+        if n_requests and clean:
             self.est.observe_request(nbytes // n_requests,
                                      seconds / n_requests)
 
+    def _issue(self, fn, key: str = "",
+               cancelled: Optional[threading.Event] = None):
+        """Run one physical fetch closure under the retry policy.
+
+        Transients retry with capped exponential backoff + jitter;
+        exhaustion raises :class:`RetryExhausted` chained on the last
+        transient.  ``cancelled`` (hedging) aborts between attempts.
+        Returns ``(result, first_try)`` — ``first_try`` is False whenever
+        a retry happened, i.e. the caller's wall time is fault-polluted.
+        """
+        policy = self.retry
+        attempts = max(1, policy.max_attempts)
+        delay = policy.backoff_base_s
+        last: Optional[TransientStorageError] = None
+        for i in range(attempts):
+            if cancelled is not None and cancelled.is_set():
+                raise CancelledError()
+            try:
+                return fn(), i == 0
+            except TransientStorageError as e:
+                last = e
+                with self._lock:
+                    self.stats["errors_transient"] += 1
+                    if i + 1 < attempts:
+                        self.stats["retries"] += 1
+                    u = self._backoff_rng.random()
+                if i + 1 >= attempts:
+                    break
+                time.sleep(delay * (1.0 + policy.jitter * u))
+                delay = min(delay * 2.0, policy.backoff_cap_s)
+        with self._lock:
+            self.stats["errors_permanent"] += 1
+        raise RetryExhausted(
+            f"fetch retries exhausted after {attempts} attempts: {key!r}"
+        ) from last
+
+    def _note_clean_wall(self, seconds: float) -> None:
+        """Feed one clean (unretried, unhedged) fetch wall time to the
+        straggler detector's baseline EWMA."""
+        with self._lock:
+            self._op_seq += 1
+            seq = self._op_seq
+        self.detector.observe(seq, seconds)
+
+    def fault_events(self) -> int:
+        """Monotone count of fault-path events (transient errors + hedges).
+        Consumers bracket a timed section with it to decide whether that
+        timing is clean enough for their own EWMAs (the loader's per-unit
+        cost model does)."""
+        with self._lock:
+            s = self.stats
+            return s["errors_transient"] + s["errors_permanent"] + s["hedges"]
+
     def wait_inflight(self, key: str) -> Optional[bytes]:
         """Result of an in-flight prefetch of ``key``, waiting for it to
-        finish; None when nothing is in flight or it was cancelled/failed
-        (the caller then falls back to direct I/O)."""
+        finish; None when nothing is in flight or it was cancelled or
+        failed with a *storage* error (the caller then falls back to
+        direct I/O, which retries with a fresh budget).  Non-storage
+        exceptions re-raise — they are bugs, not cache misses."""
         with self._lock:
             entry = self._inflight.get(key)
         if entry is None:
             return None
         try:
             blob = entry[0].result()
-        except (CancelledError, Exception):
+        except CancelledError:
+            return None
+        except StorageError:
+            with self._lock:
+                self.stats["inflight_fallbacks"] += 1
             return None
         with self._lock:
             self._mark_inflight_consumed(key)
@@ -354,8 +492,11 @@ class FetchEngine:
         if blob is not None:
             return blob
         t0 = time.perf_counter()
-        data = self.provider.get(key)
-        self._observe(1, 0, len(data), time.perf_counter() - t0)
+        data, first_try = self._issue(lambda: self.provider.get(key), key=key)
+        wall = time.perf_counter() - t0
+        self._observe(1, 0, len(data), wall, clean=first_try)
+        if first_try:
+            self._note_clean_wall(wall)
         with self._lock:  # prefetched into an LRU tier above: still a hit
             self._mark_consumed(key)
         return data
@@ -379,10 +520,12 @@ class FetchEngine:
             return [blob[s:max(s, e)] for s, e in ranges]
         if not coalescing_enabled():
             t0 = time.perf_counter()
-            out = [self.provider.get_range(key, s, e) for s, e in ranges]
+            out, first_try = self._issue(
+                lambda: [self.provider.get_range(key, s, e)
+                         for s, e in ranges], key=key)
             nbytes = sum(len(p) for p in out)
             self._observe(len(ranges), len(ranges), nbytes,
-                          time.perf_counter() - t0)
+                          time.perf_counter() - t0, clean=first_try)
             if counters is not None:
                 counters["requests"] += len(ranges)
                 counters["bytes"] += nbytes
@@ -391,10 +534,11 @@ class FetchEngine:
         t0 = time.perf_counter()
         with self._lock:  # prefetched into an LRU tier above: still a hit
             self._mark_consumed(key)
-        payloads = self.provider.get_ranges(key, spans)
+        payloads, first_try = self._issue(
+            lambda: self.provider.get_ranges(key, spans), key=key)
         nbytes = sum(len(p) for p in payloads)
         self._observe(len(spans), len(ranges), nbytes,
-                      time.perf_counter() - t0)
+                      time.perf_counter() - t0, clean=first_try)
         if counters is not None:
             counters["requests"] += len(spans)
             counters["bytes"] += nbytes
@@ -425,10 +569,19 @@ class FetchEngine:
             with self._lock:  # LRU-tier prefetch consumption
                 for k in missing:
                     self._mark_consumed(k)
-            fetched = self.provider.get_many(missing)
+            # per-key retry: a transient on key N must not force re-reads
+            # of keys 1..N-1 (a whole-batch retry could outlive any budget
+            # once per-key fault streaks stack up)
+            fetched: Dict[str, bytes] = {}
+            all_clean = True
+            for k in missing:
+                blob, first_try = self._issue(
+                    lambda k=k: self.provider.get(k), key=k)
+                fetched[k] = blob
+                all_clean = all_clean and first_try
             nbytes = sum(len(v) for v in fetched.values())
             self._observe(len(fetched), 0, nbytes,
-                          time.perf_counter() - t0)
+                          time.perf_counter() - t0, clean=all_clean)
             if counters is not None:
                 counters["requests"] += len(fetched)
                 counters["bytes"] += nbytes
@@ -498,8 +651,11 @@ class FetchEngine:
 
         def work() -> bytes:
             t0 = time.perf_counter()
-            blob = self.provider.get(key)
-            self._observe(1, 0, len(blob), time.perf_counter() - t0)
+            blob, clean = self._hedged_get(key)
+            wall = time.perf_counter() - t0
+            self._observe(1, 0, len(blob), wall, clean=clean)
+            if clean:
+                self._note_clean_wall(wall)
             if on_fetched is not None:
                 on_fetched(len(blob))
             return blob
@@ -521,11 +677,90 @@ class FetchEngine:
                 self._inflight_consumed.discard(key)
             # admit only while still current: a discard() (writer rewrote
             # the key) or supersession while in flight abandons the result
-            if current and not f.cancelled() and f.exception() is None:
+            if not current or f.cancelled():
+                return
+            if f.exception() is None:
                 self._admit(key, f.result(), consumed=consumed)
+            else:
+                # the failure stays on the future for waiters to see; it
+                # must also be visible when nobody ever waits
+                with self._lock:
+                    self.stats["prefetch_failures"] += 1
 
         fut.add_done_callback(_done)
         return fut
+
+    def _hedged_get(self, key: str) -> Tuple[bytes, bool]:
+        """Whole-object GET with straggler hedging (the prefetch pool's
+        physical fetch).
+
+        The primary request runs under the retry policy on its own thread;
+        once it outlives ``hedge_multiplier ×`` the straggler detector's
+        clean-fetch baseline (floored at ``hedge_min_s``), a duplicate
+        request fires and the first responder wins — the loser's remaining
+        retries are cancelled and its payload discarded, so exactly one
+        result is consumed.  No hedge before a baseline exists (the first
+        fetch has nothing to straggle against).  Returns ``(blob, clean)``
+        where ``clean`` means first attempt, no hedge.
+        """
+        policy = self.retry
+        base = self.detector.baseline
+        if policy.hedge_multiplier <= 0 or base is None:
+            return self._issue(lambda: self.provider.get(key), key=key)
+        deadline = max(policy.hedge_min_s, self.detector.threshold * base)
+        cond = threading.Condition()
+        cancel = threading.Event()
+        state = {"winner": None, "blob": b"", "first_try": False,
+                 "done": 0, "errors": []}
+
+        def arm(tag: str) -> None:
+            try:
+                blob, first_try = self._issue(
+                    lambda: self.provider.get(key), key=key, cancelled=cancel)
+            except BaseException as e:  # noqa: BLE001 - relayed to waiter
+                with cond:
+                    state["done"] += 1
+                    state["errors"].append(e)
+                    cond.notify_all()
+                return
+            with cond:
+                state["done"] += 1
+                if state["winner"] is None:
+                    state["winner"] = tag
+                    state["blob"] = blob
+                    state["first_try"] = first_try
+                cond.notify_all()
+            cancel.set()  # first responder wins: stop the other arm
+
+        threading.Thread(target=arm, args=("primary",), daemon=True,
+                         name="fetch-hedge-primary").start()
+        arms = 1
+        with cond:
+            cond.wait_for(lambda: state["done"] >= 1, timeout=deadline)
+            straggling = state["done"] == 0
+        if straggling:
+            with self._lock:
+                self.stats["hedges"] += 1
+                self.stats["stragglers"] += 1
+                self._op_seq += 1
+                seq = self._op_seq
+            # record the straggler with the detector (patience=1: the
+            # fired hedge IS the mitigation); the elapsed time is clamped
+            # above the flag threshold so the floor can't hide it
+            self.detector.observe(
+                seq, max(deadline, self.detector.threshold * base * 1.01))
+            arms = 2
+            threading.Thread(target=arm, args=("hedge",), daemon=True,
+                             name="fetch-hedge-dup").start()
+        with cond:
+            cond.wait_for(lambda: state["winner"] is not None
+                          or state["done"] >= arms)
+        if state["winner"] is None:
+            raise state["errors"][0]
+        if state["winner"] == "hedge":
+            with self._lock:
+                self.stats["hedge_wins"] += 1
+        return state["blob"], bool(arms == 1 and state["first_try"])
 
     def cancel_pending(self, owner: object = None) -> int:
         """Cancel queued-but-not-started prefetches; running fetches

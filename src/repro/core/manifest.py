@@ -139,7 +139,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Union
 import numpy as np
 
 from .chunks import ChunkStats
-from .storage import StorageError, StorageProvider
+from .storage import StorageError, StorageProvider, retry_transient
 
 MANIFEST_KEY = "manifest.json"
 SEGMENT_PREFIX = "manifests/"
@@ -375,7 +375,8 @@ class Manifest:
             if self.storage.cas(MANIFEST_KEY, raw, expected):
                 self._apply_pointer(new_pointer, raw)
                 return
-            expected = self.storage.get(MANIFEST_KEY)  # lost: reload, retry
+            expected = retry_transient(  # lost: reload (transients retried)
+                lambda: self.storage.get(MANIFEST_KEY), what=MANIFEST_KEY)
             pointer = json.loads(expected.decode())
         raise ManifestConflict(
             f"manifest pointer update ({what}) lost the CAS race "

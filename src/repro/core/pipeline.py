@@ -119,9 +119,18 @@ class _PrefetchWindow:
         self._next = 0                      # first step not yet queued
         self._released = [False] * len(plan)
         self.outstanding = 0
+        #: prefetches that failed permanently (retry budget exhausted);
+        #: the consumer's direct fetch covers them, but the count must be
+        #: visible — a hostile store should never fail silently
+        self.failed = 0
         # the loader's worker pool drives top_up/release concurrently;
         # pointer + byte accounting must move atomically
         self._lock = threading.Lock()
+
+    def _note_result(self, fut) -> None:
+        if not fut.cancelled() and fut.exception() is not None:
+            with self._lock:
+                self.failed += 1
 
     def top_up(self, upto_step: int) -> None:
         """Queue prefetches for steps ``[next, upto_step]`` while the byte
@@ -143,8 +152,9 @@ class _PrefetchWindow:
                 self.outstanding += nb
                 self._next += 1
             for key, _est in self.plan[step]:
-                self.engine.prefetch(key, owner=self.owner,
-                                     on_fetched=self.on_fetched)
+                fut = self.engine.prefetch(key, owner=self.owner,
+                                           on_fetched=self.on_fetched)
+                fut.add_done_callback(self._note_result)
 
     def release(self, step: int) -> None:
         """Step ``step`` was consumed: return its bytes to the budget (a
@@ -180,6 +190,13 @@ class ScanPipeline:
     Prefetch is active only against cost-bearing (remote) providers with
     coalescing enabled — on local/memory storage prefetch threads cost
     more than they save; scheduling and streaming still apply.
+
+    **Failure semantics.**  The pipeline survives a hostile store with
+    byte-identical results: the engine retries transient faults and hedges
+    stragglers; a prefetch that exhausts its retry budget is counted
+    (:attr:`prefetch_failures`) and the consuming read falls back to a
+    direct fetch with a fresh budget.  Only a *permanent* failure of that
+    direct fetch propagates to the consumer.
     """
 
     def __init__(self, view, tensors: Sequence[str], *,
@@ -330,6 +347,12 @@ class ScanPipeline:
         if self._window is not None:
             self._window.release(unit_index)
             self._window.top_up(unit_index + self._horizon)
+
+    @property
+    def prefetch_failures(self) -> int:
+        """Prefetches that failed permanently (consumers fell back to
+        direct fetches); 0 when prefetch is inactive."""
+        return self._window.failed if self._window is not None else 0
 
     # -------------------------------------------------------------- teardown
     def close(self) -> int:

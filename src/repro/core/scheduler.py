@@ -76,7 +76,15 @@ class CostModel:
         with self._lock:
             self.counters[name] = self.counters.get(name, 0) + int(n)
 
-    def observe(self, klass: str, io_s: float, cpu_s: float) -> None:
+    def observe(self, klass: str, io_s: float, cpu_s: float,
+                clean: bool = True) -> None:
+        """Fold one timing into the EWMA.  ``clean=False`` marks a timing
+        polluted by injected faults / retries / hedges: it is counted
+        (``tainted_<klass>``) but NEVER folded, so one straggler cannot
+        distort the estimates that size fetch units and prefetch depth."""
+        if not clean:
+            self.note(f"tainted_{klass}")
+            return
         with self._lock:
             for table, v in ((self._io, io_s), (self._cpu, cpu_s)):
                 old = table.get(klass)

@@ -28,15 +28,53 @@ committers race on the pointer and exactly one wins — losers reload and
 retry or surface a conflict.
 
 Keys are '/'-separated strings (object-store semantics, no directories).
+
+Failure model
+-------------
+
+Real object stores time out, throttle (503 SlowDown), straggle, and tear
+reads; the contract below is what every consumer of this module may assume:
+
+* **Error taxonomy.**  :class:`StorageError` (a ``KeyError``) means the key
+  is missing or the operation permanently failed.  :class:`TransientStorageError`
+  — deliberately *not* a ``StorageError`` subclass — means the request failed
+  but a retry may succeed (timeout, 5xx, short read); ``except StorageError``
+  handlers therefore can never mistake a throttled request for a missing key.
+  :class:`RetryExhausted` *is* a ``StorageError``: it is raised once the retry
+  budget is spent, at which point the failure is permanent for the caller.
+* **Retry semantics.**  Data-plane reads routed through
+  :class:`~repro.core.fetch.FetchEngine` retry transients with capped
+  exponential backoff + jitter (see ``RetryPolicy``); control-plane reads
+  (manifest pointer, version-control state) go through
+  :func:`retry_transient` / :meth:`StorageProvider.get_or_none`.  Prefetches
+  additionally *hedge*: a request straggling past a multiple of the latency
+  EWMA gets a duplicate request, first responder wins.
+* **Fault injection.**  :class:`SimulatedS3Provider` takes an optional
+  seeded :class:`FaultPolicy` that injects timeouts / 5xx transients /
+  stragglers / torn reads on data-plane reads (``get``/``get_range``/
+  ``get_ranges``).  Writes and metadata probes (``put``/``cas``/``exists``/
+  ``num_bytes``/``list_keys``) are never faulted — idempotent retry of those
+  is assumed to live in the (real) SDK layer.  Injected faults charge
+  realistic latency and are capped per key (``max_consecutive_per_key``) so
+  a bounded retry budget always converges; every fault is counted in
+  ``stats["faults_*"]``.
 """
 
 from __future__ import annotations
 
+import hashlib
 import os
+import random
 import threading
 import time
+from dataclasses import dataclass
 from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
+
+try:  # POSIX-only; LocalProvider.cas falls back to a process lock without it
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX platforms
+    fcntl = None  # type: ignore[assignment]
 
 Range = Tuple[int, int]
 
@@ -85,6 +123,62 @@ def slice_spans(ranges: Sequence[Range], spans: Sequence[Range],
 
 class StorageError(KeyError):
     """Raised when a key is missing or a provider operation fails."""
+
+
+class TransientStorageError(Exception):
+    """A request failed in a way a retry may fix (timeout, 5xx, short read).
+
+    Deliberately NOT a :class:`StorageError` subclass: ``except
+    StorageError`` handlers (``get_or_none`` and friends) must never treat
+    a throttled or timed-out request as a missing key.
+    """
+
+
+class StorageTimeout(TransientStorageError):
+    """The request exceeded its deadline (connect or read timeout)."""
+
+
+class TornReadError(TransientStorageError):
+    """The payload came back shorter than the object/range length claimed
+    (interrupted transfer); detected client-side, always retriable."""
+
+
+class RetryExhausted(StorageError):
+    """Transient faults persisted past the retry budget — permanent for the
+    caller.  A :class:`StorageError` on purpose: exhaustion is surfaced, not
+    retried again."""
+
+
+#: module-level jitter source for backoff sleeps; retry *correctness* never
+#: depends on it, so a shared unseeded stream is fine
+_backoff_rng = random.Random(0x5EED)
+
+
+def retry_transient(fn: Callable[[], "bytes"], *, attempts: int = 4,
+                    base_s: float = 0.01, cap_s: float = 0.25,
+                    jitter: float = 0.5, what: str = ""):
+    """Call ``fn()``, retrying :class:`TransientStorageError` with capped
+    exponential backoff + jitter.  Permanent errors propagate untouched;
+    exhaustion raises :class:`RetryExhausted` chained on the last transient.
+
+    This is the control-plane retry helper (manifest pointer, VC state);
+    the data plane retries inside :class:`~repro.core.fetch.FetchEngine`
+    where attempts also feed the engine's stats counters.
+    """
+    delay = base_s
+    last: Optional[TransientStorageError] = None
+    for i in range(max(1, attempts)):
+        try:
+            return fn()
+        except TransientStorageError as e:
+            last = e
+            if i + 1 >= max(1, attempts):
+                break
+            time.sleep(delay * (1.0 + jitter * _backoff_rng.random()))
+            delay = min(delay * 2.0, cap_s)
+    raise RetryExhausted(
+        f"storage retries exhausted after {max(1, attempts)} attempts"
+        f"{': ' + what if what else ''}") from last
 
 
 class StorageProvider:
@@ -156,8 +250,13 @@ class StorageProvider:
 
     # -- convenience -------------------------------------------------------
     def get_or_none(self, key: str) -> Optional[bytes]:
+        """``get`` that maps a *missing key* to None.  Transient faults are
+        retried, and exhaustion raises — a flaky store must never read as
+        an empty one (that is how control-plane state silently vanishes)."""
         try:
-            return self.get(key)
+            return retry_transient(lambda: self.get(key), what=key)
+        except RetryExhausted:
+            raise
         except StorageError:
             return None
 
@@ -226,13 +325,23 @@ class MemoryProvider(StorageProvider):
 
 
 class LocalProvider(StorageProvider):
-    """POSIX filesystem provider. Keys map to paths under ``root``."""
+    """POSIX filesystem provider. Keys map to paths under ``root``.
+
+    :meth:`cas` serializes committers across *processes* with an
+    ``fcntl.flock`` on a per-key sidecar lockfile under ``.cas-locks/``
+    (a reserved prefix, hidden from :meth:`list_keys`); flock also contends
+    between distinct opens within one process, so in-process threads
+    serialize through the same lock.  Platforms without ``fcntl`` fall back
+    to a process-local lock (the pre-flock behavior).
+    """
 
     kind = "local"
 
-    #: serializes read-compare-replace in :meth:`cas` within this process
-    #: (cross-process writers on POSIX would need an flock; out of scope)
-    _cas_lock = threading.Lock()
+    #: reserved sidecar directory for cas lockfiles (never listed as keys)
+    _LOCK_DIR = ".cas-locks"
+
+    #: fallback when fcntl is unavailable: process-local serialization only
+    _cas_fallback_lock = threading.Lock()
 
     def __init__(self, root: str) -> None:
         self.root = os.path.abspath(root)
@@ -283,17 +392,34 @@ class LocalProvider(StorageProvider):
             f.write(data)
         os.replace(tmp, path)  # atomic on POSIX
 
+    def _lockfile(self, key: str) -> str:
+        lock_dir = os.path.join(self.root, self._LOCK_DIR)
+        os.makedirs(lock_dir, exist_ok=True)
+        digest = hashlib.sha1(key.encode("utf-8")).hexdigest()
+        return os.path.join(lock_dir, digest + ".lock")
+
+    def _cas_under_lock(self, key: str, data: bytes,
+                        expected: Optional[bytes]) -> bool:
+        try:
+            with open(self._path(key), "rb") as f:
+                current: Optional[bytes] = f.read()
+        except FileNotFoundError:
+            current = None
+        if current != expected:
+            return False
+        self.put(key, data)
+        return True
+
     def cas(self, key: str, data: bytes, expected: Optional[bytes]) -> bool:
-        with self._cas_lock:
+        if fcntl is None:  # pragma: no cover - non-POSIX platforms
+            with self._cas_fallback_lock:
+                return self._cas_under_lock(key, data, expected)
+        with open(self._lockfile(key), "ab") as lf:
+            fcntl.flock(lf.fileno(), fcntl.LOCK_EX)
             try:
-                with open(self._path(key), "rb") as f:
-                    current: Optional[bytes] = f.read()
-            except FileNotFoundError:
-                current = None
-            if current != expected:
-                return False
-            self.put(key, data)
-            return True
+                return self._cas_under_lock(key, data, expected)
+            finally:
+                fcntl.flock(lf.fileno(), fcntl.LOCK_UN)
 
     def delete(self, key: str) -> None:
         try:
@@ -310,6 +436,8 @@ class LocalProvider(StorageProvider):
             for name in filenames:
                 rel = os.path.relpath(os.path.join(dirpath, name), self.root)
                 rel = rel.replace(os.sep, "/")
+                if rel.startswith(self._LOCK_DIR + "/"):
+                    continue  # cas lockfile sidecars are not objects
                 if rel.startswith(prefix):
                     keys.append(rel)
         return sorted(keys)
@@ -319,6 +447,78 @@ class LocalProvider(StorageProvider):
             return os.path.getsize(self._path(key))
         except FileNotFoundError:
             raise StorageError(key) from None
+
+
+@dataclass
+class FaultPolicy:
+    """Seeded, deterministic fault injection for :class:`SimulatedS3Provider`.
+
+    Each data-plane read (one ``get``/``get_range`` call, or one physical
+    span inside ``get_ranges``) draws once from a seeded stream; at most one
+    fault is injected per draw, picked by cumulative rate:
+
+    * ``timeout``  — request aborts after ``timeout_factor ×`` latency
+      (:class:`StorageTimeout`);
+    * ``5xx``      — throttle/SlowDown after one latency round-trip
+      (:class:`TransientStorageError`);
+    * ``torn``     — transfer truncates; the client detects the short
+      payload and raises :class:`TornReadError` after one round-trip;
+    * ``straggle`` — the request *succeeds* but is charged
+      ``straggle_factor ×`` latency in simulated time and stalls
+      ``straggle_sleep_s`` real seconds (drives hedging even at
+      ``time_scale=0``).
+
+    Hard faults (timeout/5xx/torn) are capped at ``max_consecutive_per_key``
+    in a row for any one key — mirroring real stores, where per-key
+    brown-outs are short — so any retry budget of more than
+    ``max_consecutive_per_key`` attempts deterministically converges.
+
+    Determinism: one provider, one stream.  A single-threaded op sequence
+    replays exactly under the same seed; multi-threaded request order may
+    permute which op draws which fault, but results must be byte-identical
+    regardless (the chaos bench's parity gate).
+    """
+
+    seed: int = 0
+    timeout_rate: float = 0.0
+    error_rate: float = 0.0      # 5xx / throttle
+    straggle_rate: float = 0.0
+    torn_rate: float = 0.0
+    timeout_factor: float = 10.0   # sim latency multiple burned by a timeout
+    straggle_factor: float = 8.0   # sim latency multiple charged by a straggle
+    straggle_sleep_s: float = 0.0  # REAL stall of a straggling request
+    max_consecutive_per_key: int = 2
+
+    def __post_init__(self) -> None:
+        self._rng = random.Random(self.seed)
+        self._streak: Dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    def draw(self, key: str) -> Optional[str]:
+        """Fault kind for the next read of ``key`` (None = healthy)."""
+        with self._lock:
+            u = self._rng.random()
+            kind: Optional[str] = None
+            edge = self.timeout_rate
+            if u < edge:
+                kind = "timeout"
+            elif u < (edge := edge + self.error_rate):
+                kind = "5xx"
+            elif u < (edge := edge + self.torn_rate):
+                kind = "torn"
+            elif u < edge + self.straggle_rate:
+                kind = "straggle"
+            hard = kind in ("timeout", "5xx", "torn")
+            if hard:
+                streak = self._streak.get(key, 0)
+                if streak >= self.max_consecutive_per_key:
+                    kind = None  # liveness cap: this key has suffered enough
+                    hard = False
+                else:
+                    self._streak[key] = streak + 1
+            if not hard:
+                self._streak.pop(key, None)
+            return kind
 
 
 class SimulatedS3Provider(StorageProvider):
@@ -349,11 +549,13 @@ class SimulatedS3Provider(StorageProvider):
         max_connections: int = 64,
         time_scale: float = 1.0,
         clock: Optional[Callable[[], float]] = None,
+        fault_policy: Optional[FaultPolicy] = None,
     ) -> None:
         self.base = base if base is not None else MemoryProvider()
         self.latency_s = float(latency_s)
         self.bandwidth_bps = float(bandwidth_bps)
         self.time_scale = float(time_scale)
+        self.fault_policy = fault_policy
         self._sem = threading.BoundedSemaphore(max_connections)
         self._lock = threading.Lock()
         self._clock = clock or time.monotonic
@@ -367,17 +569,50 @@ class SimulatedS3Provider(StorageProvider):
             "bytes_down": 0,
             "bytes_up": 0,
             "sim_seconds": 0.0,
+            "faults_injected": 0,     # total injected faults (all kinds)
+            "faults_timeout": 0,
+            "faults_5xx": 0,
+            "faults_straggle": 0,
+            "faults_torn": 0,
         }
 
     # -- cost model --------------------------------------------------------
-    def _charge(self, nbytes: int, *, upload: bool = False) -> None:
-        sim = self.latency_s + nbytes / self.bandwidth_bps
+    def _charge(self, nbytes: int, *, upload: bool = False,
+                extra_sim: float = 0.0) -> None:
+        sim = self.latency_s + nbytes / self.bandwidth_bps + extra_sim
         with self._lock:
             self.stats["requests"] += 1
             self.stats["bytes_up" if upload else "bytes_down"] += nbytes
             self.stats["sim_seconds"] += sim
         if self.time_scale > 0:
             time.sleep(sim * self.time_scale)
+
+    def _maybe_fault(self, key: str) -> float:
+        """Fault-injection gate ahead of one data-plane read.  Returns
+        extra simulated seconds to charge (straggle); raises the typed
+        transient on hard faults, after charging the wasted round-trip."""
+        fp = self.fault_policy
+        if fp is None:
+            return 0.0
+        kind = fp.draw(key)
+        if kind is None:
+            return 0.0
+        with self._lock:
+            self.stats["faults_injected"] += 1
+            self.stats["faults_" + kind] += 1
+        if kind == "straggle":
+            if fp.straggle_sleep_s > 0:
+                time.sleep(fp.straggle_sleep_s)
+            return self.latency_s * max(0.0, fp.straggle_factor - 1.0)
+        # hard fault: the aborted round-trip is still a charged request
+        wasted = self.latency_s * (fp.timeout_factor if kind == "timeout"
+                                   else 1.0)
+        self._charge(0, extra_sim=wasted - self.latency_s)
+        if kind == "timeout":
+            raise StorageTimeout(f"injected timeout reading {key!r}")
+        if kind == "torn":
+            raise TornReadError(f"injected short read of {key!r}")
+        raise TransientStorageError(f"injected 503 SlowDown for {key!r}")
 
     def reset_stats(self) -> None:
         with self._lock:
@@ -387,14 +622,16 @@ class SimulatedS3Provider(StorageProvider):
     # -- protocol ----------------------------------------------------------
     def get(self, key: str) -> bytes:
         with self._sem:
+            extra = self._maybe_fault(key)
             data = self.base.get(key)
-            self._charge(len(data))
+            self._charge(len(data), extra_sim=extra)
             return data
 
     def get_range(self, key: str, start: int, end: int) -> bytes:
         with self._sem:
+            extra = self._maybe_fault(key)
             data = self.base.get_range(key, start, end)
-            self._charge(len(data))
+            self._charge(len(data), extra_sim=extra)
             with self._lock:
                 self.stats["ranged_requests"] += 1
             return data
@@ -415,8 +652,9 @@ class SimulatedS3Provider(StorageProvider):
         payloads: List[bytes] = []
         with self._sem:
             for s, e in spans:
+                extra = self._maybe_fault(key)  # per physical span
                 data = self.base.get_range(key, s, e)
-                self._charge(len(data))
+                self._charge(len(data), extra_sim=extra)
                 with self._lock:
                     self.stats["ranged_requests"] += 1
                     self.stats["coalesced_requests"] += 1

@@ -227,7 +227,7 @@ class Tensor:
                 size = self.vc.storage.num_bytes(key) if self.vc.storage.exists(key) else 0
                 if 0 < size < self.meta.min_chunk_size \
                         and size + incoming_bytes <= self.meta.max_chunk_size:
-                    raw = self.vc.storage.get(key)
+                    raw = self._engine().fetch_full(key)  # retries transients
                     header = chunklib.parse_header(raw)
                     b = self._fresh_builder()
                     for i in range(header.num_samples):
@@ -367,7 +367,7 @@ class Tensor:
                        payload: bytes, shape: Tuple[int, ...], flags: int) -> None:
         """Copy-on-write a sealed/persisted chunk with one sample replaced."""
         key = self.vc.resolve_chunk_key(self.name, chunk_name, self.node_id)
-        raw = self.vc.storage.get(key)
+        raw = self._engine().fetch_full(key)  # retries transients
         header = chunklib.parse_header(raw)
         b = self._fresh_builder()
         for i in range(header.num_samples):
@@ -457,7 +457,7 @@ class Tensor:
                                               counters=counters)[0]
             h = chunklib.parse_header(prefix)
         else:
-            h = chunklib.parse_header(self.vc.storage.get(key))
+            h = chunklib.parse_header(self._engine().fetch_full(key))
         self._header_cache[key] = h
         return h
 
@@ -479,8 +479,9 @@ class Tensor:
             ranged = self.vc.storage.kind in ("s3", "lru")
         header = self._header_of(key, ranged)
         s, e = header.byte_range(local)
-        payload = (self.vc.storage.get_range(key, s, e) if ranged
-                   else self.vc.storage.get(key)[s:e])
+        # both paths ride the engine: retry policy + request accounting
+        payload = (self._engine().fetch_ranges(key, [(s, e)])[0] if ranged
+                   else self._engine().fetch_full(key)[s:e])
         return payload, header.shapes[local], header.is_tiled(local)
 
     def read(self, idx: int, *, ranged: Optional[bool] = None) -> np.ndarray:

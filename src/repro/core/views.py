@@ -168,7 +168,11 @@ class DatasetView:
 
     @classmethod
     def load(cls, dataset, view_id: str) -> "DatasetView":
-        d = json.loads(dataset.storage.get(f"views/{view_id}.json").decode())
+        from .storage import retry_transient
+        raw = retry_transient(  # control-plane read: transients retried
+            lambda: dataset.storage.get(f"views/{view_id}.json"),
+            what=f"views/{view_id}.json")
+        d = json.loads(raw.decode())
         return cls(dataset, np.asarray(d["indices"], dtype=np.int64),
                    node_id=d["node"], tensors=d["tensors"])
 

@@ -1,12 +1,29 @@
-from .collectives import (collective_wire_bytes, make_quantized_allreduce,
-                          quantized_psum)
+"""Distributed-training utilities.
+
+``fault_tolerance`` is dependency-free and imported eagerly — the storage
+layer's :class:`~repro.core.fetch.FetchEngine` reuses its
+:class:`StragglerDetector` as the hedge trigger for prefetches, and must
+not drag jax into pure-I/O paths.  The jax-backed submodules
+(``collectives``, ``sharding``) load lazily on first attribute access.
+"""
+
 from .fault_tolerance import (FailureInjector, HostFailure, StragglerDetector,
                               run_resilient)
-from .sharding import (batch_specs, fit_spec, make_rules, make_shard_fn,
-                       pspec_for_specs, sharding_for_specs, spec_for)
+
+_COLLECTIVES = {"collective_wire_bytes", "make_quantized_allreduce",
+                "quantized_psum"}
+_SHARDING = {"batch_specs", "fit_spec", "make_rules", "make_shard_fn",
+             "pspec_for_specs", "sharding_for_specs", "spec_for"}
 
 __all__ = ["FailureInjector", "HostFailure", "StragglerDetector",
-           "batch_specs", "collective_wire_bytes", "fit_spec", "make_rules",
-           "make_quantized_allreduce", "make_shard_fn", "pspec_for_specs",
-           "quantized_psum", "run_resilient", "sharding_for_specs",
-           "spec_for"]
+           "run_resilient"] + sorted(_COLLECTIVES | _SHARDING)
+
+
+def __getattr__(name):
+    if name in _COLLECTIVES:
+        from . import collectives
+        return getattr(collectives, name)
+    if name in _SHARDING:
+        from . import sharding
+        return getattr(sharding, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

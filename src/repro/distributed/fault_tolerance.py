@@ -16,6 +16,7 @@
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -27,6 +28,13 @@ class HostFailure(RuntimeError):
 
 @dataclass
 class StragglerDetector:
+    """Also serves as the hedge trigger of the storage prefetch pool
+    (:class:`~repro.core.fetch.FetchEngine`): clean fetch wall times feed
+    the baseline, and a request outliving ``threshold ×`` baseline is a
+    straggler the engine duplicates.  ``observe`` is therefore thread-safe
+    — training drivers call it from one thread, the prefetch pool from
+    many."""
+
     threshold: float = 2.0
     alpha: float = 0.2
     patience: int = 3
@@ -35,25 +43,38 @@ class StragglerDetector:
     _strikes: int = 0
     flagged_steps: List[int] = field(default_factory=list)
     mitigations: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    @property
+    def baseline(self) -> Optional[float]:
+        """Current healthy-step EWMA (None until the first observation)."""
+        with self._lock:
+            return self._ewma
 
     def observe(self, step: int, seconds: float) -> bool:
         """Returns True when mitigation fired at this step."""
-        if self._ewma is None:
-            self._ewma = seconds
-            return False
-        slow = seconds > self.threshold * self._ewma
-        if slow:
-            self._strikes += 1
-            self.flagged_steps.append(step)
-        else:
-            self._strikes = 0
-            # only fold healthy steps into the baseline
-            self._ewma = (1 - self.alpha) * self._ewma + self.alpha * seconds
-        if self._strikes >= self.patience:
-            self.mitigations += 1
-            self._strikes = 0
+        with self._lock:
+            if self._ewma is None:
+                self._ewma = seconds
+                return False
+            slow = seconds > self.threshold * self._ewma
+            if slow:
+                self._strikes += 1
+                self.flagged_steps.append(step)
+            else:
+                self._strikes = 0
+                # only fold healthy steps into the baseline
+                self._ewma = ((1 - self.alpha) * self._ewma
+                              + self.alpha * seconds)
+            fire = self._strikes >= self.patience
+            if fire:
+                self.mitigations += 1
+                self._strikes = 0
+            ewma = self._ewma
+        if fire:
             if self.on_straggler:
-                self.on_straggler(step, seconds, self._ewma)
+                self.on_straggler(step, seconds, ewma)
             return True
         return False
 

@@ -1,0 +1,337 @@
+"""Hostile-storage hardening: fault injection, retry/hedged fetches, and
+the failure-visibility contract (ISSUE 6).
+
+Covers the satellite checklist: seeded determinism, retry-exhaustion
+raising ``StorageError``, hedge first-responder-wins consuming exactly one
+result, torn-read detection, stream parity under injected faults, the
+flock-based cross-process ``LocalProvider.cas``, and the EWMA taint
+exclusion.
+"""
+
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.core as dl
+import repro.core.fetch as fetchlib
+from repro.core.fetch import FetchEngine, RetryPolicy
+from repro.core.scheduler import CostModel
+from repro.core.storage import (FaultPolicy, MemoryProvider, RetryExhausted,
+                                SimulatedS3Provider, StorageError,
+                                StorageTimeout, TornReadError,
+                                TransientStorageError)
+
+
+def _faulty_s3(base=None, **rates):
+    fp = FaultPolicy(seed=rates.pop("seed", 7), **rates)
+    return SimulatedS3Provider(base or MemoryProvider(), time_scale=0,
+                               fault_policy=fp)
+
+
+# ------------------------------------------------------------ fault policy
+def _op_trace(provider, keys):
+    """Outcome per sequential read op: payload length or exception type."""
+    trace = []
+    for k in keys:
+        try:
+            trace.append(len(provider.get(k)))
+        except TransientStorageError as e:
+            trace.append(type(e).__name__)
+    return trace
+
+
+def test_fault_policy_seeded_determinism():
+    keys = [f"k{i % 4}" for i in range(200)]
+    traces, stats = [], []
+    for _ in range(2):
+        base = MemoryProvider()
+        for k in set(keys):
+            base.put(k, b"v" * 64)
+        s3 = _faulty_s3(base, seed=123, timeout_rate=0.1, error_rate=0.1,
+                        straggle_rate=0.1, torn_rate=0.1)
+        traces.append(_op_trace(s3, keys))
+        stats.append({k: v for k, v in s3.stats.items()
+                      if k.startswith("faults_")})
+    assert traces[0] == traces[1]
+    assert stats[0] == stats[1]
+    assert stats[0]["faults_injected"] > 0
+    # every fault kind appears and the kinds sum to the total
+    per_kind = [v for k, v in stats[0].items() if k != "faults_injected"]
+    assert all(v > 0 for v in per_kind)
+    assert sum(per_kind) == stats[0]["faults_injected"]
+
+
+def test_fault_policy_caps_consecutive_hard_faults_per_key():
+    s3 = _faulty_s3(seed=1, timeout_rate=1.0)  # every draw wants a timeout
+    s3.base.put("k", b"payload")
+    with pytest.raises(StorageTimeout):
+        s3.get("k")
+    with pytest.raises(StorageTimeout):
+        s3.get("k")
+    # liveness cap: the third consecutive read of the key must succeed
+    assert s3.get("k") == b"payload"
+    assert s3.stats["faults_timeout"] == 2
+
+
+def test_transient_error_is_not_a_missing_key():
+    assert not issubclass(TransientStorageError, StorageError)
+    assert not issubclass(TransientStorageError, KeyError)
+    assert issubclass(RetryExhausted, StorageError)
+    # get_or_none: missing key -> None, but transient faults are retried
+    s3 = _faulty_s3(seed=2, error_rate=1.0)
+    assert s3.get_or_none("absent") is None
+    s3.base.put("k", b"v")
+    assert s3.get_or_none("k") == b"v"  # 2 faults, then the cap clears it
+
+
+def test_torn_read_detected_and_retried():
+    s3 = _faulty_s3(seed=3, torn_rate=1.0)
+    s3.base.put("k", b"x" * 256)
+    with pytest.raises(TornReadError):
+        s3.get("k")  # provider surfaces the short read as typed transient
+    s3_fresh = _faulty_s3(seed=3, torn_rate=1.0)
+    s3_fresh.base.put("k", b"x" * 256)
+    eng = FetchEngine(s3_fresh)
+    assert eng.fetch_full("k") == b"x" * 256  # retried through the tears
+    assert eng.stats["errors_transient"] == 2
+    assert s3_fresh.stats["faults_torn"] == 2
+
+
+# ------------------------------------------------------------ engine retry
+def test_retry_exhaustion_raises_storage_error():
+    # cap above the attempt budget: faults never stop -> exhaustion
+    fp = FaultPolicy(seed=4, error_rate=1.0, max_consecutive_per_key=99)
+    s3 = SimulatedS3Provider(MemoryProvider(), time_scale=0, fault_policy=fp)
+    s3.base.put("k", b"v")
+    eng = FetchEngine(s3, retry=RetryPolicy(max_attempts=3,
+                                            backoff_base_s=0.001))
+    with pytest.raises(StorageError) as exc_info:
+        eng.fetch_full("k")
+    assert isinstance(exc_info.value, RetryExhausted)
+    assert eng.stats["errors_transient"] == 3
+    assert eng.stats["retries"] == 2
+    assert eng.stats["errors_permanent"] == 1
+    # the root cause rides the exception chain
+    assert isinstance(exc_info.value.__cause__, TransientStorageError)
+
+
+def test_ranged_reads_retry_transients():
+    s3 = _faulty_s3(seed=5, error_rate=1.0)
+    s3.base.put("k", bytes(range(200)))
+    eng = FetchEngine(s3)
+    out = eng.fetch_ranges("k", [(10, 20), (150, 160)])
+    assert out[0] == bytes(range(10, 20))
+    assert out[1] == bytes(range(150, 160))
+    assert eng.stats["errors_transient"] > 0
+
+
+def test_nonstorage_exception_in_prefetch_reraises():
+    """A decode bug (non-storage exception) must re-raise to the reader —
+    never masquerade as a cache miss."""
+    gate = threading.Event()
+
+    class BuggyProvider(MemoryProvider):
+        def get(self, key):
+            gate.wait(timeout=5)
+            raise ValueError("decode bug, not a storage problem")
+
+    provider = BuggyProvider()   # strong ref: the engine only holds a weakref
+    eng = FetchEngine(provider)
+    fut = eng.prefetch("k")
+    threading.Timer(0.05, gate.set).start()
+    with pytest.raises(ValueError):
+        eng.wait_inflight("k")      # blocked in flight, then the bug lands
+    with pytest.raises(ValueError):
+        fut.result(timeout=5)
+    time.sleep(0.1)                 # let the done-callback run
+    assert eng.stats["prefetch_failures"] == 1
+    assert eng.stats["inflight_fallbacks"] == 0  # bugs are not fallbacks
+
+
+def test_exhausted_prefetch_falls_back_counted():
+    """A prefetch that burns its retry budget resolves to None for racing
+    readers (they fall back to direct I/O) and is visibly counted."""
+    gate = threading.Event()
+
+    class FaultyProvider(MemoryProvider):
+        def get(self, key):
+            gate.wait(timeout=5)
+            raise TransientStorageError("injected throttle")
+
+    provider = FaultyProvider()  # strong ref: the engine only holds a weakref
+    eng = FetchEngine(provider,
+                      retry=RetryPolicy(max_attempts=2,
+                                        backoff_base_s=0.001))
+    fut = eng.prefetch("k")
+    threading.Timer(0.05, gate.set).start()
+    assert eng.wait_inflight("k") is None   # RetryExhausted -> fallback
+    assert eng.stats["inflight_fallbacks"] == 1
+    with pytest.raises(StorageError):
+        fut.result(timeout=5)
+    time.sleep(0.1)
+    assert eng.stats["prefetch_failures"] == 1
+    assert eng.stats["errors_permanent"] == 1
+
+
+# ---------------------------------------------------------------- hedging
+class _StragglerOnce(MemoryProvider):
+    """First get of ``slow_key`` blocks until released; later gets fast."""
+
+    def __init__(self, slow_key):
+        super().__init__()
+        self.slow_key = slow_key
+        self.release = threading.Event()
+        self.calls = []
+        self._call_lock = threading.Lock()
+
+    def get(self, key):
+        with self._call_lock:
+            self.calls.append(key)
+            nth = self.calls.count(key)
+        if key == self.slow_key and nth == 1:
+            self.release.wait(timeout=10)
+        return super().get(key)
+
+
+def test_hedge_first_responder_wins_consumes_one_result():
+    p = _StragglerOnce("slow")
+    p.put("slow", b"S" * 100)
+    p.put("fast", b"F" * 100)
+    eng = FetchEngine(p, retry=RetryPolicy(hedge_multiplier=2.0,
+                                           hedge_min_s=0.05))
+    # establish a clean-wall baseline so hedging is armed
+    eng.prefetch("fast").result(timeout=5)
+    assert eng.detector.baseline is not None
+    fut = eng.prefetch("slow")
+    blob = fut.result(timeout=10)   # hedge fires at ~50ms and wins
+    assert blob == b"S" * 100
+    assert eng.stats["hedges"] == 1
+    assert eng.stats["hedge_wins"] == 1
+    assert eng.stats["stragglers"] == 1
+    assert eng.detector.mitigations >= 1  # the detector saw the straggler
+    p.release.set()                 # unblock the losing primary
+    time.sleep(0.1)
+    # exactly one result was consumed: the resident blob is the winner's,
+    # and exactly two physical requests went out (primary + hedge)
+    assert eng.resident("slow") == b"S" * 100
+    assert p.calls.count("slow") == 2
+
+
+def test_no_hedge_without_baseline():
+    p = _StragglerOnce("slow")
+    p.put("slow", b"S")
+    eng = FetchEngine(p, retry=RetryPolicy(hedge_min_s=0.05))
+    fut = eng.prefetch("slow")      # no baseline yet -> no hedge ever
+    time.sleep(0.2)
+    assert not fut.done()
+    assert eng.stats["hedges"] == 0
+    p.release.set()
+    assert fut.result(timeout=5) == b"S"
+
+
+# ------------------------------------------------------------- EWMA taint
+def test_fault_timings_excluded_from_latency_ewma():
+    eng = FetchEngine(MemoryProvider())   # unseeded: EWMA-learned
+    assert not eng.est.seeded
+    lat0, bw0 = eng.est.latency_s, eng.est.bandwidth_bps
+    eng._observe(1, 0, 1 << 20, 5.0, clean=False)  # a straggling request
+    assert eng.est.latency_s == lat0      # tainted: never folded
+    assert eng.est.bandwidth_bps == bw0
+    eng._observe(1, 0, 1 << 20, 5.0, clean=True)
+    assert eng.est.latency_s != lat0      # clean: folded
+
+
+def test_cost_model_taint_counter():
+    cm = CostModel()
+    cm.observe("unit", 0.010, 0.001)
+    io0, cpu0 = cm.estimate("unit")
+    cm.observe("unit", 9.0, 9.0, clean=False)
+    assert cm.estimate("unit") == (io0, cpu0)
+    assert cm.counters["tainted_unit"] == 1
+
+
+# ------------------------------------------------------------ stream parity
+def _clustered_dataset(base):
+    ds = dl.Dataset(base)
+    ds.create_tensor("val", dtype="float32", min_chunk_size=1 << 11,
+                     max_chunk_size=1 << 12)
+    ds.create_tensor("lab", htype="class_label")
+    rng = np.random.default_rng(11)
+    for band in range(8):
+        lo = band * 100.0
+        vals = rng.uniform(lo, lo + 90.0, size=100).astype(np.float32)
+        for i, v in enumerate(vals):
+            ds.append({"val": v, "lab": np.int64(band * 100 + i)})
+    ds.commit("chaos fixture")
+    return ds
+
+
+def _run_query_and_stream(storage):
+    ds = dl.Dataset(storage)
+    view = ds.query("SELECT * FROM dataset WHERE MIN(val) > 580",
+                    engine="numpy")
+    idx = view.indices.tolist()
+    loader = ds.dataloader(batch_size=32, shuffle=False, num_workers=2,
+                           seed=0)
+    labs, vals = [], []
+    for batch in loader:
+        labs.extend(int(v) for v in batch["lab"])
+        vals.append(np.asarray(batch["val"]))
+    return idx, labs, np.concatenate(vals).tobytes()
+
+
+def test_stream_parity_under_injected_faults():
+    """The acceptance gate in miniature: same query + loader results,
+    byte-identical, with and without seeded faults."""
+    base = MemoryProvider()
+    _clustered_dataset(base)
+    clean = _run_query_and_stream(
+        SimulatedS3Provider(base, time_scale=0))
+    s3 = _faulty_s3(base, seed=20260807, timeout_rate=0.04, error_rate=0.04,
+                    straggle_rate=0.04, torn_rate=0.03)
+    faulted = _run_query_and_stream(s3)
+    assert clean[0] == faulted[0]          # identical selected rows
+    assert clean[1] == faulted[1]          # identical stream order
+    assert clean[2] == faulted[2]          # byte-identical payloads
+    assert s3.stats["faults_injected"] > 0
+    stats = fetchlib.engine_stats_for(s3)
+    assert stats["errors_transient"] > 0   # faults were absorbed, visibly
+
+
+# --------------------------------------------------------- cross-process cas
+def test_local_cas_serializes_across_processes(tmp_path):
+    """Two processes cas-increment one counter; every increment must land
+    (the old threading.Lock serialized only within one process)."""
+    import os
+    root = str(tmp_path / "store")
+    src = os.path.abspath(os.path.join(os.path.dirname(dl.__file__),
+                                       "..", ".."))
+    n_iters = 40
+    script = f"""
+from repro.core.storage import LocalProvider
+p = LocalProvider({root!r})
+for _ in range({n_iters}):
+    while True:
+        cur = p.get_or_none("counter")
+        new = str(int(cur or b"0") + 1).encode()
+        if p.cas("counter", new, cur):
+            break
+"""
+    env = dict(os.environ, PYTHONPATH=src)
+    procs = [subprocess.Popen([sys.executable, "-c", script], env=env)
+             for _ in range(2)]
+    for pr in procs:
+        assert pr.wait(timeout=120) == 0
+    p = dl.LocalProvider(root)
+    assert int(p.get("counter")) == 2 * n_iters
+
+
+def test_cas_lockfiles_hidden_from_list_keys(tmp_path):
+    p = dl.LocalProvider(str(tmp_path / "store"))
+    p.put("a", b"1")
+    assert p.cas("b", b"2", None)
+    assert p.list_keys() == ["a", "b"]
