@@ -20,10 +20,28 @@ The datapoint lands in ``BENCH_io.json`` under ``chaos_hostile_storage``
 with full provider + ``engine_*`` counter snapshots (retries, hedges,
 hedge_wins, errors_transient, ...), so retry/hedge behaviour is tracked
 across PRs next to the request counts.
+
+A second section exercises the **write plane** (ISSUE 7): N concurrent
+committers on a shared store with injected put/cas faults.  Its gates:
+
+* **zero lost appends** — every committer lands (or raises a typed
+  error; none may here), and each branch reads back byte-identical to a
+  serial clean-provider run of the same workload;
+* **visible write faults** — ``faults_put_*``/``faults_cas_5xx`` > 0 and
+  at least one commit rebased (contention actually happened);
+* **no stranded chunks** — after all commits, a GC mark pass finds zero
+  orphaned chunk-payload bytes (rebases graft uploads, never abandon
+  them);
+* **wasted uploads ≈ 0 under non-overlapping contention** — a clean
+  (fault-free) same-branch disjoint-tensor contention run re-publishes
+  metadata only: ``wasted_upload_bytes`` stays exactly 0.
+
+That datapoint lands under ``chaos_write_path``.
 """
 
 from __future__ import annotations
 
+import threading
 from typing import List, Tuple
 
 import numpy as np
@@ -44,6 +62,12 @@ AMPLIFICATION_BUDGET = 1.5
 
 FAULT_RATES = dict(timeout_rate=0.04, error_rate=0.04,
                    straggle_rate=0.05, torn_rate=0.03)
+
+WRITE_FAULT_RATES = dict(put_error_rate=0.08, put_torn_rate=0.06,
+                         cas_error_rate=0.06)
+
+#: concurrent committers in the write-chaos section (ISSUE 7 floor: >= 4)
+N_WRITERS = 4
 
 
 def _clustered_dataset(base: dl.StorageProvider, bands: int,
@@ -79,6 +103,73 @@ def _stream(storage: dl.StorageProvider) -> Tuple[list, list, bytes]:
         vals.append(np.asarray(batch["val"]))
     payload = np.concatenate(vals).tobytes() if vals else b""
     return idx, labs, payload
+
+
+def _writer_rows(i: int, commits: int, rows_each: int) -> List[List[np.ndarray]]:
+    """Deterministic per-writer workload: ``commits`` batches of
+    ``rows_each`` rows for writer ``i``."""
+    return [[np.full(32, i * 10_000 + c * 100 + r, np.float32)
+             for r in range(rows_each)]
+            for c in range(commits)]
+
+
+def _branch_fixture(storage: dl.StorageProvider, n: int) -> None:
+    """Serial setup: one tensor, one init commit, one branch per writer
+    (branch creation republishes the whole tree, so it stays serial)."""
+    ds = dl.Dataset(storage)
+    ds.create_tensor("t", dtype="float32", min_chunk_size=1 << 11,
+                     max_chunk_size=1 << 12)
+    ds.commit("init")
+    for i in range(n):
+        ds.checkout(f"w{i}", create=True)
+
+
+def _branch_payloads(storage: dl.StorageProvider, n: int) -> List[bytes]:
+    """Concatenated row bytes per branch, via fresh cold opens."""
+    out = []
+    for i in range(n):
+        r = dl.Dataset(storage)
+        r.checkout(f"w{i}")
+        t = r["t"]
+        out.append(b"".join(np.ascontiguousarray(t[j]).tobytes()
+                            for j in range(len(t))))
+    return out
+
+
+def _concurrent_commit_run(storage: dl.StorageProvider, commits: int,
+                           rows_each: int) -> Tuple[list, dict]:
+    """N_WRITERS threads, one branch each, barrier-released, appending and
+    committing against one shared provider.  Returns (errors, summed
+    commit_stats)."""
+    handles = []
+    for i in range(N_WRITERS):
+        h = dl.Dataset(storage)
+        h.checkout(f"w{i}")
+        handles.append(h)
+    barrier = threading.Barrier(N_WRITERS)
+    errors: list = []
+
+    def run(i: int, h: dl.Dataset) -> None:
+        try:
+            barrier.wait()
+            for batch in _writer_rows(i, commits, rows_each):
+                for arr in batch:
+                    h["t"].append(arr)
+                h.commit(f"writer {i}")
+        except Exception as e:  # noqa: BLE001 - surfaced by the gate
+            errors.append((i, repr(e)))
+
+    threads = [threading.Thread(target=run, args=(i, h))
+               for i, h in enumerate(handles)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    agg: dict = {}
+    for h in handles:
+        for k, v in h.vc.commit_stats.items():
+            agg[k] = agg.get(k, 0) + v
+    return errors, agg
 
 
 def main(smoke: bool = False) -> List[str]:
@@ -128,6 +219,83 @@ def main(smoke: bool = False) -> List[str]:
                  "smoke": int(smoke)},
     })
 
+    # ================= write plane: concurrent committers under chaos
+    commits_each, rows_each = (2, 6) if smoke else (3, 12)
+
+    # serial clean reference: same workload, one writer at a time
+    ref_store = dl.MemoryProvider()
+    _branch_fixture(ref_store, N_WRITERS)
+    for i in range(N_WRITERS):
+        h = dl.Dataset(ref_store)
+        h.checkout(f"w{i}")
+        for batch in _writer_rows(i, commits_each, rows_each):
+            for arr in batch:
+                h["t"].append(arr)
+            h.commit(f"writer {i}")
+    ref_payloads = _branch_payloads(ref_store, N_WRITERS)
+
+    # chaos run: shared faulted provider, N_WRITERS concurrent committers
+    wpolicy = dl.FaultPolicy(seed=SEED + 1, **WRITE_FAULT_RATES)
+    ws3 = dl.SimulatedS3Provider(dl.MemoryProvider(), time_scale=0,
+                                 fault_policy=wpolicy)
+    _branch_fixture(ws3, N_WRITERS)
+    with Timer() as t_write:
+        errors, cstats = _concurrent_commit_run(ws3, commits_each, rows_each)
+    wstats = io_report.provider_snapshot(ws3)
+
+    # ---- gates
+    assert not errors, f"committers failed under write chaos: {errors}"
+    chaos_payloads = _branch_payloads(ws3, N_WRITERS)
+    assert chaos_payloads == ref_payloads, \
+        "concurrent chaos run is not byte-identical to the serial run"
+    write_faults = (wstats["faults_put_5xx"] + wstats["faults_put_torn"]
+                    + wstats["faults_cas_5xx"])
+    assert write_faults > 0, "no write fault was injected"
+    assert wstats["put_requests"] > 0, "put_requests counter never charged"
+    assert cstats["rebases"] > 0, \
+        "no commit rebased — the run never actually contended"
+    gc_ds = dl.Dataset(ws3)
+    gc_rep = gc_ds.maintenance().gc_orphans(dry_run=True)
+    assert gc_rep.details["orphan_chunk_bytes"] == 0, (
+        f"{gc_rep.details['orphan_chunk_bytes']} chunk bytes stranded — "
+        f"a rebase abandoned uploads instead of grafting them")
+
+    # non-overlapping same-branch contention on a CLEAN provider: the
+    # loser relocates + grafts, so zero upload bytes are ever wasted
+    cs3 = dl.SimulatedS3Provider(dl.MemoryProvider(), time_scale=0)
+    ds0 = dl.Dataset(cs3)
+    for t in ("a", "b"):
+        ds0.create_tensor(t, dtype="float32", min_chunk_size=1 << 11,
+                          max_chunk_size=1 << 12)
+    ds0.commit("init")
+    wa, wb = dl.Dataset(cs3), dl.Dataset(cs3)
+    for i in range(rows_each):
+        wa["a"].append(np.full(32, i, np.float32))
+        wb["b"].append(np.full(32, 100 + i, np.float32))
+    wa.commit("writer a")
+    wb.commit("writer b")  # loses the CAS -> relocation + graft
+    assert wb.vc.commit_stats["relocations"] >= 1
+    assert wb.vc.commit_stats["grafted_chunks"] >= 1
+    assert cs3.stats["wasted_upload_bytes"] == 0, (
+        f"{cs3.stats['wasted_upload_bytes']} upload bytes wasted on "
+        f"non-overlapping contention (expected 0: graft, don't re-upload)")
+
+    io_report.record("chaos_write_path", {
+        "chaos": wstats,
+        "commit_stats": cstats,
+        "gate": {"writers": N_WRITERS,
+                 "commits_per_writer": commits_each,
+                 "rows_per_commit": rows_each,
+                 "parity_ok": 1,
+                 "write_faults": write_faults,
+                 "orphan_chunk_bytes": gc_rep.details["orphan_chunk_bytes"],
+                 "clean_contention_wasted_upload_bytes":
+                     cs3.stats["wasted_upload_bytes"],
+                 "clean_contention_grafted_chunks":
+                     wb.vc.commit_stats["grafted_chunks"],
+                 "smoke": int(smoke)},
+    })
+
     n = max(len(clean[1]), 1)
     return [
         row("chaos_clean_stream", t_clean.elapsed / n * 1e6,
@@ -139,6 +307,13 @@ def main(smoke: bool = False) -> List[str]:
             f"hedges{chaos_stats.get('engine_hedges', 0)}_"
             f"hedgewins{chaos_stats.get('engine_hedge_wins', 0)}_"
             f"amp{amplification:.2f}x"),
+        row("chaos_write_commits",
+            t_write.elapsed / max(cstats["commits"], 1) * 1e6,
+            f"writers{N_WRITERS}_commits{cstats['commits']}_"
+            f"rebases{cstats['rebases']}_"
+            f"relocations{cstats['relocations']}_"
+            f"grafts{cstats['grafted_chunks']}_"
+            f"wfaults{write_faults}"),
     ]
 
 

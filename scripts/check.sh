@@ -6,8 +6,11 @@
 # -> prune-parity, GC dry-run, compaction) + fig6 streaming smoke with a
 # stall-seconds budget (cross-unit prefetch must keep compute the
 # bottleneck) + chaos smoke (seeded storage faults: byte-identical stream
-# results, visible retry/hedge counters, request amplification <= 1.5x)
-# + BENCH_io.json validation + no-tracked-bytecode guard.
+# results, visible retry/hedge counters, request amplification <= 1.5x,
+# and the write plane: 4 concurrent committers under injected put/cas
+# faults with zero lost appends, byte-parity vs a serial run, zero
+# stranded chunk bytes, and wasted uploads == 0 on non-overlapping
+# contention) + BENCH_io.json validation + no-tracked-bytecode guard.
 # Usage: scripts/check.sh  (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -33,7 +36,7 @@ python -m benchmarks.bench_maintenance --smoke
 echo "== fig6 streaming smoke (stall-seconds budget) =="
 python -m benchmarks.bench_fig6_streaming_train --smoke
 
-echo "== chaos smoke (hostile-storage parity + amplification gate) =="
+echo "== chaos smoke (hostile-storage parity + amplification + write-chaos gates) =="
 python -m benchmarks.bench_chaos --smoke
 
 echo "== BENCH_io.json validation =="

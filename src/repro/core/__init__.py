@@ -13,20 +13,23 @@ from .manifest import Manifest, ManifestConflict
 from .storage import (FaultPolicy, LocalProvider, LRUCacheProvider,
                       MemoryProvider, RetryExhausted, SimulatedS3Provider,
                       StorageError, StorageProvider, StorageTimeout,
-                      TornReadError, TransientStorageError, chain,
-                      coalesce_ranges, retry_transient, storage_from_path)
+                      TornReadError, TornWriteError, TransientStorageError,
+                      chain, coalesce_ranges, retry_transient,
+                      storage_from_path)
 from .tensor import Tensor, TensorMeta
-from .version_control import VersionControl
+from .version_control import CommitContendedError, VersionControl
 from .views import DatasetView, TensorView
 
 __all__ = [
-    "ChunkBuilder", "ChunkEncoder", "Dataset", "DatasetView", "FaultPolicy",
+    "ChunkBuilder", "ChunkEncoder", "CommitContendedError", "Dataset",
+    "DatasetView", "FaultPolicy",
     "FetchEngine", "Group", "LRUCacheProvider", "LocalProvider",
     "MaintenanceReport", "MaintenanceRunner", "Manifest", "ManifestConflict",
     "MemoryProvider", "MergeConflict", "RetryExhausted", "RetryPolicy",
     "SimulatedS3Provider", "StorageError", "StorageProvider",
     "StorageTimeout", "Tensor", "TensorMeta", "TensorView", "TornReadError",
-    "TransientStorageError", "VersionControl", "available_codecs",
+    "TornWriteError", "TransientStorageError", "VersionControl",
+    "available_codecs",
     "available_htypes", "chain", "coalesce_ranges", "coalescing_disabled",
     "coalescing_enabled", "dataset", "empty_like", "engine_for", "get_codec",
     "get_htype", "parse_htype", "read_all_samples", "retry_transient",

@@ -64,8 +64,8 @@ class Dataset:
         m = manifestlib.Manifest.load(storage)
         if m is None and storage.get_or_none(DS_META_KEY) is None:
             # brand-new dataset: manifest-native from birth
-            storage.put(DS_META_KEY,
-                        json.dumps({"format": "deeplake-repro-v1"}).encode())
+            storage.put_verified(DS_META_KEY,
+                                 json.dumps({"format": "deeplake-repro-v1"}).encode())
             m = manifestlib.Manifest.create(storage)
         self.vc = VersionControl(storage, manifest=m)
         self._tensors: Dict[str, Tensor] = {}
@@ -213,8 +213,11 @@ class Dataset:
 
     # -------------------------------------------------------------- version control
     def commit(self, message: str = "") -> str:
-        self.flush()
-        sealed = self.vc.commit(message)
+        # flush is passed as a callback so the rebase-and-retry loop in
+        # VersionControl.commit can re-run it after relocating the head
+        # (a conflicting foreign commit can surface *during* flush, at the
+        # first put_state -> mark_stale fence).
+        sealed = self.vc.commit(message, flush=self.flush)
         self._tensors.clear()  # state moved to the new head
         return sealed
 

@@ -52,9 +52,21 @@ direct synchronous fetch — so cancellation is always safe, merely wasteful.
 jitter, and exhaustion raises :class:`~repro.core.storage.RetryExhausted`
 (a ``StorageError``) — counted in ``stats["errors_transient"]`` /
 ``stats["retries"]`` / ``stats["errors_permanent"]``.  Permanent errors
-propagate immediately.  Prefetches additionally *hedge*: clean fetch wall
-times feed a :class:`~repro.distributed.fault_tolerance.StragglerDetector`
-EWMA, and a prefetch outliving ``hedge_multiplier ×`` that baseline fires
+propagate immediately.  The retry budget is *adaptive*: an EWMA over
+attempt outcomes tracks the observed transient-fault rate, and the
+effective attempt count scales with it — one attempt fewer on a quiet
+store (rate ≤ 1%), two extra under heavy faults (rate ≥ 25%) — with the
+starting backoff stretched proportionally so a loaded store sees fewer,
+later retries.  Downward adaptation is clamped at the provider chain's
+``FaultPolicy.max_consecutive_per_key + 1`` so the deterministic
+convergence guarantee (any single logical fetch eventually succeeds)
+survives adaptation — though an explicitly configured budget below that
+cap is honored as-is; ``stats["adaptive_attempts"]`` exposes the current
+effective budget.  Prefetches AND blocking demand fetches
+(:meth:`fetch_full` / the coalesced path of :meth:`fetch_ranges`) *hedge*:
+clean fetch wall times feed a
+:class:`~repro.distributed.fault_tolerance.StragglerDetector`
+EWMA, and a fetch outliving ``hedge_multiplier ×`` that baseline fires
 a duplicate request — first responder wins, the loser's retries are
 cancelled, exactly one result is consumed (``stats["hedges"]`` /
 ``stats["hedge_wins"]`` / ``stats["stragglers"]``).  Readers racing an
@@ -135,6 +147,20 @@ def provider_cost_params(provider) -> Optional[Tuple[float, float]]:
     return None
 
 
+def fault_streak_cap(provider) -> int:
+    """Largest ``FaultPolicy.max_consecutive_per_key`` of any provider in
+    the chain (0 when no tier injects faults).  The adaptive retry budget
+    is floored at cap + 1 so a full fault streak can never exhaust it."""
+    cap = 0
+    p = provider
+    while isinstance(p, StorageProvider):
+        fp = getattr(p, "fault_policy", None)
+        if fp is not None:
+            cap = max(cap, int(getattr(fp, "max_consecutive_per_key", 0)))
+        p = getattr(p, "base", None)
+    return cap
+
+
 def cache_capacity_above(provider) -> int:
     """Bytes of LRU cache sitting *above* the first cost-bearing provider
     (0 when there is no such cache, or no cost-bearing tier at all)."""
@@ -207,12 +233,16 @@ class CostEstimator:
 class RetryPolicy:
     """Retry + hedging knobs for one :class:`FetchEngine`.
 
-    ``max_attempts`` bounds tries per physical request (first + retries);
-    backoff doubles from ``backoff_base_s`` up to ``backoff_cap_s``, with
-    up to ``jitter ×`` extra randomization per sleep.  A prefetch is
-    hedged (duplicated) once it outlives ``hedge_multiplier ×`` the
-    straggler detector's clean-fetch EWMA, floored at ``hedge_min_s`` so
-    micro-variance on fast stores can never trigger a duplicate;
+    ``max_attempts`` is the *baseline* try budget per physical request
+    (first + retries); the engine adapts the effective budget around it
+    from the observed transient-fault rate (see the module docstring),
+    never below the provider chain's fault-streak cap + 1.  Backoff
+    doubles from ``backoff_base_s`` (stretched by the observed fault
+    rate) up to ``backoff_cap_s``, with up to ``jitter ×`` extra
+    randomization per sleep.  A fetch — prefetch or blocking demand
+    read — is hedged (duplicated) once it outlives ``hedge_multiplier ×``
+    the straggler detector's clean-fetch EWMA, floored at ``hedge_min_s``
+    so micro-variance on fast stores can never trigger a duplicate;
     ``hedge_multiplier <= 0`` disables hedging outright.
     """
 
@@ -252,6 +282,11 @@ class FetchEngine:
         # mitigation (patience=1: every straggler hedges immediately)
         self.detector = StragglerDetector(
             threshold=max(self.retry.hedge_multiplier, 1.0), patience=1)
+        # adaptive retry budget: EWMA of per-attempt transient-fault
+        # outcomes; floor keeps the streak-cap convergence guarantee
+        self._fault_rate = 0.0
+        self._fault_alpha = 0.05
+        self._attempts_floor = fault_streak_cap(provider) + 1
         self._backoff_rng = random.Random(0xFE7C)
         self._op_seq = 0
         # two pools so a work task (which may block on a prefetch future)
@@ -271,7 +306,8 @@ class FetchEngine:
                       "retries": 0, "errors_transient": 0,
                       "errors_permanent": 0, "hedges": 0, "hedge_wins": 0,
                       "stragglers": 0, "prefetch_failures": 0,
-                      "inflight_fallbacks": 0}
+                      "inflight_fallbacks": 0,
+                      "adaptive_attempts": max(1, self.retry.max_attempts)}
 
     @property
     def provider(self) -> StorageProvider:
@@ -402,9 +438,36 @@ class FetchEngine:
             self.est.observe_request(nbytes // n_requests,
                                      seconds / n_requests)
 
+    def _note_attempt(self, faulted: bool) -> None:
+        """Fold one physical attempt outcome into the fault-rate EWMA
+        (lock held by callers via _issue)."""
+        a = self._fault_alpha
+        self._fault_rate = (1 - a) * self._fault_rate + a * (1.0 if faulted
+                                                             else 0.0)
+
+    def _adaptive_attempts(self) -> int:
+        """Effective attempt budget for the next physical request: one
+        fewer than ``max_attempts`` on a quiet store (observed transient
+        rate ≤ 1%), two extra under heavy faults (≥ 25%), the baseline in
+        between.  Downward adaptation never crosses the provider chain's
+        fault-streak cap + 1 (so the deterministic convergence guarantee
+        survives), but an explicitly configured budget *below* that cap is
+        honored as-is — adaptation only shrinks what the policy granted,
+        it never overrides it."""
+        base = max(1, self.retry.max_attempts)
+        rate = self._fault_rate
+        if rate <= 0.01:
+            att = max(2, base - 1)
+        elif rate >= 0.25:
+            att = base + 2
+        else:
+            att = base
+        return max(att, min(self._attempts_floor, base))
+
     def _issue(self, fn, key: str = "",
                cancelled: Optional[threading.Event] = None):
-        """Run one physical fetch closure under the retry policy.
+        """Run one physical fetch closure under the (adaptive) retry
+        policy.
 
         Transients retry with capped exponential backoff + jitter;
         exhaustion raises :class:`RetryExhausted` chained on the last
@@ -413,17 +476,24 @@ class FetchEngine:
         a retry happened, i.e. the caller's wall time is fault-polluted.
         """
         policy = self.retry
-        attempts = max(1, policy.max_attempts)
-        delay = policy.backoff_base_s
+        with self._lock:
+            attempts = self._adaptive_attempts()
+            self.stats["adaptive_attempts"] = attempts
+            # loaded store → start backoff later (fewer, gentler probes)
+            delay = policy.backoff_base_s * (1.0 + 4.0 * self._fault_rate)
         last: Optional[TransientStorageError] = None
         for i in range(attempts):
             if cancelled is not None and cancelled.is_set():
                 raise CancelledError()
             try:
-                return fn(), i == 0
+                out = fn()
+                with self._lock:
+                    self._note_attempt(False)
+                return out, i == 0
             except TransientStorageError as e:
                 last = e
                 with self._lock:
+                    self._note_attempt(True)
                     self.stats["errors_transient"] += 1
                     if i + 1 < attempts:
                         self.stats["retries"] += 1
@@ -492,7 +562,9 @@ class FetchEngine:
         if blob is not None:
             return blob
         t0 = time.perf_counter()
-        data, first_try = self._issue(lambda: self.provider.get(key), key=key)
+        # demand reads hedge too: a blocking consumer is exactly who a
+        # straggling request hurts most
+        data, first_try = self._hedged(lambda: self.provider.get(key), key)
         wall = time.perf_counter() - t0
         self._observe(1, 0, len(data), wall, clean=first_try)
         if first_try:
@@ -534,11 +606,13 @@ class FetchEngine:
         t0 = time.perf_counter()
         with self._lock:  # prefetched into an LRU tier above: still a hit
             self._mark_consumed(key)
-        payloads, first_try = self._issue(
-            lambda: self.provider.get_ranges(key, spans), key=key)
+        payloads, first_try = self._hedged(
+            lambda: self.provider.get_ranges(key, spans), key)
         nbytes = sum(len(p) for p in payloads)
-        self._observe(len(spans), len(ranges), nbytes,
-                      time.perf_counter() - t0, clean=first_try)
+        wall = time.perf_counter() - t0
+        self._observe(len(spans), len(ranges), nbytes, wall, clean=first_try)
+        if first_try:
+            self._note_clean_wall(wall / max(1, len(spans)))
         if counters is not None:
             counters["requests"] += len(spans)
             counters["bytes"] += nbytes
@@ -692,7 +766,11 @@ class FetchEngine:
 
     def _hedged_get(self, key: str) -> Tuple[bytes, bool]:
         """Whole-object GET with straggler hedging (the prefetch pool's
-        physical fetch).
+        physical fetch)."""
+        return self._hedged(lambda: self.provider.get(key), key)
+
+    def _hedged(self, fn, key: str):
+        """Run one physical fetch closure with straggler hedging.
 
         The primary request runs under the retry policy on its own thread;
         once it outlives ``hedge_multiplier ×`` the straggler detector's
@@ -700,23 +778,25 @@ class FetchEngine:
         request fires and the first responder wins — the loser's remaining
         retries are cancelled and its payload discarded, so exactly one
         result is consumed.  No hedge before a baseline exists (the first
-        fetch has nothing to straggle against).  Returns ``(blob, clean)``
-        where ``clean`` means first attempt, no hedge.
+        fetch has nothing to straggle against).  Used by prefetch AND the
+        blocking demand paths (:meth:`fetch_full`, the coalesced branch of
+        :meth:`fetch_ranges`) — ``fn`` must be re-runnable and
+        side-effect-free.  Returns ``(result, clean)`` where ``clean``
+        means first attempt, no hedge.
         """
         policy = self.retry
         base = self.detector.baseline
         if policy.hedge_multiplier <= 0 or base is None:
-            return self._issue(lambda: self.provider.get(key), key=key)
+            return self._issue(fn, key=key)
         deadline = max(policy.hedge_min_s, self.detector.threshold * base)
         cond = threading.Condition()
         cancel = threading.Event()
-        state = {"winner": None, "blob": b"", "first_try": False,
+        state = {"winner": None, "blob": None, "first_try": False,
                  "done": 0, "errors": []}
 
         def arm(tag: str) -> None:
             try:
-                blob, first_try = self._issue(
-                    lambda: self.provider.get(key), key=key, cancelled=cancel)
+                blob, first_try = self._issue(fn, key=key, cancelled=cancel)
             except BaseException as e:  # noqa: BLE001 - relayed to waiter
                 with cond:
                     state["done"] += 1

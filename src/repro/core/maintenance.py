@@ -259,18 +259,29 @@ class MaintenanceRunner:
             if key not in live_segments:
                 orphans.append(key)
         reclaimed = 0
+        orphan_chunks = 0
+        orphan_chunk_bytes = 0
         engine = fetch.engine_for(storage)
         for key in orphans:
             try:
-                reclaimed += storage.num_bytes(key)
+                nb = storage.num_bytes(key)
             except StorageError:
                 continue  # raced away already
+            reclaimed += nb
+            if _CHUNK_KEY_RE.match(key):
+                # chunk-payload orphans specifically: the write-chaos bench
+                # gates on these being ~0 after non-overlapping contention
+                # (rebase grafts uploaded chunks instead of abandoning them)
+                orphan_chunks += 1
+                orphan_chunk_bytes += nb
             if not dry_run:
                 storage.delete(key)
                 engine.discard(key)
         report.actions = orphans
         report.details.update(
             chunks_live=len(live_pairs), orphans=len(orphans),
+            orphan_chunks=orphan_chunks,
+            orphan_chunk_bytes=orphan_chunk_bytes,
             bytes_reclaimed=reclaimed if not dry_run else 0,
             bytes_reclaimable=reclaimed)
         return report

@@ -83,11 +83,37 @@ observed pointer bytes as ``expected``:
   snapshot, and the published nodes removed from ``stale``.  A lost CAS
   reloads the pointer; if another writer advanced *any* branch head in the
   meantime the commit raises :class:`ManifestConflict` — the paper's ACID
-  ingestion semantics (exactly one concurrent committer wins; losers
-  surface a conflict and may re-open and retry).
+  ingestion semantics (exactly one concurrent committer wins).
+  :meth:`VersionControl.commit <repro.core.version_control.VersionControl.commit>`
+  catches the conflict and **rebases**: it reloads the pointer, grafts this
+  writer's already-uploaded chunks onto the winner's head (cross-branch
+  commits merge trees outright; same-branch commits relocate iff the two
+  writers touched disjoint tensor sets), and re-CASes — so on
+  non-overlapping contention only the pointer ever contends and no chunk
+  is uploaded twice.  Overlapping writes surface a typed
+  ``CommitContendedError`` after bounded attempts.
 * **pointer-only updates** (`update_vc`, `mark_stale`) reload-merge-retry:
   they cannot invalidate another writer's publication, so losing the race
-  just means reapplying the mutation to the fresh pointer.
+  just means reapplying the mutation to the fresh pointer.  ``update_vc``
+  keeps the strict all-branches fence (it republishes the *whole* tree and
+  would clobber unseen branches); ``mark_stale`` only fences on its own
+  node having been sealed by a foreign commit, since adding a staleness
+  flag can never invalidate anyone else's snapshot.
+
+Write-path guarantees (hostile storage)
+---------------------------------------
+
+Segment objects are uploaded with
+:meth:`StorageProvider.put_verified <repro.core.storage.StorageProvider.put_verified>`
+(post-put length/digest verification + transient retry), so a torn upload
+is detected and re-put before the pointer ever references it.  The pointer
+CAS itself is wrapped in :func:`repro.core.storage.retry_transient`: an
+injected 5xx on the conditional put (which dies *before* applying) is
+retried with the same ``expected`` token, while a clean ``False`` return
+means real contention and reloads.  Publication stays a **single CAS**, so
+a writer crashing at any earlier point leaves only unreferenced objects
+(segments, chunks, loose state) that the orphan GC reclaims — never a
+partially-visible commit.
 
 Staleness (write-ahead invalidation)
 ------------------------------------
@@ -314,7 +340,8 @@ class Manifest:
         pointer = {"format": FORMAT, "generation": 0, "segments": [],
                    "vc": None, "stale": []}
         raw = json.dumps(pointer, sort_keys=True).encode()
-        if storage.cas(MANIFEST_KEY, raw, None):
+        if retry_transient(lambda: storage.cas(MANIFEST_KEY, raw, None),
+                           what=MANIFEST_KEY):
             return cls(storage, pointer, raw, {})
         existing = cls.load(storage)
         assert existing is not None
@@ -372,7 +399,11 @@ class Manifest:
             new_pointer = mutate(pointer)
             new_pointer["generation"] = int(pointer.get("generation", 0)) + 1
             raw = json.dumps(new_pointer, sort_keys=True).encode()
-            if self.storage.cas(MANIFEST_KEY, raw, expected):
+            # injected 5xx dies before applying, so retrying with the same
+            # expected token is safe; False means real contention
+            if retry_transient(
+                    lambda: self.storage.cas(MANIFEST_KEY, raw, expected),
+                    what=MANIFEST_KEY):
                 self._apply_pointer(new_pointer, raw)
                 return
             expected = retry_transient(  # lost: reload (transients retried)
@@ -402,23 +433,34 @@ class Manifest:
         self._cas_update(mutate, "vc snapshot")
         self._observed_branches = dict(vc_info.get("branches", {}))
 
-    def mark_stale(self, node_id: str) -> None:
+    def mark_stale(self, node_id: str, *, known_committed: bool = False) -> None:
         """Write-ahead invalidation: persist ``node_id`` onto the stale
         list BEFORE its first loose state write lands, so concurrent
         opens fall back to loose files instead of the dead snapshot.
 
-        The update doubles as the conflict fence for the loose layout:
-        when the reload shows a foreign commit moved a branch head, this
-        writer's world-view is stale and its pending write would clobber
-        the (now-sealed) node's loose files — :class:`ManifestConflict`
-        is raised *before* that write happens, so both layouts survive.
+        The update doubles as the conflict fence for the loose layout —
+        but a *node-scoped* one: it raises :class:`ManifestConflict` only
+        when the persisted pointer shows ``node_id`` itself was sealed by
+        a foreign commit (the pending write would then clobber an
+        immutable node's loose files).  Foreign movement of *other*
+        branches is deliberately not a conflict here — adding a staleness
+        flag cannot invalidate anyone else's publication, and deferring
+        the cross-branch check to commit time is what lets
+        ``VersionControl.commit`` rebase without re-uploading.  Callers
+        that write to nodes they already know are sealed (maintenance
+        backfill) pass ``known_committed=True`` to skip the fence.
         """
         self.stale.add(node_id)
         if node_id not in self.nodes:
             return  # never covered: nothing persisted to invalidate
 
         def mutate(p: dict) -> dict:
-            self._check_branches(p, f"stale mark of {node_id[:8]}")
+            if not known_committed:
+                nd = ((p.get("vc") or {}).get("commits", {})).get(node_id)
+                if nd and nd.get("committed"):
+                    raise ManifestConflict(
+                        f"stale mark of {node_id[:8]} lost: the node was "
+                        f"sealed by a concurrent commit")
             out = dict(p)
             out["stale"] = sorted(set(p.get("stale", [])) | {node_id})
             return out
@@ -479,7 +521,8 @@ class Manifest:
             seg_bytes = self._encode_segment(node_states)
             seg_nodes = list(node_states)
         seg_key = _new_segment_key(self.generation + 1)
-        self.storage.put(seg_key, seg_bytes)  # unreachable until CAS lands
+        # verified: a torn segment upload must never be published by the CAS
+        self.storage.put_verified(seg_key, seg_bytes)  # unreachable until CAS
 
         def mutate(p: dict) -> dict:
             self._check_branches(p, f"commit on {branch!r}")
@@ -504,7 +547,7 @@ class Manifest:
         self.nodes = dict(nodes)
         seg_bytes = self._encode_segment(self.nodes)
         seg_key = _new_segment_key(self.generation + 1)
-        self.storage.put(seg_key, seg_bytes)
+        self.storage.put_verified(seg_key, seg_bytes)
 
         def mutate(p: dict) -> dict:
             out = dict(p)

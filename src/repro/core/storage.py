@@ -49,14 +49,29 @@ reads; the contract below is what every consumer of this module may assume:
   :func:`retry_transient` / :meth:`StorageProvider.get_or_none`.  Prefetches
   additionally *hedge*: a request straggling past a multiple of the latency
   EWMA gets a duplicate request, first responder wins.
+* **Write semantics.**  ``put`` is *not* assumed atomic on the simulated
+  object store: an upload may fail with a 5xx (nothing durable) or **tear**
+  — the call reports success but only a prefix of the object landed
+  (interrupted multipart upload, lost trailing packets).  Durable writers
+  therefore go through :meth:`StorageProvider.put_verified`, which re-reads
+  the object's length after the upload (modeling the ETag/Content-MD5 check
+  that rides a real PUT response), raises :class:`TornWriteError` on a
+  mismatch, and retries transients via :func:`retry_transient`.  Providers
+  whose ``put`` is genuinely atomic (memory, POSIX tmp+rename) inherit a
+  ``put_verified`` that only adds the transient retry.  ``cas`` may raise a
+  transient 5xx *before* applying (the conditional put never became
+  durable); callers wrap it in :func:`retry_transient` and treat a
+  ``False`` return as contention, never as a fault.
 * **Fault injection.**  :class:`SimulatedS3Provider` takes an optional
   seeded :class:`FaultPolicy` that injects timeouts / 5xx transients /
   stragglers / torn reads on data-plane reads (``get``/``get_range``/
-  ``get_ranges``).  Writes and metadata probes (``put``/``cas``/``exists``/
-  ``num_bytes``/``list_keys``) are never faulted — idempotent retry of those
-  is assumed to live in the (real) SDK layer.  Injected faults charge
-  realistic latency and are capped per key (``max_consecutive_per_key``) so
-  a bounded retry budget always converges; every fault is counted in
+  ``get_ranges``), and — via the write-plane rates — 5xx / torn uploads on
+  ``put`` plus 5xx on ``cas``.  Metadata probes (``exists``/``num_bytes``/
+  ``list_keys``) are never faulted.  Injected faults charge realistic
+  latency (wasted upload bytes are tallied in
+  ``stats["wasted_upload_bytes"]``) and are capped per key
+  (``max_consecutive_per_key``, write plane capped independently of reads)
+  so a bounded retry budget always converges; every fault is counted in
   ``stats["faults_*"]``.
 """
 
@@ -143,6 +158,13 @@ class TornReadError(TransientStorageError):
     (interrupted transfer); detected client-side, always retriable."""
 
 
+class TornWriteError(TransientStorageError):
+    """An upload "succeeded" but the durable object is shorter than what was
+    sent (interrupted multipart upload).  Detected by the post-put
+    verification in :meth:`StorageProvider.put_verified`; always retriable —
+    re-putting the same bytes is idempotent."""
+
+
 class RetryExhausted(StorageError):
     """Transient faults persisted past the retry budget — permanent for the
     caller.  A :class:`StorageError` on purpose: exhaustion is surfaced, not
@@ -223,6 +245,21 @@ class StorageProvider:
 
     def put(self, key: str, data: bytes) -> None:
         raise NotImplementedError
+
+    def put_verified(self, key: str, data: bytes) -> None:
+        """Durable upload: ``put`` + integrity verification + transient retry.
+
+        Every write whose loss or truncation would corrupt committed state
+        (chunks, manifest segments, version-control state) goes through this
+        instead of raw ``put``.  The default adds only the
+        :func:`retry_transient` loop — correct for providers whose ``put``
+        is atomic (memory dict swap, POSIX tmp+rename).  Providers that can
+        tear an upload override it to verify the durable object (length /
+        digest, modeling the ETag check on a real PUT response) and raise
+        :class:`TornWriteError` so the retry loop re-puts.
+        """
+        data = bytes(data)
+        retry_transient(lambda: self.put(key, data), what=key)
 
     def cas(self, key: str, data: bytes, expected: Optional[bytes]) -> bool:
         """Atomic compare-and-swap: write ``data`` only if the object's
@@ -468,10 +505,24 @@ class FaultPolicy:
       ``straggle_sleep_s`` real seconds (drives hedging even at
       ``time_scale=0``).
 
+    The write plane draws from the same stream with its own rates:
+
+    * ``put_error_rate`` — the upload 5xx-fails after charging the bytes;
+      nothing becomes durable (:class:`TransientStorageError`);
+    * ``put_torn_rate`` — the upload *reports success* but only a prefix of
+      the object lands; only post-put verification
+      (:meth:`StorageProvider.put_verified`) can catch it;
+    * ``cas_error_rate`` — the conditional put 5xx-fails *before* applying
+      (nothing durable, retriable); a clean ``cas`` that loses the
+      compare is contention, not a fault, and is counted separately in
+      ``stats["cas_conflicts"]``.
+
     Hard faults (timeout/5xx/torn) are capped at ``max_consecutive_per_key``
     in a row for any one key — mirroring real stores, where per-key
     brown-outs are short — so any retry budget of more than
-    ``max_consecutive_per_key`` attempts deterministically converges.
+    ``max_consecutive_per_key`` attempts deterministically converges.  Write
+    faults keep their own per-key streaks (``"w:"``-prefixed), so a read
+    brown-out never masks a write one or vice versa.
 
     Determinism: one provider, one stream.  A single-threaded op sequence
     replays exactly under the same seed; multi-threaded request order may
@@ -484,6 +535,9 @@ class FaultPolicy:
     error_rate: float = 0.0      # 5xx / throttle
     straggle_rate: float = 0.0
     torn_rate: float = 0.0
+    put_error_rate: float = 0.0  # upload 5xx: nothing durable
+    put_torn_rate: float = 0.0   # upload "succeeds", only a prefix lands
+    cas_error_rate: float = 0.0  # conditional put 5xx before applying
     timeout_factor: float = 10.0   # sim latency multiple burned by a timeout
     straggle_factor: float = 8.0   # sim latency multiple charged by a straggle
     straggle_sleep_s: float = 0.0  # REAL stall of a straggling request
@@ -519,6 +573,43 @@ class FaultPolicy:
             if not hard:
                 self._streak.pop(key, None)
             return kind
+
+    def _draw_write(self, streak_key: str,
+                    rates: Sequence[Tuple[str, float]]) -> Optional[str]:
+        """One seeded draw over the write-plane ``(kind, rate)`` ladder.
+        All write faults are hard, so every pick is subject to the per-key
+        liveness cap; a clean draw clears the streak."""
+        with self._lock:
+            u = self._rng.random()
+            kind: Optional[str] = None
+            edge = 0.0
+            for k, r in rates:
+                edge += r
+                if u < edge:
+                    kind = k
+                    break
+            if kind is not None:
+                streak = self._streak.get(streak_key, 0)
+                if streak >= self.max_consecutive_per_key:
+                    kind = None
+                else:
+                    self._streak[streak_key] = streak + 1
+            if kind is None:
+                self._streak.pop(streak_key, None)
+            return kind
+
+    def draw_put(self, key: str) -> Optional[str]:
+        """Fault kind for the next upload of ``key``: ``"5xx"`` (nothing
+        durable), ``"torn"`` (prefix lands, call reports success), or None."""
+        return self._draw_write(
+            "w:" + key,
+            (("5xx", self.put_error_rate), ("torn", self.put_torn_rate)))
+
+    def draw_cas(self, key: str) -> Optional[str]:
+        """Fault kind for the next conditional put of ``key``: ``"5xx"``
+        (fails before applying) or None."""
+        return self._draw_write("w:" + key,
+                                (("5xx", self.cas_error_rate),))
 
 
 class SimulatedS3Provider(StorageProvider):
@@ -565,15 +656,21 @@ class SimulatedS3Provider(StorageProvider):
             "coalesced_requests": 0,  # physical spans issued by get_ranges
             "batched_ranges": 0,      # logical ranges served by get_ranges
             "meta_requests": 0,       # exists/num_bytes/list_keys round-trips
+            "put_requests": 0,        # upload round-trips (incl. faulted)
             "cas_requests": 0,        # conditional-put round-trips (manifest)
+            "cas_conflicts": 0,       # clean cas that lost the compare
             "bytes_down": 0,
             "bytes_up": 0,
+            "wasted_upload_bytes": 0,  # bytes charged by faulted uploads
             "sim_seconds": 0.0,
             "faults_injected": 0,     # total injected faults (all kinds)
             "faults_timeout": 0,
             "faults_5xx": 0,
             "faults_straggle": 0,
             "faults_torn": 0,
+            "faults_put_5xx": 0,      # upload failed, nothing durable
+            "faults_put_torn": 0,     # upload "succeeded", prefix landed
+            "faults_cas_5xx": 0,      # conditional put failed before applying
         }
 
     # -- cost model --------------------------------------------------------
@@ -665,16 +762,64 @@ class SimulatedS3Provider(StorageProvider):
 
     def put(self, key: str, data: bytes) -> None:
         with self._sem:
+            fp = self.fault_policy
+            # a tear needs at least 2 bytes to lose anything
+            kind = fp.draw_put(key) if fp is not None and len(data) >= 2 \
+                else None
             self._charge(len(data), upload=True)
-            self.base.put(key, data)
+            with self._lock:
+                self.stats["put_requests"] += 1
+            if kind is None:
+                self.base.put(key, data)
+                return
+            with self._lock:
+                self.stats["faults_injected"] += 1
+                self.stats["faults_put_" + kind] += 1
+                self.stats["wasted_upload_bytes"] += len(data)
+            if kind == "5xx":
+                raise TransientStorageError(
+                    f"injected 503 SlowDown uploading {key!r}")
+            # torn: a prefix becomes durable and the call reports success —
+            # only post-put verification (put_verified) can catch this
+            self.base.put(key, bytes(data)[: len(data) // 2])
+
+    def put_verified(self, key: str, data: bytes) -> None:
+        data = bytes(data)
+
+        def attempt() -> None:
+            self.put(key, data)
+            # the length check models the ETag/Content-MD5 riding the PUT
+            # response: it probes the backing store directly and charges no
+            # extra round-trip
+            if self.base.num_bytes(key) != len(data):
+                raise TornWriteError(
+                    f"verification failed: {key!r} is shorter than the "
+                    f"{len(data)} bytes uploaded")
+
+        retry_transient(attempt, what=key)
 
     def cas(self, key: str, data: bytes, expected: Optional[bytes]) -> bool:
         # conditional PUT (If-Match): one round-trip whether it wins or loses
         with self._sem:
+            fp = self.fault_policy
+            kind = fp.draw_cas(key) if fp is not None else None
             self._charge(len(data), upload=True)
             with self._lock:
                 self.stats["cas_requests"] += 1
-            return self.base.cas(key, data, expected)
+            if kind is not None:
+                # the conditional put dies before applying: nothing durable,
+                # the caller's retry re-issues the same compare
+                with self._lock:
+                    self.stats["faults_injected"] += 1
+                    self.stats["faults_cas_5xx"] += 1
+                    self.stats["wasted_upload_bytes"] += len(data)
+                raise TransientStorageError(
+                    f"injected 503 on conditional put of {key!r}")
+            ok = self.base.cas(key, data, expected)
+            if not ok:
+                with self._lock:
+                    self.stats["cas_conflicts"] += 1
+            return ok
 
     def delete(self, key: str) -> None:
         with self._sem:
@@ -811,6 +956,12 @@ class LRUCacheProvider(StorageProvider):
     def put(self, key: str, data: bytes) -> None:
         self.base.put(key, data)
         self._admit(key, bytes(data))
+
+    def put_verified(self, key: str, data: bytes) -> None:
+        # the base owns verification + retry; admit only the verified bytes
+        data = bytes(data)
+        self.base.put_verified(key, data)
+        self._admit(key, data)
 
     def cas(self, key: str, data: bytes, expected: Optional[bytes]) -> bool:
         ok = self.base.cas(key, data, expected)

@@ -100,6 +100,9 @@ class Tensor:
         self._builder: Optional[ChunkBuilder] = None
         self._open_name: Optional[str] = None
         self._dirty = False
+        # True while the open builder holds bytes newer than its last
+        # upload — flush/commit retries skip re-putting an unchanged chunk
+        self._builder_dirty = False
         if meta is not None:
             self.meta = meta
             self.encoder = ChunkEncoder()
@@ -131,9 +134,12 @@ class Tensor:
         """Persist open chunk + encoder + stats + ids + meta + chunk_set + diff."""
         if self.node_id is not None:
             return  # read-only binding
-        if self._builder is not None and self._builder.num_samples:
-            key = self.vc.register_new_chunk(self.name, self._open_name)
-            self.vc.storage.put(key, self._builder.serialize())
+        if self._builder is not None and self._builder.num_samples \
+                and self._builder_dirty:
+            self.vc.register_new_chunk(self.name, self._open_name)
+            key = self.vc.put_chunk(self.name, self._open_name,
+                                    self._builder.serialize())
+            self._builder_dirty = False
             self._discard_cached(key)  # the key's bytes just changed
             self.stats.set(self._open_name, self._builder.stats_snapshot())
         if not self._dirty:
@@ -237,6 +243,7 @@ class Tensor:
                     self.encoder.pop_last()
                     self.stats.drop(last_name)
                     self._builder = b
+                    self._builder_dirty = True
                     self._open_name = _new_chunk_name()
                     self.encoder.register_chunk(self._open_name, n)
                     # drop the superseded chunk if it was born in this version
@@ -253,8 +260,10 @@ class Tensor:
         if self._builder is None or not self._builder.num_samples:
             self._builder, self._open_name = None, None
             return
-        key = self.vc.register_new_chunk(self.name, self._open_name)
-        self.vc.storage.put(key, self._builder.serialize())
+        self.vc.register_new_chunk(self.name, self._open_name)
+        key = self.vc.put_chunk(self.name, self._open_name,
+                                self._builder.serialize())
+        self._builder_dirty = False
         self._discard_cached(key)  # the key's bytes just changed
         self.stats.set(self._open_name, self._builder.stats_snapshot())
         self._builder, self._open_name = None, None
@@ -265,6 +274,7 @@ class Tensor:
         b = self._ensure_open(len(payload))
         was_empty = b.num_samples == 0
         b.append_raw(payload, shape, flags, source=source)
+        self._builder_dirty = True
         if was_empty and (self.encoder.num_chunks == 0
                           or self.encoder.name_of(self.encoder.num_chunks - 1)
                           != self._open_name):
@@ -317,9 +327,9 @@ class Tensor:
         payloads = []
         for t in tiles:
             name = _new_chunk_name("t")
-            key = self.vc.register_new_chunk(self.name, name)
+            self.vc.register_new_chunk(self.name, name)
             payload = codec.encode(t)
-            self.vc.storage.put(key, payload)
+            self.vc.put_chunk(self.name, name, payload)
             names.append(name)
             payloads.append(payload)
         desc = TileDescriptor(tuple(arr.shape), tile_shape, grid, names,
@@ -356,6 +366,7 @@ class Tensor:
         chunk_name, local = self.encoder.lookup(idx)
         if self._builder is not None and chunk_name == self._open_name:
             self._builder.replace_payload(local, payload, tuple(arr.shape), flags)
+            self._builder_dirty = True
         else:
             self._rewrite_chunk(idx, chunk_name, local, payload,
                                 tuple(arr.shape), flags)
@@ -377,8 +388,8 @@ class Tensor:
                 s, e = header.byte_range(i)
                 b.append_raw(raw[s:e], header.shapes[i], int(header.flags[i]))
         new_name = _new_chunk_name()
-        new_key = self.vc.register_new_chunk(self.name, new_name)
-        self.vc.storage.put(new_key, b.serialize())
+        self.vc.register_new_chunk(self.name, new_name)
+        self.vc.put_chunk(self.name, new_name, b.serialize())
         ord_ = self.encoder.chunk_ord_of(idx)
         self.encoder.replace(ord_, new_name)
         self.stats.set(new_name, b.stats_snapshot())

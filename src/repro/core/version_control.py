@@ -9,7 +9,12 @@ Design follows the paper:
   in that version) and ``commit_diff`` (what changed);
 * chunks never move: reading a chunk traverses the commit chain from the
   current node toward the root and stops at the first version whose
-  chunk_set contains the chunk name;
+  chunk_set contains the chunk name.  A chunk_set may carry an ``"at"``
+  home map (``{chunk_name: node_id}``) redirecting individual names to the
+  directory they were *physically* uploaded under — the commit-rebase path
+  uses it to graft already-uploaded chunks onto a relocated head without
+  copying a byte (GC reachability is (tensor, name)-based and location-
+  agnostic, so grafted chunks are never swept);
 * every branch head is a *writable, uncommitted* node.  ``commit`` seals the
   head and opens a fresh child node (state files copied, chunk_set empty);
 * sample ids (random u64 per appended row) keep identity across branches so
@@ -36,6 +41,20 @@ per-file layout above (it stays complete and authoritative for legacy
 readers) after write-ahead-invalidating the node's manifest snapshot.
 ``commit`` publishes complete snapshots of the sealed node and the fresh
 head through one CAS pointer swap — the ACID ingestion point.
+
+Concurrent committers (rebase-and-retry): losing the pointer swap no
+longer surfaces a raw :class:`~repro.core.manifest.ManifestConflict`.
+:meth:`VersionControl.commit` reloads the pointer and **rebases**:
+commits on *different* branches merge version trees outright (nothing
+re-uploaded, nothing relocated); commits racing on the *same* branch
+relocate this writer's pending work onto a fresh head under the winner's
+newest sealed node **iff** the two writers touched disjoint tensor sets
+(cheap ``commit_diff`` intersection along the winner's path), grafting
+already-uploaded chunks via the chunk_set ``"at"`` home map.  Overlapping
+same-branch writes raise a typed :class:`CommitContendedError` (a
+``ManifestConflict`` subclass) after bounded attempts.  All durable state
+writes go through ``StorageProvider.put_verified`` so torn uploads are
+detected and re-put before anything references them.
 """
 
 from __future__ import annotations
@@ -53,6 +72,19 @@ from .chunk_encoder import ChunkEncoder, ChunkStatsTable
 from .storage import StorageError, StorageProvider
 
 VC_INFO_KEY = "version_control_info.json"
+
+#: bounded rebase attempts in :meth:`VersionControl.commit` before a
+#: contended commit gives up with :class:`CommitContendedError`
+COMMIT_REBASE_ATTEMPTS = 8
+
+
+class CommitContendedError(manifestlib.ManifestConflict):
+    """A commit could not be rebased onto the winning history: either the
+    concurrent writers touched overlapping tensor sets on one branch, or
+    the bounded rebase budget ran out.  Subclasses
+    :class:`~repro.core.manifest.ManifestConflict` so existing conflict
+    handlers keep working; the dataset itself is untouched — re-open a
+    fresh handle and replay the writes to retry."""
 
 
 def _new_id() -> str:
@@ -137,6 +169,15 @@ class VersionControl:
         self._chunk_sets: Dict[Tuple[str, str], Set[str]] = {}   # (node, tensor)
         self._schemas: Dict[str, List[str]] = {}                 # node -> tensor list
         self._diffs: Dict[str, CommitDiff] = {}                  # tensor -> diff (current node)
+        # chunk relocation bookkeeping (commit rebase): per (node, tensor)
+        # the "at" home map of names stored under another node's directory,
+        # and per (tensor, name) the node a chunk was physically put under
+        self._chunk_home_maps: Dict[Tuple[str, str], Dict[str, str]] = {}
+        self._chunk_put_homes: Dict[Tuple[str, str], str] = {}
+        #: commit-path observability: rebases, relocations, grafted chunks
+        self.commit_stats: Dict[str, int] = {
+            "commits": 0, "rebases": 0, "relocations": 0,
+            "grafted_chunks": 0, "contended": 0}
         # read-through/write-through memo of state-file bytes per
         # (node, tensor, fname); None records an authoritative miss
         self._state_cache: Dict[Tuple[str, str, str], Optional[bytes]] = {}
@@ -219,7 +260,7 @@ class VersionControl:
         return f"{self.tensor_dir(node_id, tensor)}/chunks/{chunk_name}"
 
     def _put_json(self, key: str, obj) -> None:
-        self.storage.put(key, json.dumps(obj).encode())
+        self.storage.put_verified(key, json.dumps(obj).encode())
 
     def _get_json(self, key: str, default=None):
         raw = self.storage.get_or_none(key)
@@ -255,8 +296,10 @@ class VersionControl:
         nid = node_id or self.current_id
         m = self.manifest
         if m is not None and m.covers(nid):
-            m.mark_stale(nid)
-        self.storage.put(self.state_key(tensor, fname, nid), data)
+            node = self.commits.get(nid)
+            m.mark_stale(nid,
+                         known_committed=bool(node and node.committed))
+        self.storage.put_verified(self.state_key(tensor, fname, nid), data)
         self._state_cache[(nid, tensor, fname)] = bytes(data)
 
     def _get_state_json(self, tensor: str, fname: str,
@@ -364,15 +407,26 @@ class VersionControl:
             d = self._get_state_json(tensor, "chunk_set.json", node_id,
                                      {"chunks": []})
             self._chunk_sets[key] = set(d["chunks"])
+            at = d.get("at") or {}
+            if at:  # grafted chunks live under another node's directory
+                self._chunk_home_maps[key] = dict(at)
         return self._chunk_sets[key]
+
+    def _chunk_home(self, node_id: str, tensor: str, chunk_name: str) -> str:
+        """Node whose directory physically holds a chunk owned by
+        ``node_id`` (== ``node_id`` unless the chunk was grafted)."""
+        return self._chunk_home_maps.get((node_id, tensor), {}) \
+            .get(chunk_name, node_id)
 
     def resolve_chunk_key(self, tensor: str, chunk_name: str,
                           node_id: Optional[str] = None) -> str:
-        """Paper §4.1 traversal: walk current -> root, first chunk_set hit wins."""
+        """Paper §4.1 traversal: walk current -> root, first chunk_set hit
+        wins; the owning node's "at" home map may redirect the physical key."""
         nid = node_id or self.current_id
         while nid is not None:
             if chunk_name in self.chunk_set(nid, tensor):
-                return self.chunk_key(nid, tensor, chunk_name)
+                home = self._chunk_home(nid, tensor, chunk_name)
+                return self.chunk_key(home, tensor, chunk_name)
             nid = self.commits[nid].parent
         raise StorageError(f"chunk {chunk_name!r} of tensor {tensor!r} not found "
                            f"in any ancestor of {node_id or self.current_id}")
@@ -381,15 +435,43 @@ class VersionControl:
         """Record a chunk created in the current (writable) version."""
         self.require_writable()
         self.chunk_set(self.current_id, tensor).add(chunk_name)
-        return self.chunk_key(self.current_id, tensor, chunk_name)
+        return self.chunk_key(
+            self._chunk_home(self.current_id, tensor, chunk_name),
+            tensor, chunk_name)
+
+    def put_chunk(self, tensor: str, chunk_name: str, payload: bytes) -> str:
+        """Verified upload of a chunk owned by the current writable node.
+
+        The single chokepoint for chunk durability: routes through
+        :meth:`StorageProvider.put_verified` (torn uploads detected and
+        re-put), honors the relocation home map (a grafted chunk re-flushes
+        to its birth directory, never forks), and records where the bytes
+        physically landed so a later rebase can graft without re-uploading.
+        Returns the physical key written.
+        """
+        nid = self.current_id
+        home = self._chunk_home(nid, tensor, chunk_name)
+        key = self.chunk_key(home, tensor, chunk_name)
+        self.storage.put_verified(key, payload)
+        self._chunk_put_homes[(tensor, chunk_name)] = home
+        return key
 
     def forget_chunk(self, tensor: str, chunk_name: str) -> None:
         self.chunk_set(self.current_id, tensor).discard(chunk_name)
+        self._chunk_home_maps.get((self.current_id, tensor), {}) \
+            .pop(chunk_name, None)
+        self._chunk_put_homes.pop((tensor, chunk_name), None)
 
     def flush_chunk_set(self, tensor: str) -> None:
-        cs = sorted(self.chunk_set(self.current_id, tensor))
-        self.put_state(tensor, "chunk_set.json",
-                       json.dumps({"chunks": cs}).encode())
+        nid = self.current_id
+        names = self.chunk_set(nid, tensor)
+        payload: dict = {"chunks": sorted(names)}
+        at = {n: h for n, h in
+              self._chunk_home_maps.get((nid, tensor), {}).items()
+              if n in names and h != nid}
+        if at:
+            payload["at"] = at
+        self.put_state(tensor, "chunk_set.json", json.dumps(payload).encode())
 
     # ------------------------------------------------------------ diff state
     def diff_of(self, tensor: str) -> CommitDiff:
@@ -420,43 +502,277 @@ class VersionControl:
         return any(not d.is_empty() for d in self._diffs.values())
 
     # --------------------------------------------------------------- commit
-    def commit(self, message: str = "") -> str:
+    def commit(self, message: str = "", *, flush=None) -> str:
         """Seal the current head; open a fresh writable child on the branch.
 
         On manifest datasets this is the ACID publication point: complete
         snapshots of the sealed node and the fresh head are folded into a
         new manifest segment and published with one CAS pointer swap
-        (:meth:`Manifest.commit_update`); a concurrent committer losing
-        the swap raises :class:`~repro.core.manifest.ManifestConflict`.
-        Legacy (pre-manifest) datasets adopt a manifest on their first
-        commit.
+        (:meth:`Manifest.commit_update`).  Losing the swap to a concurrent
+        committer triggers an automatic **rebase-and-retry**: the pointer
+        is reloaded and this writer's pending work grafted onto the winning
+        history (see :meth:`_rebase_commit`), then ``flush`` (the caller's
+        tensor-flush callback, re-entrant) and the publication re-run —
+        bounded by ``COMMIT_REBASE_ATTEMPTS``, after which (or when the
+        writers' tensor sets overlap on one branch) a typed
+        :class:`CommitContendedError` surfaces.  Already-uploaded chunks
+        are never re-uploaded by a rebase: cross-branch winners leave our
+        head untouched, same-branch relocation grafts them via the
+        chunk_set ``"at"`` home map.  Legacy (pre-manifest) datasets adopt
+        a manifest on their first commit.
         """
         self.require_writable()
+        last: Optional[manifestlib.ManifestConflict] = None
+        for _ in range(1 + COMMIT_REBASE_ATTEMPTS):
+            try:
+                if flush is not None:
+                    flush()
+                sealed = self._commit_once(message)
+                self.commit_stats["commits"] += 1
+                return sealed
+            except manifestlib.ManifestConflict as e:
+                if isinstance(e, CommitContendedError):
+                    raise
+                last = e
+                self._rebase_commit(e)
+        self.commit_stats["contended"] += 1
+        raise CommitContendedError(
+            f"commit gave up after {COMMIT_REBASE_ATTEMPTS} rebase "
+            f"attempts on branch {self.current.branch!r}") from last
+
+    def _commit_once(self, message: str) -> str:
+        """One seal + publish attempt; rolls the in-memory seal back on a
+        publication conflict so a rebase can re-run the whole commit."""
         head = self.current
+        prev_diffs = self._diffs
         head.committed = True
         head.message = message
         head.timestamp = time.time()
         sealed_id = head.id
         branch = head.branch
-        child = CommitNode(id=_new_id(), parent=sealed_id, branch=head.branch)
+        child = CommitNode(id=_new_id(), parent=sealed_id, branch=branch)
         head.children.append(child.id)
         self.commits[child.id] = child
-        self.branches[head.branch] = child.id
-        self._copy_state(sealed_id, child.id)
-        self.current_id = child.id
-        self._load_current_diffs()
-        if self.manifest is None:  # legacy dataset: adopt on first commit
-            self.manifest = manifestlib.Manifest.create(self.storage)
-        info = self._info_dict()
-        self.manifest.commit_update(
-            {sealed_id: self.node_snapshot(sealed_id),
-             child.id: self.node_snapshot(child.id)},
-            info, branch=branch)
+        self.branches[branch] = child.id
+        try:
+            self._copy_state(sealed_id, child.id)
+            self.current_id = child.id
+            self._load_current_diffs()
+            if self.manifest is None:  # legacy dataset: adopt on first commit
+                self.manifest = manifestlib.Manifest.create(self.storage)
+            info = self._info_dict()
+            self.manifest.commit_update(
+                {sealed_id: self.node_snapshot(sealed_id),
+                 child.id: self.node_snapshot(child.id)},
+                info, branch=branch)
+        except manifestlib.ManifestConflict:
+            # the publish lost: undo the seal so the head is writable again
+            # (the rebase re-runs the commit); the child's loose files —
+            # a few tiny JSON objects — stay behind as GC-able orphans
+            head.committed = False
+            head.message = None
+            head.timestamp = 0.0
+            if child.id in head.children:
+                head.children.remove(child.id)
+            self.commits.pop(child.id, None)
+            self.branches[branch] = sealed_id
+            self.current_id = sealed_id
+            self._diffs = prev_diffs
+            self._schemas.pop(child.id, None)
+            self._state_cache = {k: v for k, v in self._state_cache.items()
+                                 if k[0] != child.id}
+            self._chunk_sets = {k: v for k, v in self._chunk_sets.items()
+                                if k[0] != child.id}
+            raise
         # mirror to the legacy key only AFTER the pointer swap won: a
         # conflicted commit must not advance the loose version tree either
         self._put_json(VC_INFO_KEY, info)
         self._saved_info = info
         return sealed_id
+
+    # --------------------------------------------------------------- rebase
+    def _rebase_commit(self, cause: manifestlib.ManifestConflict) -> None:
+        """Graft this writer's pending (uncommitted) work onto the winning
+        history after a lost publication.
+
+        Two shapes, mirroring where concurrent writers can actually
+        collide:
+
+        * **cross-branch** — the winner moved *other* branch heads; our
+          head node is untouched.  Merge the version trees (their commits
+          + our local-only nodes), adopt the fresh manifest, keep our head.
+          Nothing is re-uploaded, nothing relocated.
+        * **same-branch** — the winner sealed the very node we were
+          writing to.  Iff the two writers touched disjoint tensor sets
+          (``commit_diff`` intersection along the winner's new commits),
+          relocate our pending state onto a fresh head under the winner's
+          newest sealed node, grafting already-uploaded chunks in place
+          via the chunk_set ``"at"`` home map.  Overlap raises
+          :class:`CommitContendedError`.
+        """
+        self.commit_stats["rebases"] += 1
+        fresh = manifestlib.Manifest.load(self.storage)
+        if fresh is None or not fresh.vc_info:
+            raise cause  # nothing to rebase onto: surface the original
+        their_commits = {k: CommitNode.from_json(v)
+                         for k, v in fresh.vc_info["commits"].items()}
+        their_branches = dict(fresh.vc_info.get("branches", {}))
+        head_id = self.current_id
+        branch = self.current.branch
+        if their_branches.get(branch, head_id) == head_id:
+            self._adopt_tree(fresh, their_commits, their_branches,
+                             head_id=head_id, branch=branch)
+        else:
+            self._relocate_head(fresh, their_commits, their_branches,
+                                head_id=head_id, branch=branch, cause=cause)
+
+    def _merge_trees(self, their_commits: Dict[str, CommitNode],
+                     their_branches: Dict[str, str]
+                     ) -> Tuple[Dict[str, CommitNode], Dict[str, str]]:
+        """The winner's tree + any local-only nodes (unpublished branches),
+        re-linked into their parents."""
+        merged = dict(their_commits)
+        for nid, node in self.commits.items():
+            if nid not in merged:
+                merged[nid] = node
+                p = node.parent
+                if p is not None and p in merged \
+                        and nid not in merged[p].children:
+                    merged[p].children.append(nid)
+        branches = dict(their_branches)
+        for b, h in self.branches.items():
+            branches.setdefault(b, h)
+        return merged, branches
+
+    def _adopt_tree(self, fresh: manifestlib.Manifest,
+                    their_commits: Dict[str, CommitNode],
+                    their_branches: Dict[str, str], *,
+                    head_id: str, branch: str) -> None:
+        merged, branches = self._merge_trees(their_commits, their_branches)
+        merged[head_id] = self.commits[head_id]  # keep the live head object
+        branches[branch] = head_id
+        self.commits = merged
+        self.branches = branches
+        self.manifest = fresh
+        self._saved_info = fresh.vc_info
+        # our head's cached state is still ours (nobody sealed it); every
+        # other node's state is immutable, so no cache invalidation needed
+
+    def _relocate_head(self, fresh: manifestlib.Manifest,
+                       their_commits: Dict[str, CommitNode],
+                       their_branches: Dict[str, str], *,
+                       head_id: str, branch: str,
+                       cause: manifestlib.ManifestConflict) -> None:
+        th = their_branches.get(branch)
+        if th is None or th not in their_commits:
+            raise cause  # the branch vanished: not linearly rebaseable
+        th_node = their_commits[th]
+        tp = th_node.parent if not th_node.committed else th
+        if tp is None:
+            raise cause
+        base = self.commits[head_id].parent
+        # the winner's sealed chain since our base, newest first
+        path: List[str] = []
+        nid: Optional[str] = tp
+        while nid is not None and nid != base:
+            node = their_commits.get(nid)
+            if node is None:
+                raise cause
+            path.append(nid)
+            nid = node.parent
+        if nid != base:
+            raise cause  # our base is not in the winner's ancestry
+
+        ours_touched = {t for t, d in self._diffs.items() if not d.is_empty()}
+        theirs_touched: Set[str] = set()
+        for pnid in path:
+            ns = fresh.nodes.get(pnid)
+            if ns is None:
+                raise cause  # cannot prove disjointness without the snapshot
+            for t, files in ns.tensors.items():
+                raw = files.get("commit_diff.json")
+                if raw and not CommitDiff.from_json(
+                        json.loads(raw.decode())).is_empty():
+                    theirs_touched.add(t)
+        overlap = ours_touched & theirs_touched
+        if overlap:
+            self.commit_stats["contended"] += 1
+            raise CommitContendedError(
+                f"concurrent commits touched the same tensors "
+                f"{sorted(overlap)} on branch {branch!r}; exactly one "
+                f"writer won — replay these writes on a fresh handle to "
+                f"retry") from cause
+        tp_state = fresh.nodes.get(tp)
+        if tp_state is None:
+            raise cause
+
+        # capture our flushed state bytes for touched tensors BEFORE the
+        # old head's (now foreign-owned) caches are dropped; never-flushed
+        # tensors re-flush from live Tensor memory on the commit retry
+        old_schema = self.schema_tensors(head_id)
+        captured = {t: {f: self.get_state(t, f, head_id)
+                        for f in self.STATE_FILES}
+                    for t in ours_touched}
+
+        x2 = CommitNode(id=_new_id(), parent=tp, branch=branch)
+        merged, branches = self._merge_trees(their_commits, their_branches)
+        merged[x2.id] = x2
+        if x2.id not in merged[tp].children:
+            merged[tp].children.append(x2.id)
+        branches[branch] = x2.id
+        self.commits = merged
+        self.branches = branches
+        self.manifest = fresh
+        self._saved_info = fresh.vc_info
+        self.current_id = x2.id
+
+        # move in-memory chunk ownership old head -> X2; chunks whose bytes
+        # already landed keep their physical home (the graft)
+        grafted = 0
+        for t in ours_touched:
+            moved = self._chunk_sets.pop((head_id, t), set())
+            self._chunk_sets[(x2.id, t)] = moved
+            inherited = self._chunk_home_maps.pop((head_id, t), {})
+            homes: Dict[str, str] = {}
+            for name in moved:
+                home = self._chunk_put_homes.get((t, name),
+                                                 inherited.get(name))
+                if home is not None and home != x2.id:
+                    homes[name] = home
+                    grafted += 1
+            if homes:
+                self._chunk_home_maps[(x2.id, t)] = homes
+        # drop our stale view of the old head: the winner's snapshot owns it
+        self._state_cache = {k: v for k, v in self._state_cache.items()
+                             if k[0] != head_id}
+        self._schemas.pop(head_id, None)
+        self._chunk_sets = {k: v for k, v in self._chunk_sets.items()
+                            if k[0] != head_id}
+
+        new_schema = list(tp_state.schema) + [t for t in old_schema
+                                              if t not in tp_state.schema]
+        self._put_json(self._schema_key(x2.id), {"tensors": new_schema})
+        self._schemas[x2.id] = new_schema
+        for t in new_schema:
+            if t in ours_touched:
+                for f, raw in captured[t].items():
+                    if raw is not None:
+                        self.put_state(t, f, raw, x2.id)
+                self.flush_chunk_set(t)  # writes the "at" home map
+                self.flush_diff(t)       # live diff survives the relocation
+            else:  # untouched: inherit the winner's state (like _copy_state)
+                files = tp_state.tensors.get(t, {})
+                for f in self.STATE_FILES:
+                    raw = files.get(f)
+                    if raw is not None:
+                        self.put_state(t, f, raw, x2.id)
+                self.put_state(t, "chunk_set.json",
+                               json.dumps({"chunks": []}).encode(), x2.id)
+                self.put_state(t, "commit_diff.json",
+                               json.dumps(CommitDiff().to_json()).encode(),
+                               x2.id)
+        self.commit_stats["relocations"] += 1
+        self.commit_stats["grafted_chunks"] += grafted
 
     def _copy_state(self, src_id: str, dst_id: str) -> None:
         """Copy small per-tensor state files; chunks stay where created."""
