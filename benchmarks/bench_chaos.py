@@ -36,7 +36,16 @@ committers on a shared store with injected put/cas faults.  Its gates:
   (fault-free) same-branch disjoint-tensor contention run re-publishes
   metadata only: ``wasted_upload_bytes`` stays exactly 0.
 
-That datapoint lands under ``chaos_write_path``.
+That datapoint lands under ``chaos_write_path``, including a
+``registry`` section (``commit_rebases``, ``commit_adoptions``,
+``commit_relocations``, ``commit_grafted_chunks``,
+``storage_wasted_upload_bytes``) taken as a delta of the process-wide
+:func:`repro.core.telemetry.registry` snapshot around the concurrent run.
+
+Both chaos passes run under the span tracer: the hostile read pass must
+contain ``fetch.retry`` and ``fetch.hedge`` spans and the contended write
+pass ``commit.rebase`` spans — the injected-fault recovery machinery is
+visible in the exported timeline, not just in counters.
 """
 
 from __future__ import annotations
@@ -187,7 +196,7 @@ def main(smoke: bool = False) -> List[str]:
     policy = dl.FaultPolicy(seed=SEED, straggle_sleep_s=0.06, **FAULT_RATES)
     chaos_s3 = dl.SimulatedS3Provider(base, time_scale=0,
                                       fault_policy=policy)
-    with Timer() as t_chaos:
+    with dl.telemetry.tracing() as tr_read, Timer() as t_chaos:
         faulted = _stream(chaos_s3)
     chaos_stats = io_report.provider_snapshot(chaos_s3)
 
@@ -208,6 +217,13 @@ def main(smoke: bool = False) -> List[str]:
         f"request amplification {amplification:.2f}x exceeds "
         f"{AMPLIFICATION_BUDGET}x budget (clean {clean_stats['requests']}, "
         f"chaos {chaos_stats['requests']})")
+    # the recovery events must appear in the traced timeline too: a retry
+    # or hedge that only bumps a counter is invisible in a stall
+    # post-mortem
+    retry_spans = tr_read.count("fetch.retry")
+    hedge_spans = tr_read.count("fetch.hedge")
+    assert retry_spans > 0, "hostile run recorded no fetch.retry spans"
+    assert hedge_spans > 0, "hostile run recorded no fetch.hedge spans"
 
     io_report.record("chaos_hostile_storage", {
         "clean": clean_stats,
@@ -216,6 +232,8 @@ def main(smoke: bool = False) -> List[str]:
                  "budget_x": AMPLIFICATION_BUDGET,
                  "parity_ok": 1,
                  "rows_streamed": len(clean[1]),
+                 "retry_spans": retry_spans,
+                 "hedge_spans": hedge_spans,
                  "smoke": int(smoke)},
     })
 
@@ -239,8 +257,13 @@ def main(smoke: bool = False) -> List[str]:
     ws3 = dl.SimulatedS3Provider(dl.MemoryProvider(), time_scale=0,
                                  fault_policy=wpolicy)
     _branch_fixture(ws3, N_WRITERS)
-    with Timer() as t_write:
+    # bracket the concurrent run with process-wide registry snapshots: the
+    # delta isolates this run's commit/waste counters from everything the
+    # process did before (fixtures, the read section, other benches)
+    reg0 = dl.telemetry.registry().snapshot()
+    with dl.telemetry.tracing() as tr_commit, Timer() as t_write:
         errors, cstats = _concurrent_commit_run(ws3, commits_each, rows_each)
+    regd = dl.telemetry.registry().delta(reg0)
     wstats = io_report.provider_snapshot(ws3)
 
     # ---- gates
@@ -254,6 +277,13 @@ def main(smoke: bool = False) -> List[str]:
     assert wstats["put_requests"] > 0, "put_requests counter never charged"
     assert cstats["rebases"] > 0, \
         "no commit rebased — the run never actually contended"
+    rebase_spans = tr_commit.count("commit.rebase")
+    assert rebase_spans > 0, \
+        "contended run recorded no commit.rebase spans"
+    # the registry mirrors VersionControl.commit_stats one-for-one
+    assert regd.get("commit_rebases", 0) == cstats["rebases"], (
+        f"registry commit_rebases {regd.get('commit_rebases', 0)} != "
+        f"summed commit_stats rebases {cstats['rebases']}")
     gc_ds = dl.Dataset(ws3)
     gc_rep = gc_ds.maintenance().gc_orphans(dry_run=True)
     assert gc_rep.details["orphan_chunk_bytes"] == 0, (
@@ -283,7 +313,13 @@ def main(smoke: bool = False) -> List[str]:
     io_report.record("chaos_write_path", {
         "chaos": wstats,
         "commit_stats": cstats,
+        "registry": {k: regd.get(k, 0)
+                     for k in ("commit_commits", "commit_rebases",
+                               "commit_adoptions", "commit_relocations",
+                               "commit_grafted_chunks", "commit_contended",
+                               "storage_wasted_upload_bytes")},
         "gate": {"writers": N_WRITERS,
+                 "rebase_spans": rebase_spans,
                  "commits_per_writer": commits_each,
                  "rows_per_commit": rows_each,
                  "parity_ok": 1,

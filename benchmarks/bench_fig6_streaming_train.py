@@ -99,7 +99,39 @@ def _consume(params, step, batch_iter, steps=STEPS):
     return compute
 
 
-def main(smoke: bool = False) -> List[str]:
+#: tracing-overhead gate (smoke): the traced deep-lake run's simulated IO
+#: seconds must match the untraced run within this relative fraction (plus
+#: an absolute floor — smoke sims are fractions of a second)
+TRACE_OVERHEAD_TOL = 0.05
+TRACE_OVERHEAD_FLOOR_S = 0.05
+
+
+def _deeplake_run(images, steps: int):
+    """One deep-lake streaming training run on a fresh simulated store.
+
+    Returns ``(compute_seconds, provider, loader)`` — the provider's stats
+    and the loader's stats are both still live snapshots of this run.
+    """
+    s3b = dl.SimulatedS3Provider(time_scale=TIME_SCALE, latency_s=LAT,
+                                 bandwidth_bps=BW)
+    build_lake(images, codec="quant8", storage=s3b, chunk_mb=2)
+    s3b.reset_stats()
+    dsr = dl.Dataset(dl.chain(dl.MemoryProvider(), s3b,
+                              capacity_bytes=64 << 20))
+    loader = dsr.dataloader(batch_size=BATCH, shuffle=True, num_workers=8,
+                            drop_last=True)
+
+    def lake_batches():
+        while True:
+            for b in loader:
+                yield b["images"], b["labels"]
+
+    params, step = _train_step_fn()
+    compute = _consume(params, step, lake_batches(), steps=steps)
+    return compute, s3b, loader
+
+
+def main(smoke: bool = False, trace_out: str | None = None) -> List[str]:
     n_images = 240 if smoke else N_IMAGES
     steps = 12 if smoke else STEPS
     lines = []
@@ -170,22 +202,7 @@ def main(smoke: bool = False) -> List[str]:
                      f"slowdown{wall_c / local_wall:.1f}x"))
 
     # ---------------- (d) deep lake streaming
-    s3b = dl.SimulatedS3Provider(time_scale=TIME_SCALE, latency_s=LAT,
-                                 bandwidth_bps=BW)
-    build_lake(images, codec="quant8", storage=s3b, chunk_mb=2)
-    s3b.reset_stats()
-    dsr = dl.Dataset(dl.chain(dl.MemoryProvider(), s3b,
-                              capacity_bytes=64 << 20))
-    loader = dsr.dataloader(batch_size=BATCH, shuffle=True, num_workers=8,
-                            drop_last=True)
-
-    def lake_batches():
-        while True:
-            for b in loader:
-                yield b["images"], b["labels"]
-
-    params, step = _train_step_fn()
-    compute = _consume(params, step, lake_batches(), steps=steps)
+    compute, s3b, loader = _deeplake_run(images, steps)
     # chunked fetch overlaps compute through the prefetch queue: the critical
     # path is max(compute, per-connection IO), plus residual handoff
     wall_d = max(compute, s3b.stats["sim_seconds"] / 8) \
@@ -219,7 +236,60 @@ def main(smoke: bool = False) -> List[str]:
             f"steady-state stall {stall_d:.3f}s exceeds gate {limit:.3f}s "
             f"(budget {STALL_BUDGET_S}s, baseline {baseline})")
 
+    # stall attribution: decompose the simulated stall into exhaustive,
+    # non-overlapping causes from the provider's per-cause sim partition
+    # (demand-fetch wait, retry/hedge/fault overhead, decode, prefetch
+    # eviction).  The partition invariant and the causes-sum-to-total
+    # invariant are both gated here in smoke AND re-checked structurally
+    # by `io_report --validate`.
+    from repro.core import telemetry
+
+    sim_part = telemetry.sim_cause_partition(s3b.stats)
+    part_sum = sum(sim_part.values())
+    stall_attr = telemetry.attribute_stall(
+        sim_part, compute, parallelism=8,
+        decode_s=loader.stats.decode_seconds / 8)
+    lines.append(row(
+        "fig6_stall_attribution", stall_attr["total_s"] * 1e6,
+        "_".join(f"{k[:-2]}{stall_attr[k]:.3f}"
+                 for k in telemetry.STALL_CAUSE_KEYS)))
+    if smoke:
+        assert abs(part_sum - s3b.stats["sim_seconds"]) <= \
+            0.01 * s3b.stats["sim_seconds"] + 1e-6, (
+            f"sim cause partition {part_sum:.6f}s != "
+            f"sim_seconds {s3b.stats['sim_seconds']:.6f}s")
+        causes = sum(v for k, v in stall_attr.items() if k != "total_s")
+        assert abs(causes - stall_attr["total_s"]) <= \
+            0.05 * abs(stall_attr["total_s"]) + 1e-6, (
+            f"stall causes sum {causes:.6f}s != total "
+            f"{stall_attr['total_s']:.6f}s")
+
+    # traced re-run: the tracing layer must not perturb the measured IO —
+    # the traced run's simulated seconds must match the untraced run within
+    # 5% (deterministic cost model; only the span bookkeeping differs).
+    # Runs in smoke (gate) or when a trace artifact was requested.
+    if smoke or trace_out:
+        with telemetry.tracing() as tr:
+            compute_t, s3t, loader_t = _deeplake_run(images, steps)
+        sim_u = s3b.stats["sim_seconds"]
+        sim_t = s3t.stats["sim_seconds"]
+        lines.append(row("fig6_trace_overhead", abs(sim_t - sim_u) * 1e6,
+                         f"untraced{sim_u:.3f}s_traced{sim_t:.3f}s_"
+                         f"spans{len(tr.events())}"))
+        if smoke:
+            assert abs(sim_t - sim_u) <= max(TRACE_OVERHEAD_TOL * sim_u,
+                                             TRACE_OVERHEAD_FLOOR_S), (
+                f"traced sim {sim_t:.3f}s deviates from untraced "
+                f"{sim_u:.3f}s beyond {TRACE_OVERHEAD_TOL:.0%}")
+            assert tr.count("scan.group") > 0, \
+                "traced run produced no scan.group spans"
+        if trace_out:
+            tr.write_chrome(trace_out)
+            lines.append(row("fig6_trace_artifact", len(tr.events()),
+                             trace_out))
+
     io_report.record("fig6_streaming_train", {
+        "stall_attribution": stall_attr,
         "s3_filemode": filemode_stats,
         "s3_fastfile": fastfile_stats,
         "deeplake_stream": lake_stats,
@@ -230,7 +300,10 @@ def main(smoke: bool = False) -> List[str]:
         "loader": {"io_requests": loader.stats.io_requests,
                    "bytes_fetched": loader.stats.bytes_fetched,
                    "samples": loader.stats.samples,
-                   "wait_seconds": loader.stats.wait_seconds},
+                   "wait_seconds": loader.stats.wait_seconds,
+                   # consumer-side wait decomposition (sums to wait_seconds)
+                   **{f"stall_{k}_s": v
+                      for k, v in loader.stats.stall_by_cause.items()}},
     })
     return lines
 
@@ -238,4 +311,8 @@ def main(smoke: bool = False) -> List[str]:
 if __name__ == "__main__":
     import sys
 
-    print("\n".join(main(smoke="--smoke" in sys.argv[1:])))
+    argv = sys.argv[1:]
+    out = None
+    if "--trace-out" in argv:
+        out = argv[argv.index("--trace-out") + 1]
+    print("\n".join(main(smoke="--smoke" in argv, trace_out=out)))

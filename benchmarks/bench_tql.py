@@ -258,12 +258,15 @@ def _bench_sparse_coalescing() -> List[str]:
     engine = fetch.engine_for(s3)
     rows_idx = [i + d for i in range(0, 2000, 40) for d in (0, 1)]
     s3.reset_stats()
-    eng_before = dict(engine.stats)
+    # locked snapshot, not dict(engine.stats): the engine's prefetch worker
+    # may be mutating the stats dict concurrently
+    eng_before = engine.stats_snapshot()
     with Timer() as t:
         out = remote.v.read_batch(rows_idx)
     assert len(out) == len(rows_idx)
     stats = io_report.provider_snapshot(s3)
-    eng_delta = {k: engine.stats[k] - eng_before.get(k, 0)
+    eng_after = engine.stats_snapshot()
+    eng_delta = {k: eng_after[k] - eng_before.get(k, 0)
                  for k in ("requests", "ranges")}
     # the engine pre-merges adjacent sample ranges, so the provider sees
     # fewer physical spans than the engine saw logical ranges — exactly

@@ -28,6 +28,18 @@ recorded zeros for sections whose stats had already been reset.  The
 snapshot copies every numeric counter the provider exposes, so new
 provider stats (``batched_ranges``, ``cas_requests``, ...) appear in
 ``BENCH_io.json`` automatically.
+
+Since the telemetry PR this function is a thin alias for
+:func:`repro.core.telemetry.provider_snapshot` — the registry-backed
+unified snapshot every bench shares (provider keys verbatim, engine keys
+``engine_``-prefixed; historical key names unchanged).  Process-wide
+counters that are not tied to one provider (``commit_*``,
+``storage_wasted_upload_bytes``) live in
+``repro.core.telemetry.registry().snapshot()``.
+
+``validate`` additionally checks the ``stall_attribution`` section the
+fig6 bench records: every cause a number, and the causes summing to
+``total_s`` within 5% (+1e-6 absolute slack for zero-stall runs).
 """
 
 from __future__ import annotations
@@ -52,13 +64,12 @@ def provider_snapshot(provider) -> Dict[str, float]:
 
     Take it right after the measured section, before the provider is
     reused or ``reset_stats()`` runs; the copy is safe to record later.
+
+    Delegates to the unified registry-backed snapshot in
+    :mod:`repro.core.telemetry` so every bench shares one API.
     """
-    out = {k: v for k, v in provider.stats.items()
-           if isinstance(v, (int, float)) and not isinstance(v, bool)}
-    from repro.core import fetch as fetchlib
-    for k, v in fetchlib.engine_stats_for(provider).items():
-        out[f"engine_{k}"] = v
-    return out
+    from repro.core import telemetry
+    return telemetry.provider_snapshot(provider)
 
 
 def record(bench: str, datapoint: Dict[str, dict], path: str = PATH) -> None:
@@ -99,6 +110,28 @@ def _leaf_errors(prefix: str, value) -> List[str]:
     return []
 
 
+#: attribution-completeness tolerance: causes must sum to total_s within
+#: this relative fraction (plus a tiny absolute slack for ~zero stalls)
+STALL_ATTRIBUTION_TOL = 0.05
+
+
+def _stall_attribution_errors(name: str, i: int, sa) -> List[str]:
+    prefix = f"{name}[{i}].stall_attribution"
+    if not isinstance(sa, dict):
+        return [f"{prefix}: expected object, got {type(sa).__name__}"]
+    errs = _leaf_errors(prefix, sa)
+    if errs:
+        return errs
+    total = sa.get("total_s")
+    if not isinstance(total, (int, float)):
+        return [f"{prefix}: missing numeric 'total_s'"]
+    causes = sum(v for k, v in sa.items() if k != "total_s")
+    if abs(causes - total) > STALL_ATTRIBUTION_TOL * abs(total) + 1e-6:
+        return [f"{prefix}: causes sum to {causes:.6f} but total_s is "
+                f"{total:.6f} (tolerance {STALL_ATTRIBUTION_TOL:.0%})"]
+    return []
+
+
 def validate(path: str = PATH) -> List[str]:
     """Structural checks; returns a list of human-readable errors."""
     if not os.path.exists(path):
@@ -128,7 +161,16 @@ def validate(path: str = PATH) -> List[str]:
             for k, v in entry.items():
                 if k == "ts":
                     continue
+                if k == "stall_attribution":
+                    errors.extend(_stall_attribution_errors(name, i, v))
+                    continue
                 errors.extend(_leaf_errors(f"{name}[{i}].{k}", v))
+        # the fig6 bench must carry the stall-attribution section going
+        # forward: require it on the newest entry (older history may predate
+        # the telemetry layer)
+        if name == "fig6_streaming_train" and isinstance(hist[-1], dict) \
+                and "stall_attribution" not in hist[-1]:
+            errors.append(f"{name}[-1]: missing 'stall_attribution' section")
     return errors
 
 

@@ -10,7 +10,11 @@
 # and the write plane: 4 concurrent committers under injected put/cas
 # faults with zero lost appends, byte-parity vs a serial run, zero
 # stranded chunk bytes, and wasted uploads == 0 on non-overlapping
-# contention) + BENCH_io.json validation + no-tracked-bytecode guard.
+# contention, plus traced fetch.retry/fetch.hedge/commit.rebase spans)
+# + telemetry gates (fig6 stall-attribution causes sum to total, traced
+# run's sim seconds within 5% of untraced, Chrome trace artifact is
+# well-formed with scan.group spans) + BENCH_io.json validation (incl.
+# the stall_attribution section) + no-tracked-bytecode guard.
 # Usage: scripts/check.sh  (from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -33,8 +37,27 @@ python -m benchmarks.bench_tql --smoke
 echo "== cold-open budget + maintenance smoke =="
 python -m benchmarks.bench_maintenance --smoke
 
-echo "== fig6 streaming smoke (stall-seconds budget) =="
-python -m benchmarks.bench_fig6_streaming_train --smoke
+echo "== fig6 streaming smoke (stall budget + attribution + tracing overhead) =="
+TRACE_OUT="${TMPDIR:-/tmp}/repro_fig6_trace.json"
+python -m benchmarks.bench_fig6_streaming_train --smoke --trace-out "$TRACE_OUT"
+
+echo "== fig6 trace artifact: well-formed Chrome trace with scan spans =="
+python - "$TRACE_OUT" <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    doc = json.load(f)
+events = doc["traceEvents"]
+assert events, "trace has no events"
+spans = [e for e in events if e.get("ph") == "X"]
+assert spans, "trace has no complete ('X') spans"
+for e in spans:
+    for k in ("name", "cat", "ts", "dur", "tid", "pid"):
+        assert k in e, f"span missing {k!r}: {e}"
+assert any(e["name"].startswith("scan.group") for e in spans), \
+    "trace contains no scan.group spans"
+print(f"trace ok: {len(spans)} spans, "
+      f"{len({e['name'].split('[')[0] for e in spans})} distinct names")
+EOF
 
 echo "== chaos smoke (hostile-storage parity + amplification + write-chaos gates) =="
 python -m benchmarks.bench_chaos --smoke

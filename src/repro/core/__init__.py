@@ -1,6 +1,7 @@
 """Deep Lake core: the paper's contribution (storage format C1, version
 control C2, TQL C3, materialization C4, streaming dataloader C5)."""
 
+from . import telemetry
 from .chunk_encoder import ChunkEncoder
 from .chunks import ChunkBuilder, parse_header, read_all_samples
 from .codecs import available as available_codecs, get_codec
@@ -16,6 +17,8 @@ from .storage import (FaultPolicy, LocalProvider, LRUCacheProvider,
                       TornReadError, TornWriteError, TransientStorageError,
                       chain, coalesce_ranges, retry_transient,
                       storage_from_path)
+from .telemetry import (MetricsRegistry, Tracer, attribute_stall,
+                        provider_snapshot, tracing)
 from .tensor import Tensor, TensorMeta
 from .version_control import CommitContendedError, VersionControl
 from .views import DatasetView, TensorView
@@ -25,13 +28,14 @@ __all__ = [
     "DatasetView", "FaultPolicy",
     "FetchEngine", "Group", "LRUCacheProvider", "LocalProvider",
     "MaintenanceReport", "MaintenanceRunner", "Manifest", "ManifestConflict",
-    "MemoryProvider", "MergeConflict", "RetryExhausted", "RetryPolicy",
+    "MemoryProvider", "MergeConflict", "MetricsRegistry", "RetryExhausted",
+    "RetryPolicy",
     "SimulatedS3Provider", "StorageError", "StorageProvider",
     "StorageTimeout", "Tensor", "TensorMeta", "TensorView", "TornReadError",
-    "TornWriteError", "TransientStorageError", "VersionControl",
-    "available_codecs",
+    "TornWriteError", "Tracer", "TransientStorageError", "VersionControl",
+    "attribute_stall", "available_codecs",
     "available_htypes", "chain", "coalesce_ranges", "coalescing_disabled",
     "coalescing_enabled", "dataset", "empty_like", "engine_for", "get_codec",
-    "get_htype", "parse_htype", "read_all_samples", "retry_transient",
-    "storage_from_path",
+    "get_htype", "parse_htype", "provider_snapshot", "read_all_samples",
+    "retry_transient", "storage_from_path", "telemetry", "tracing",
 ]

@@ -47,12 +47,14 @@ import queue
 import threading
 import time
 from collections import defaultdict
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
 
 import numpy as np
 
 from . import fetch as fetchlib
+from . import telemetry
 from .pipeline import ScanPipeline, derive_schedule_params
 from .scheduler import CostModel, MemoryBudget, SmartScheduler
 from .views import DatasetView
@@ -72,6 +74,10 @@ class LoaderStats:
     fetch_seconds: float = 0.0
     decode_seconds: float = 0.0
     wait_seconds: float = 0.0   # consumer blocked on pipeline
+    # wait_seconds partitioned by what the workers were doing when the
+    # consumer blocked (fetch | decode | buffer_full): values always sum
+    # exactly to wait_seconds (same timing measurement, one cause each)
+    stall_by_cause: Dict[str, float] = field(default_factory=dict)
     wall_seconds: float = 0.0
     # data-skipping accounting, inherited from the view's TQL scan plan:
     # rows/chunks the planner proved dead, so this loader never fetches them
@@ -143,6 +149,10 @@ class DeepLakeLoader:
         self.stats = LoaderStats()
         self._engine = fetchlib.engine_for(view.dataset.storage)
         self._epoch = 0
+        # live worker-phase occupancy, sampled when the consumer blocks to
+        # attribute that stall to a cause (fetch | decode | buffer_full)
+        self._phase_lock = threading.Lock()
+        self._phases = {"fetch": 0, "decode": 0, "buffer_full": 0}
         for t in self.tensor_names:
             if t not in view.tensor_names:
                 raise KeyError(f"loader tensor {t!r} not in view")
@@ -215,6 +225,30 @@ class DeepLakeLoader:
         return (unit_size if unit_size is not None else d_us,
                 pf_units if pf_units is not None else d_pf)
 
+    @contextmanager
+    def _phase(self, name: str) -> Iterator[None]:
+        with self._phase_lock:
+            self._phases[name] += 1
+        try:
+            yield
+        finally:
+            with self._phase_lock:
+                self._phases[name] -= 1
+
+    def _stall_cause(self) -> str:
+        """What the worker pool is doing right now — the cause charged to a
+        consumer stall that starts at this instant.  Priority: a worker
+        blocked on the memory budget dominates (the buffer, not I/O, is the
+        ceiling); otherwise decoding only counts when nothing is fetching;
+        the default is ``fetch`` (workers idle-waiting on I/O or the
+        scheduler)."""
+        with self._phase_lock:
+            if self._phases["buffer_full"]:
+                return "buffer_full"
+            if self._phases["decode"] and not self._phases["fetch"]:
+                return "decode"
+            return "fetch"
+
     def _account_prefetch(self, nbytes: int) -> None:
         """Physical fetches the pipeline's prefetch window caused are
         attributed to this loader's stats (never dedup'd re-requests)."""
@@ -246,23 +280,26 @@ class DeepLakeLoader:
                               "requests": 0}
         faults_before = self._engine.fault_events()
         gidxs = [int(self.view.indices[p]) for p in unit.positions]
-        for name in self.tensor_names:
-            if name in self.view.derived:
-                for p in unit.positions:
-                    out[p][name] = self.view.derived[name][p]
-                continue
-            tensor = self.view._base_tensor(name)
-            vals = tensor.read_batch(gidxs, ranged=self.ranged_reads,
-                                     io_stats=io)
-            for p, v in zip(unit.positions, vals):
-                out[p][name] = v
+        with self._phase("fetch"), \
+                telemetry.gspan(unit.index, "fetch", rows=len(unit.positions)):
+            for name in self.tensor_names:
+                if name in self.view.derived:
+                    for p in unit.positions:
+                        out[p][name] = self.view.derived[name][p]
+                    continue
+                tensor = self.view._base_tensor(name)
+                vals = tensor.read_batch(gidxs, ranged=self.ranged_reads,
+                                         io_stats=io)
+                for p, v in zip(unit.positions, vals):
+                    out[p][name] = v
         t2 = time.perf_counter()
         result = []
-        for p in unit.positions:
-            sample = out[p]
-            if self.transform is not None:
-                sample = self.transform(sample)
-            result.append((p, sample))
+        with self._phase("decode"), telemetry.gspan(unit.index, "decode"):
+            for p in unit.positions:
+                sample = out[p]
+                if self.transform is not None:
+                    sample = self.transform(sample)
+                result.append((p, sample))
         t_io = io["io_s"]
         t_cpu = io["cpu_s"] + time.perf_counter() - t2
         # a unit whose reads hit injected faults / retries / hedges carries
@@ -320,7 +357,10 @@ class DeepLakeLoader:
                 if stop.is_set():
                     inflight.release()
                     break
-                if not self.memory.acquire(est_bytes * len(u.positions), timeout=30):
+                with self._phase("buffer_full"):
+                    got = self.memory.acquire(est_bytes * len(u.positions),
+                                              timeout=30)
+                if not got:
                     # budget still saturated after the timeout: hand the
                     # unit back to the scheduler so it is retried, never
                     # dropped (a lost unit hangs sequential iteration on
@@ -353,10 +393,20 @@ class DeepLakeLoader:
         def drain_one(block: bool) -> bool:
             """Move one completed unit into the emission buffers."""
             nonlocal emitted
+            # sample the worker pool's phase BEFORE blocking: that is the
+            # cause this stall is charged to (exactly one per wait, so
+            # stall_by_cause always sums to wait_seconds)
+            cause = self._stall_cause()
+            sp = telemetry.span("loader.stall", cause=cause) if block \
+                else telemetry.null_span()
             try:
-                t0 = time.perf_counter()
-                item = ready.get(timeout=60 if block else 0.001)
-                self.stats.wait_seconds += time.perf_counter() - t0
+                with sp:
+                    t0 = time.perf_counter()
+                    item = ready.get(timeout=60 if block else 0.001)
+                waited = time.perf_counter() - t0
+                self.stats.wait_seconds += waited
+                self.stats.stall_by_cause[cause] = \
+                    self.stats.stall_by_cause.get(cause, 0.0) + waited
             except queue.Empty:
                 return False
             if isinstance(item, Exception):

@@ -95,6 +95,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..distributed.fault_tolerance import StragglerDetector
+from . import telemetry
 from .scheduler import CostModel
 from .storage import (LRUCacheProvider, Range, RetryExhausted, StorageError,
                       StorageProvider, TransientStorageError, coalesce_ranges,
@@ -316,6 +317,17 @@ class FetchEngine:
             raise RuntimeError("storage provider was garbage-collected")
         return p
 
+    def stats_snapshot(self) -> Dict[str, int]:
+        """Consistent point-in-time copy of :attr:`stats`.
+
+        Every mutation of the stats dict happens under ``self._lock``, so
+        copying under the same lock can never observe a torn multi-key
+        update (e.g. ``requests`` incremented but ``bytes`` not yet) the
+        way iterating the live dict from another thread could.
+        """
+        with self._lock:
+            return dict(self.stats)
+
     # ------------------------------------------------------- resident blobs
     def resident(self, key: str) -> Optional[bytes]:
         """Fully-fetched blob for ``key`` if one is parked here (no I/O).
@@ -486,7 +498,14 @@ class FetchEngine:
             if cancelled is not None and cancelled.is_set():
                 raise CancelledError()
             try:
-                out = fn()
+                if i == 0:
+                    out = fn()
+                else:
+                    # retried attempts get their own span and IO cause so
+                    # their sim charges land in the "retry" stall bucket
+                    with telemetry.span("fetch.retry", key=key, attempt=i), \
+                            telemetry.io_cause("retry"):
+                        out = fn()
                 with self._lock:
                     self._note_attempt(False)
                 return out, i == 0
@@ -725,7 +744,10 @@ class FetchEngine:
 
         def work() -> bytes:
             t0 = time.perf_counter()
-            blob, clean = self._hedged_get(key)
+            # tag the pool thread so provider charges (and any non-hedged
+            # _issue attempts) land in the "prefetch" stall bucket
+            with telemetry.io_cause("prefetch"):
+                blob, clean = self._hedged_get(key)
             wall = time.perf_counter() - t0
             self._observe(1, 0, len(blob), wall, clean=clean)
             if clean:
@@ -793,10 +815,17 @@ class FetchEngine:
         cancel = threading.Event()
         state = {"winner": None, "blob": None, "first_try": False,
                  "done": 0, "errors": []}
+        # the IO cause is thread-local and the arms run on fresh threads,
+        # so capture the caller's cause here and re-tag explicitly: the
+        # primary arm keeps it, the hedge arm charges the "hedge" bucket
+        caller_cause = telemetry.current_io_cause()
 
         def arm(tag: str) -> None:
             try:
-                blob, first_try = self._issue(fn, key=key, cancelled=cancel)
+                cause = "hedge" if tag == "hedge" else caller_cause
+                with telemetry.io_cause(cause):
+                    blob, first_try = self._issue(fn, key=key,
+                                                  cancelled=cancel)
             except BaseException as e:  # noqa: BLE001 - relayed to waiter
                 with cond:
                     state["done"] += 1
@@ -832,7 +861,9 @@ class FetchEngine:
             arms = 2
             threading.Thread(target=arm, args=("hedge",), daemon=True,
                              name="fetch-hedge-dup").start()
-        with cond:
+        hedge_span = telemetry.span("fetch.hedge", key=key) if arms == 2 \
+            else telemetry.null_span()
+        with hedge_span, cond:
             cond.wait_for(lambda: state["winner"] is not None
                           or state["done"] >= arms)
         if state["winner"] is None:
@@ -892,7 +923,9 @@ def engine_stats_for(provider: StorageProvider) -> Dict[str, int]:
         p: Optional[StorageProvider] = top
         while isinstance(p, StorageProvider):
             if p is provider:
-                for k, v in eng.stats.items():
+                # locked snapshot, not the live dict: worker/prefetch
+                # threads mutate stats concurrently
+                for k, v in eng.stats_snapshot().items():
                     out[k] = out.get(k, 0) + int(v)
                 break
             p = getattr(p, "base", None)

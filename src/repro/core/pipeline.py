@@ -44,6 +44,7 @@ from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
 import numpy as np
 
 from . import fetch as fetchlib
+from . import telemetry
 from .chunks import ChunkStats
 from .manifest import ColumnStats
 from .scheduler import CostModel
@@ -296,8 +297,12 @@ class ScanPipeline:
         try:
             for gi, positions in enumerate(self._groups):
                 if self._window is not None:
-                    self._window.top_up(gi + 1)  # group k decodes, k+1 flies
-                yield positions, self.view[positions]
+                    with telemetry.gspan(gi + 1, "prefetch"):
+                        self._window.top_up(gi + 1)  # k decodes, k+1 flies
+                # the deliver span covers the consumer's evaluation of the
+                # yielded group (decode + predicate work happen there)
+                with telemetry.gspan(gi, "deliver", rows=len(positions)):
+                    yield positions, self.view[positions]
                 if self._window is not None:
                     self._window.release(gi)
         finally:

@@ -86,6 +86,8 @@ from dataclasses import dataclass
 from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
 
+from . import telemetry
+
 try:  # POSIX-only; LocalProvider.cas falls back to a process lock without it
     import fcntl
 except ImportError:  # pragma: no cover - non-POSIX platforms
@@ -663,6 +665,19 @@ class SimulatedS3Provider(StorageProvider):
             "bytes_up": 0,
             "wasted_upload_bytes": 0,  # bytes charged by faulted uploads
             "sim_seconds": 0.0,
+            # per-cause partition of sim_seconds (stall attribution):
+            # invariant sum(sim_s_*) == sim_seconds.  The read cause comes
+            # from the issuing thread's telemetry.io_cause() tag; uploads
+            # default to "write", metadata probes to "meta", and injected-
+            # fault surcharges (wasted round-trips, straggle overtime) land
+            # in "fault" regardless of the ambient cause.
+            "sim_s_demand": 0.0,
+            "sim_s_prefetch": 0.0,
+            "sim_s_retry": 0.0,
+            "sim_s_hedge": 0.0,
+            "sim_s_fault": 0.0,
+            "sim_s_write": 0.0,
+            "sim_s_meta": 0.0,
             "faults_injected": 0,     # total injected faults (all kinds)
             "faults_timeout": 0,
             "faults_5xx": 0,
@@ -675,12 +690,23 @@ class SimulatedS3Provider(StorageProvider):
 
     # -- cost model --------------------------------------------------------
     def _charge(self, nbytes: int, *, upload: bool = False,
-                extra_sim: float = 0.0) -> None:
-        sim = self.latency_s + nbytes / self.bandwidth_bps + extra_sim
+                extra_sim: float = 0.0, fault_sim: float = 0.0,
+                cause: Optional[str] = None) -> None:
+        """Charge one round-trip.  ``extra_sim`` rides the main cause bucket;
+        ``fault_sim`` (straggle overtime) is booked to the ``fault`` bucket
+        so sum(sim_s_*) stays an exact partition of sim_seconds."""
+        sim = self.latency_s + nbytes / self.bandwidth_bps + extra_sim \
+            + fault_sim
+        if cause is None:
+            cause = "write" if upload else telemetry.current_io_cause()
+        bucket = "sim_s_" + cause
         with self._lock:
             self.stats["requests"] += 1
             self.stats["bytes_up" if upload else "bytes_down"] += nbytes
             self.stats["sim_seconds"] += sim
+            self.stats[bucket] = self.stats.get(bucket, 0.0) + (sim - fault_sim)
+            if fault_sim:
+                self.stats["sim_s_fault"] += fault_sim
         if self.time_scale > 0:
             time.sleep(sim * self.time_scale)
 
@@ -704,7 +730,7 @@ class SimulatedS3Provider(StorageProvider):
         # hard fault: the aborted round-trip is still a charged request
         wasted = self.latency_s * (fp.timeout_factor if kind == "timeout"
                                    else 1.0)
-        self._charge(0, extra_sim=wasted - self.latency_s)
+        self._charge(0, extra_sim=wasted - self.latency_s, cause="fault")
         if kind == "timeout":
             raise StorageTimeout(f"injected timeout reading {key!r}")
         if kind == "torn":
@@ -714,21 +740,21 @@ class SimulatedS3Provider(StorageProvider):
     def reset_stats(self) -> None:
         with self._lock:
             for k in self.stats:
-                self.stats[k] = 0 if k != "sim_seconds" else 0.0
+                self.stats[k] = 0.0 if k.startswith("sim_") else 0
 
     # -- protocol ----------------------------------------------------------
     def get(self, key: str) -> bytes:
         with self._sem:
             extra = self._maybe_fault(key)
             data = self.base.get(key)
-            self._charge(len(data), extra_sim=extra)
+            self._charge(len(data), fault_sim=extra)
             return data
 
     def get_range(self, key: str, start: int, end: int) -> bytes:
         with self._sem:
             extra = self._maybe_fault(key)
             data = self.base.get_range(key, start, end)
-            self._charge(len(data), extra_sim=extra)
+            self._charge(len(data), fault_sim=extra)
             with self._lock:
                 self.stats["ranged_requests"] += 1
             return data
@@ -751,7 +777,7 @@ class SimulatedS3Provider(StorageProvider):
             for s, e in spans:
                 extra = self._maybe_fault(key)  # per physical span
                 data = self.base.get_range(key, s, e)
-                self._charge(len(data), extra_sim=extra)
+                self._charge(len(data), fault_sim=extra)
                 with self._lock:
                     self.stats["ranged_requests"] += 1
                     self.stats["coalesced_requests"] += 1
@@ -776,6 +802,8 @@ class SimulatedS3Provider(StorageProvider):
                 self.stats["faults_injected"] += 1
                 self.stats["faults_put_" + kind] += 1
                 self.stats["wasted_upload_bytes"] += len(data)
+            telemetry.registry().counter(
+                "storage.wasted_upload_bytes").inc(len(data))
             if kind == "5xx":
                 raise TransientStorageError(
                     f"injected 503 SlowDown uploading {key!r}")
@@ -813,6 +841,8 @@ class SimulatedS3Provider(StorageProvider):
                     self.stats["faults_injected"] += 1
                     self.stats["faults_cas_5xx"] += 1
                     self.stats["wasted_upload_bytes"] += len(data)
+                telemetry.registry().counter(
+                    "storage.wasted_upload_bytes").inc(len(data))
                 raise TransientStorageError(
                     f"injected 503 on conditional put of {key!r}")
             ok = self.base.cas(key, data, expected)
@@ -823,27 +853,27 @@ class SimulatedS3Provider(StorageProvider):
 
     def delete(self, key: str) -> None:
         with self._sem:
-            self._charge(0)
+            self._charge(0, cause="meta")
             self.base.delete(key)
 
     def exists(self, key: str) -> bool:
         # HEAD-style metadata probe: zero payload, full round-trip latency
         with self._sem:
-            self._charge(0)
+            self._charge(0, cause="meta")
             with self._lock:
                 self.stats["meta_requests"] += 1
             return self.base.exists(key)
 
     def list_keys(self, prefix: str = "") -> List[str]:
         with self._sem:
-            self._charge(0)
+            self._charge(0, cause="meta")
             with self._lock:
                 self.stats["meta_requests"] += 1
             return self.base.list_keys(prefix)
 
     def num_bytes(self, key: str) -> int:
         with self._sem:
-            self._charge(0)
+            self._charge(0, cause="meta")
             with self._lock:
                 self.stats["meta_requests"] += 1
             return self.base.num_bytes(key)

@@ -52,6 +52,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .. import telemetry
 from ..chunks import _hi_bound, _lo_bound
 from ..pipeline import ScanPipeline
 from ..views import DatasetView
@@ -517,24 +518,37 @@ class Executor:
         # WHERE ------------------------------------------------------------
         if q.where is not None:
             if len(view):
-                plan = plan_where(view, q.where) if self.use_stats else None
-                self.scan_plan = plan
-                if plan is not None and plan.effective:
-                    # stats pushdown: pruned chunks are never fetched; only
-                    # 'verify' rows pay predicate evaluation, streamed per
-                    # chunk group in verdict order on the scan pipeline
-                    parts = [plan.sure]
-                    if len(plan.verify):
-                        sub = view[plan.verify]
-                        keep = self._where_mask(sub, q.where)
-                        parts.append(plan.verify[np.nonzero(keep)[0]])
-                    view = view[np.sort(np.concatenate(parts)).astype(np.int64)]
-                else:
-                    keep = self._where_mask(view, q.where)
-                    view = view[np.nonzero(keep)[0]]
+                with telemetry.span("query.plan") as plan_sp:
+                    plan = plan_where(view, q.where) if self.use_stats \
+                        else None
+                    self.scan_plan = plan
+                    if plan is not None:
+                        plan_sp.set(effective=int(plan.effective),
+                                    **{k: v for k, v in plan.report().items()
+                                       if isinstance(v, (int, float))})
+                with telemetry.span("query.where"):
+                    if plan is not None and plan.effective:
+                        # stats pushdown: pruned chunks are never fetched;
+                        # only 'verify' rows pay predicate evaluation,
+                        # streamed per chunk group in verdict order on the
+                        # scan pipeline
+                        parts = [plan.sure]
+                        if len(plan.verify):
+                            sub = view[plan.verify]
+                            keep = self._where_mask(sub, q.where)
+                            parts.append(plan.verify[np.nonzero(keep)[0]])
+                        view = view[np.sort(
+                            np.concatenate(parts)).astype(np.int64)]
+                    else:
+                        keep = self._where_mask(view, q.where)
+                        view = view[np.nonzero(keep)[0]]
         # ORDER BY ----------------------------------------------------------
         if q.order_by is not None and len(view):
-            topk = self._order_limit_topk(view, q)
+            with telemetry.span("query.topk") as topk_sp:
+                topk = self._order_limit_topk(view, q)
+                if self.topk_plan is not None:
+                    topk_sp.set(**{k: v for k, v in self.topk_plan.items()
+                                   if isinstance(v, (int, float))})
             if topk is not None:
                 # ORDER BY + LIMIT/OFFSET fully applied by the top-k plan
                 view = topk

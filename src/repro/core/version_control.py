@@ -68,6 +68,7 @@ from typing import Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from . import manifest as manifestlib
+from . import telemetry
 from .chunk_encoder import ChunkEncoder, ChunkStatsTable
 from .storage import StorageError, StorageProvider
 
@@ -174,9 +175,12 @@ class VersionControl:
         # and per (tensor, name) the node a chunk was physically put under
         self._chunk_home_maps: Dict[Tuple[str, str], Dict[str, str]] = {}
         self._chunk_put_homes: Dict[Tuple[str, str], str] = {}
-        #: commit-path observability: rebases, relocations, grafted chunks
+        #: commit-path observability: rebases (either shape), cross-branch
+        #: adoptions, same-branch relocations, grafted chunks, contended
+        #: failures.  Mirrored into the process-wide telemetry registry
+        #: (``commit.*`` counters) so benches read one snapshot API.
         self.commit_stats: Dict[str, int] = {
-            "commits": 0, "rebases": 0, "relocations": 0,
+            "commits": 0, "rebases": 0, "adoptions": 0, "relocations": 0,
             "grafted_chunks": 0, "contended": 0}
         # read-through/write-through memo of state-file bytes per
         # (node, tensor, fname); None records an authoritative miss
@@ -527,8 +531,11 @@ class VersionControl:
             try:
                 if flush is not None:
                     flush()
-                sealed = self._commit_once(message)
+                with telemetry.span("commit.publish",
+                                    branch=self.current.branch):
+                    sealed = self._commit_once(message)
                 self.commit_stats["commits"] += 1
+                telemetry.registry().counter("commit.commits").inc()
                 return sealed
             except manifestlib.ManifestConflict as e:
                 if isinstance(e, CommitContendedError):
@@ -536,6 +543,7 @@ class VersionControl:
                 last = e
                 self._rebase_commit(e)
         self.commit_stats["contended"] += 1
+        telemetry.registry().counter("commit.contended").inc()
         raise CommitContendedError(
             f"commit gave up after {COMMIT_REBASE_ATTEMPTS} rebase "
             f"attempts on branch {self.current.branch!r}") from last
@@ -611,20 +619,26 @@ class VersionControl:
           :class:`CommitContendedError`.
         """
         self.commit_stats["rebases"] += 1
-        fresh = manifestlib.Manifest.load(self.storage)
-        if fresh is None or not fresh.vc_info:
-            raise cause  # nothing to rebase onto: surface the original
-        their_commits = {k: CommitNode.from_json(v)
-                         for k, v in fresh.vc_info["commits"].items()}
-        their_branches = dict(fresh.vc_info.get("branches", {}))
-        head_id = self.current_id
-        branch = self.current.branch
-        if their_branches.get(branch, head_id) == head_id:
-            self._adopt_tree(fresh, their_commits, their_branches,
-                             head_id=head_id, branch=branch)
-        else:
-            self._relocate_head(fresh, their_commits, their_branches,
-                                head_id=head_id, branch=branch, cause=cause)
+        telemetry.registry().counter("commit.rebases").inc()
+        with telemetry.span("commit.rebase",
+                            branch=self.current.branch) as sp:
+            fresh = manifestlib.Manifest.load(self.storage)
+            if fresh is None or not fresh.vc_info:
+                raise cause  # nothing to rebase onto: surface the original
+            their_commits = {k: CommitNode.from_json(v)
+                             for k, v in fresh.vc_info["commits"].items()}
+            their_branches = dict(fresh.vc_info.get("branches", {}))
+            head_id = self.current_id
+            branch = self.current.branch
+            if their_branches.get(branch, head_id) == head_id:
+                sp.set(shape="adopt")
+                self._adopt_tree(fresh, their_commits, their_branches,
+                                 head_id=head_id, branch=branch)
+            else:
+                sp.set(shape="relocate")
+                self._relocate_head(fresh, their_commits, their_branches,
+                                    head_id=head_id, branch=branch,
+                                    cause=cause)
 
     def _merge_trees(self, their_commits: Dict[str, CommitNode],
                      their_branches: Dict[str, str]
@@ -655,6 +669,8 @@ class VersionControl:
         self.branches = branches
         self.manifest = fresh
         self._saved_info = fresh.vc_info
+        self.commit_stats["adoptions"] += 1
+        telemetry.registry().counter("commit.adoptions").inc()
         # our head's cached state is still ours (nobody sealed it); every
         # other node's state is immutable, so no cache invalidation needed
 
@@ -697,6 +713,7 @@ class VersionControl:
         overlap = ours_touched & theirs_touched
         if overlap:
             self.commit_stats["contended"] += 1
+            telemetry.registry().counter("commit.contended").inc()
             raise CommitContendedError(
                 f"concurrent commits touched the same tensors "
                 f"{sorted(overlap)} on branch {branch!r}; exactly one "
@@ -773,6 +790,9 @@ class VersionControl:
                                x2.id)
         self.commit_stats["relocations"] += 1
         self.commit_stats["grafted_chunks"] += grafted
+        reg = telemetry.registry()
+        reg.counter("commit.relocations").inc()
+        reg.counter("commit.grafted_chunks").inc(grafted)
 
     def _copy_state(self, src_id: str, dst_id: str) -> None:
         """Copy small per-tensor state files; chunks stay where created."""

@@ -452,3 +452,46 @@ def test_loader_memory_timeout_resubmits_unit(monkeypatch):
     assert not err
     assert out == [i % 7 for i in range(64)]
     assert failed["n"] == 3
+
+
+# ------------------------------------------------------- stats snapshot
+def test_stats_snapshot_consistent_under_threads():
+    """`stats_snapshot` must never expose a torn view: every counter in a
+    snapshot reflects the same set of completed requests, so with unique
+    same-size full-object reads `bytes == requests * K` holds in EVERY
+    snapshot taken while reader threads are mutating the stats."""
+    K = 1024
+    n_threads, per_thread = 4, 60
+    mem = dl.MemoryProvider()
+    for i in range(n_threads * per_thread):
+        mem.put(f"blob/{i}", bytes(K))
+    engine = FetchEngine(mem)
+
+    stop = threading.Event()
+    bad: list = []
+
+    def reader(tid: int) -> None:
+        for j in range(per_thread):
+            engine.fetch_full(f"blob/{tid * per_thread + j}")
+
+    def observer() -> None:
+        while not stop.is_set():
+            s = engine.stats_snapshot()
+            if s["bytes"] != s["requests"] * K:
+                bad.append({k: s[k] for k in ("requests", "ranges", "bytes")})
+
+    obs = threading.Thread(target=observer)
+    readers = [threading.Thread(target=reader, args=(i,))
+               for i in range(n_threads)]
+    obs.start()
+    for t in readers:
+        t.start()
+    for t in readers:
+        t.join()
+    stop.set()
+    obs.join()
+
+    assert not bad, f"torn snapshots observed: {bad[:3]}"
+    final = engine.stats_snapshot()
+    assert final["requests"] == n_threads * per_thread
+    assert final["bytes"] == n_threads * per_thread * K
