@@ -278,11 +278,71 @@ def _bench_sparse_coalescing() -> List[str]:
         "adjacent ranges were not merged into shared spans"
     io_report.record("sparse_batch_read",
                      {"coalesced": stats, "engine": eng_delta})
-    return [row("tql_sparse_batch_read_s3", t.elapsed * 1e6,
-                f"req{stats['requests']}"
-                f"_coal{stats['coalesced_requests']}"
-                f"_ranges{eng_delta['ranges']}"
-                f"_down{stats['bytes_down']}")]
+    lines = [row("tql_sparse_batch_read_s3", t.elapsed * 1e6,
+                 f"req{stats['requests']}"
+                 f"_coal{stats['coalesced_requests']}"
+                 f"_ranges{eng_delta['ranges']}"
+                 f"_down{stats['bytes_down']}")]
+    lines.extend(_bench_tile_fanout())
+    return lines
+
+
+def _bench_tile_fanout() -> List[str]:
+    """Multi-object batching on the tiled-sample read path (PR-9).
+
+    A sample larger than ``max_chunk_size`` is stored as a fan-out of
+    tile chunks; reading it used to issue one GET per tile.  With
+    ``provider.get_many`` the whole fan-out goes out as ONE batched
+    round.  Gate: batching must cut the provider request count of the
+    per-object baseline by at least 3x, byte-identical samples.
+    """
+    from repro.core import fetch
+    from repro.core.storage import MemoryProvider, SimulatedS3Provider
+
+    from . import io_report
+
+    rng = np.random.default_rng(13)
+    base = MemoryProvider()
+    ds = dl.Dataset(base)
+    # ~576 KB samples over <=64 KB chunks: ~10-tile fan-out per read
+    ds.create_tensor("img", dtype="uint8", min_chunk_size=1 << 15,
+                     max_chunk_size=1 << 16)
+    expect = []
+    for _ in range(4):
+        a = rng.integers(0, 255, (768, 768), dtype=np.uint8)
+        expect.append(a)
+        ds.append({"img": a})
+    ds.commit("tile fixture")
+
+    lines, results = [], {}
+    for label, batched in (("tile_perobject", False),
+                           ("tile_batched", True)):
+        s3 = SimulatedS3Provider(base, time_scale=0.0)
+        remote = dl.Dataset(s3)
+        s3.reset_stats()
+        if batched:
+            with Timer() as t:
+                got = [remote.img.read(i) for i in range(4)]
+        else:
+            with fetch.coalescing_disabled(), Timer() as t:
+                got = [remote.img.read(i) for i in range(4)]
+        for a, b in zip(expect, got):
+            assert np.array_equal(a, b), "tiled read changed bytes"
+        stats = io_report.provider_snapshot(s3)
+        results[label] = stats
+        lines.append(row(f"tql_{label}_s3", t.elapsed * 1e6,
+                         f"req{stats['requests']}"
+                         f"_batched{stats['batched_objects']}"
+                         f"_down{stats['bytes_down']}"))
+    per, bat = results["tile_perobject"], results["tile_batched"]
+    assert bat["batched_objects"] > 0, "tile reads never used get_many"
+    assert bat["requests"] * 3 <= per["requests"], \
+        (f"tile batching gained <3x on requests: "
+         f"{per['requests']} -> {bat['requests']}")
+    io_report.record("tile_fanout", results)
+    lines.append(row("tql_tile_fanout_savings", 0.0,
+                     f"req{per['requests']}to{bat['requests']}"))
+    return lines
 
 
 if __name__ == "__main__":

@@ -11,6 +11,10 @@
 # faults with zero lost appends, byte-parity vs a serial run, zero
 # stranded chunk bytes, and wasted uploads == 0 on non-overlapping
 # contention, plus traced fetch.retry/fetch.hedge/commit.rebase spans)
+# + serving smoke (8-client same-query storm <= 2x one client's requests,
+# distinct-query storm sublinear, shard-parallel scan byte-parity,
+# repeat-query cache hit with zero planner work / zero requests, tracing
+# overhead <= 5% with serve.admit / serve.shard[k] spans in the artifact)
 # + telemetry gates (fig6 stall-attribution causes sum to total, traced
 # run's sim seconds within 5% of untraced, Chrome trace artifact is
 # well-formed with scan.group spans) + BENCH_io.json validation (incl.
@@ -61,6 +65,27 @@ EOF
 
 echo "== chaos smoke (hostile-storage parity + amplification + write-chaos gates) =="
 python -m benchmarks.bench_chaos --smoke
+
+echo "== serving smoke (N-client storms + shard parity + versioned cache) =="
+SERVE_TRACE="${TMPDIR:-/tmp}/repro_serving_trace.json"
+python -m benchmarks.bench_serving --smoke --trace-out "$SERVE_TRACE"
+
+echo "== serving trace artifact: serve.* spans present =="
+python - "$SERVE_TRACE" <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    doc = json.load(f)
+spans = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+assert spans, "serving trace has no complete spans"
+names = {e["name"] for e in spans}
+for want in ("serve.admit",):
+    assert any(n.startswith(want) for n in names), \
+        f"serving trace missing {want} spans"
+assert any(n.startswith("serve.shard[") for n in names), \
+    "serving trace missing serve.shard[k] spans"
+print(f"serving trace ok: {len(spans)} spans, "
+      f"{sum(n.startswith('serve.') for n in names)} serve.* names")
+EOF
 
 echo "== BENCH_io.json validation =="
 python -m benchmarks.io_report --validate

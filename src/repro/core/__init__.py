@@ -11,6 +11,7 @@ from .fetch import (FetchEngine, RetryPolicy, coalescing_disabled,
 from .htypes import available_htypes, get_htype, parse_htype
 from .maintenance import MaintenanceReport, MaintenanceRunner
 from .manifest import Manifest, ManifestConflict
+from .serving import CachedResult, QueryService
 from .storage import (FaultPolicy, LocalProvider, LRUCacheProvider,
                       MemoryProvider, RetryExhausted, SimulatedS3Provider,
                       StorageError, StorageProvider, StorageTimeout,
@@ -24,12 +25,13 @@ from .version_control import CommitContendedError, VersionControl
 from .views import DatasetView, TensorView
 
 __all__ = [
-    "ChunkBuilder", "ChunkEncoder", "CommitContendedError", "Dataset",
+    "CachedResult", "ChunkBuilder", "ChunkEncoder", "CommitContendedError",
+    "Dataset",
     "DatasetView", "FaultPolicy",
     "FetchEngine", "Group", "LRUCacheProvider", "LocalProvider",
     "MaintenanceReport", "MaintenanceRunner", "Manifest", "ManifestConflict",
-    "MemoryProvider", "MergeConflict", "MetricsRegistry", "RetryExhausted",
-    "RetryPolicy",
+    "MemoryProvider", "MergeConflict", "MetricsRegistry", "QueryService",
+    "RetryExhausted", "RetryPolicy",
     "SimulatedS3Provider", "StorageError", "StorageProvider",
     "StorageTimeout", "Tensor", "TensorMeta", "TensorView", "TornReadError",
     "TornWriteError", "Tracer", "TransientStorageError", "VersionControl",

@@ -6,7 +6,12 @@ Per epoch:
 
  1. **Plan** — view positions, shuffled chunk-group-wise: samples are
     grouped by the chunk (of the largest "primary" tensor) they live in; chunk
-    groups are visited in random order, samples shuffled within group.  Each
+    groups are visited in random order, samples shuffled within group.
+    Within each :data:`~DeepLakeLoader.WARM_WINDOW`-sized window of that
+    order, groups whose chunks are already resident or in flight on the
+    fetch engine are visited first (pipeline-aware shuffle; stats-neutral
+    ``has_blob`` probe) — the epoch-level sample distribution is unchanged
+    and a cold engine reduces to the exact seeded order.  Each
     chunk is therefore fetched ~once per epoch while the emission stream is
     still well mixed — the paper's "shuffled stream access ... without a
     separate shuffle cluster" (§3.5), with the sample-level shuffle buffer
@@ -201,12 +206,42 @@ class DeepLakeLoader:
             groups[enc.chunk_ord_of(int(self.view.indices[pos]))].append(pos)
         keys = list(groups)
         rng.shuffle(keys)
+        keys = self._warm_first(keys, primary)
         plan: List[int] = []
         for k in keys:
             g = groups[k]
             rng.shuffle(g)
             plan.extend(g)
         return plan
+
+    #: shuffle unit: chunk groups are reordered warm-first only within
+    #: windows of this many groups, so the visit order stays a local
+    #: permutation of the seeded shuffle
+    WARM_WINDOW = 8
+
+    def _warm_first(self, keys: List[int], primary: str) -> List[int]:
+        """Pipeline-aware shuffle: within each :data:`WARM_WINDOW`-sized
+        window of the seeded group order, visit chunk groups whose blobs
+        are already resident or in flight on the engine before cold ones
+        (stats-neutral :meth:`FetchEngine.has_blob` probe).  The epoch
+        still covers exactly the same groups and samples — only the order
+        *within* each window changes — and on a cold engine every probe
+        misses, so the reorder is the identity and the plan is exactly the
+        seeded ``seed + epoch`` shuffle (determinism baseline)."""
+        if len(keys) <= 1:
+            return keys
+        tensor = self.view._base_tensor(primary)
+        enc = tensor.encoder
+        out: List[int] = []
+        for i in range(0, len(keys), self.WARM_WINDOW):
+            window = keys[i: i + self.WARM_WINDOW]
+            # stable partition: warm groups first, seeded order preserved
+            # inside each class
+            out.extend(sorted(
+                window,
+                key=lambda k: not self._engine.has_blob(
+                    tensor._chunk_key(enc.name_of(k)))))
+        return out
 
     # ------------------------------------------------------------ scheduling
     def _schedule_params(self) -> tuple:

@@ -316,14 +316,17 @@ class Dataset:
 
     # ------------------------------------------------------------------ query
     def query(self, tql: str, engine: str = "auto", use_stats: bool = True,
-              stream: Optional[bool] = None):
+              stream: Optional[bool] = None, shards: Optional[int] = None,
+              tenant: Optional[str] = None):
         """Run a TQL query.  ``stream``: None = auto (WHERE evaluates per
         chunk group on the scan pipeline when the view spans several
         groups), False = whole-view column stack, True = force streaming.
-        Both modes return byte-identical result sets."""
+        ``shards`` > 1 runs the per-chunk-group scan shard-parallel.  All
+        modes return byte-identical result sets.  ``tenant`` tags the
+        scan's prefetches for the engine's fair scheduler."""
         from .tql import execute_query
         return execute_query(self, tql, engine=engine, use_stats=use_stats,
-                             stream=stream)
+                             stream=stream, shards=shards, tenant=tenant)
 
     def dataloader(self, **kw):
         from .dataloader import DeepLakeLoader

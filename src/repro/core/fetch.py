@@ -37,14 +37,46 @@ Writers must invalidate: any path that rewrites or deletes a chunk key
 :meth:`FetchEngine.discard` — ``Tensor._discard_cached`` covers every
 such site — or readers sharing the engine would see stale bytes.
 
-**Cancellation.**  Futures are owned by the issuing call: ``read_batch``
+**Multi-object batching.**  :meth:`fetch_many` (tile fan-outs, manifest
+segment prefetch) issues ONE ``provider.get_many`` round for all missing
+keys instead of a request per object — a 16-tile sample costs one
+round-trip, not 16.  The batched round is a single attempt: any transient
+falls back to the existing per-key retry loop, so the convergence
+guarantee (a transient on key N never forces re-reads of keys 1..N-1)
+is unchanged, at the cost of at most one wasted round per batch.
+``coalescing_disabled()`` also disables batching so benchmarks can
+record the per-object "before" datapoint.
+
+**Cancellation.**  Futures are owned by the issuing calls: ``read_batch``
 cancels its own lookahead future if decoding raises, and every
 :meth:`FetchEngine.prefetch` carries an *owner* token —
 ``DeepLakeLoader`` teardown calls ``cancel_pending(owner=loader)``,
 cancelling only its own queued-but-not-started prefetches and never a
-concurrent consumer's (engines are shared per provider).  A cancelled or
-failed in-flight future is never trusted by readers — they fall back to a
-direct synchronous fetch — so cancellation is always safe, merely wasteful.
+concurrent consumer's (engines are shared per provider).  A key wanted by
+several owners records ALL of them: dedup adds the caller's owner to the
+in-flight entry, and an owner-scoped cancel only cancels a future once
+*every* owner that asked for it has cancelled — one pipeline's teardown
+can never drop a blob another tenant's scan is waiting on.  A cancelled
+or failed in-flight future is never trusted by readers — they fall back
+to a direct synchronous fetch — so cancellation is always safe, merely
+wasteful.
+
+**Multi-tenant fairness.**  The serving tier admits many concurrent
+queries over one shared engine.  :meth:`register_tenant` gives each
+tenant an optional byte budget on the staging buffer; tenant-tagged
+prefetches (``prefetch(..., tenant=..., est_bytes=...)``) enter a
+per-tenant FIFO drained by a deficit-round-robin scheduler
+(:data:`DRR_QUANTUM` bytes of credit per tenant per cycle): a heavy
+scan's backlog queues behind its own budget while a selective query's
+one-group prefetch dispatches on the next cycle, so the heavy tenant can
+never starve the light one.  Staged bytes are charged at dispatch and
+released when the blob is consumed, evicted, or discarded; a tenant's
+in-flight + unconsumed staged bytes never exceed its budget (one
+oversized blob is always admitted so a budget below the chunk size
+cannot deadlock).  Untagged prefetches bypass the scheduler entirely —
+single-consumer paths (the loader) behave exactly as before.
+:meth:`tenant_stats` splits the prefetch-plane counters per tenant
+(dispatches, bytes, hits, throttle events, staged peak).
 
 **Failure handling.**  Every physical fetch the engine issues runs under a
 :class:`RetryPolicy`: :class:`~repro.core.storage.TransientStorageError`
@@ -88,7 +120,7 @@ import random
 import threading
 import time
 import weakref
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
 from contextlib import contextmanager
 from dataclasses import dataclass
@@ -255,6 +287,25 @@ class RetryPolicy:
     hedge_min_s: float = 0.05
 
 
+class _TenantState:
+    """Per-tenant fair-scheduling state (all fields guarded by the
+    engine lock)."""
+
+    __slots__ = ("budget", "staged", "staged_peak", "deficit", "queue",
+                 "stats")
+
+    def __init__(self, budget: Optional[int]) -> None:
+        self.budget = budget          # staging-byte budget; None = unlimited
+        self.staged = 0               # in-flight + unconsumed staged bytes
+        self.staged_peak = 0
+        self.deficit = 0.0            # DRR credit (bytes)
+        # queued prefetches: (key, owner, on_fetched, est_bytes, proxy)
+        self.queue: deque = deque()
+        self.stats = {"prefetch_requests": 0, "prefetch_dispatched": 0,
+                      "prefetch_hits": 0, "bytes_fetched": 0,
+                      "throttle_events": 0, "queued_peak": 0}
+
+
 class FetchEngine:
     """Batched fetch front-end shared by TQL, tensor reads, and the loader.
 
@@ -295,7 +346,14 @@ class FetchEngine:
         self._work_pool: Optional[ThreadPoolExecutor] = None
         self._prefetch_pool: Optional[ThreadPoolExecutor] = None
         self._lock = threading.RLock()
-        self._inflight: Dict[str, Tuple[Future, object]] = {}  # key -> (fut, owner)
+        # key -> (future, set of owners that asked for it): owner-scoped
+        # cancel only cancels once every requesting owner has cancelled
+        self._inflight: Dict[str, Tuple[Future, set]] = {}
+        # fair multi-tenant prefetch scheduling (see module docstring)
+        self._tenants: Dict[str, _TenantState] = {}
+        self._key_tenant: Dict[str, Tuple[str, int]] = {}  # key -> (tenant, est)
+        self._dispatching = False
+        self._drr_rerun = False
         self._resident: "OrderedDict[str, bytes]" = OrderedDict()
         self._resident_size = 0
         # prefetch-efficacy bookkeeping: resident blobs not yet consumed
@@ -329,6 +387,15 @@ class FetchEngine:
             return dict(self.stats)
 
     # ------------------------------------------------------- resident blobs
+    def has_blob(self, key: str) -> bool:
+        """Stats-neutral warmth probe: True when ``key`` is resident, in
+        flight, or tracked as unconsumed in an LRU tier above.  The
+        loader's pipeline-aware shuffle consults it to visit warm chunk
+        groups before cold ones; it never mutates LRU order or counters."""
+        with self._lock:
+            return (key in self._resident or key in self._inflight
+                    or key in self._unconsumed)
+
     def resident(self, key: str) -> Optional[bytes]:
         """Fully-fetched blob for ``key`` if one is parked here (no I/O).
         Also resolves an in-flight prefetch that already completed."""
@@ -363,6 +430,7 @@ class FetchEngine:
         consumption counts as a prefetch hit."""
         if self._unconsumed.pop(key, None) is not None:
             self.stats["prefetch_hits"] += 1
+        self._tenant_release(key)
 
     def _mark_inflight_consumed(self, key: str) -> None:
         """An in-flight prefetch's result was consumed before admission
@@ -375,11 +443,15 @@ class FetchEngine:
         """A prefetched blob leaves the engine unconsumed (lock held)."""
         if self._unconsumed.pop(key, None) is not None:
             self.stats["prefetch_wasted_bytes"] += nbytes
+        self._tenant_release(key)
 
     #: bound on consumption-tracking keys when an LRU tier holds the blobs
     _TRACK_KEYS_MAX = 4096
 
     def _admit(self, key: str, data: bytes, consumed: bool = False) -> None:
+        if consumed:  # consumed before admission: staged charge is over
+            with self._lock:
+                self._tenant_release(key)
         # an LRU tier above the charged provider already holds full objects;
         # track the KEY (no blob) so a later engine read of it still counts
         # as a prefetch hit — eviction there is invisible, so such entries
@@ -395,6 +467,7 @@ class FetchEngine:
             if not consumed:  # fetched, never held, never read: pure waste
                 with self._lock:
                     self.stats["prefetch_wasted_bytes"] += len(data)
+                    self._tenant_release(key)
             return
         with self._lock:
             old = self._resident.pop(key, None)
@@ -431,6 +504,7 @@ class FetchEngine:
             else:
                 self._unconsumed.pop(key, None)  # key-only tracking entry
             self._inflight_consumed.discard(key)
+            self._tenant_release(key)
             entry = self._inflight.pop(key, None)
         if entry is not None:
             entry[0].cancel()  # best effort; a running fetch is abandoned
@@ -643,7 +717,16 @@ class FetchEngine:
         """Batched whole-object reads (tile fan-out, manifest segment
         prefetch on ``Dataset`` open), resident aware.  ``counters``, when
         given, accumulates the physical ``requests``/``bytes`` issued —
-        the cold-open budget accounting reads them."""
+        the cold-open budget accounting reads them.
+
+        All missing keys go out as ONE ``provider.get_many`` round (a
+        batching provider charges one round-trip for the lot).  The batch
+        is a single attempt: a transient anywhere in it falls back to the
+        per-key retry loop — a transient on key N must never force
+        re-reads of keys 1..N-1 (a whole-batch retry could outlive any
+        budget once per-key fault streaks stack up), so convergence costs
+        at most one wasted round.  ``coalescing_disabled()`` forces the
+        per-object path for "before" benchmarks."""
         if counters is not None:
             counters.setdefault("requests", 0)
             counters.setdefault("bytes", 0)
@@ -662,21 +745,30 @@ class FetchEngine:
             with self._lock:  # LRU-tier prefetch consumption
                 for k in missing:
                     self._mark_consumed(k)
-            # per-key retry: a transient on key N must not force re-reads
-            # of keys 1..N-1 (a whole-batch retry could outlive any budget
-            # once per-key fault streaks stack up)
             fetched: Dict[str, bytes] = {}
+            n_requests = 0
             all_clean = True
-            for k in missing:
-                blob, first_try = self._issue(
-                    lambda k=k: self.provider.get(k), key=k)
-                fetched[k] = blob
-                all_clean = all_clean and first_try
+            if coalescing_enabled() and len(missing) > 1:
+                try:
+                    fetched = dict(self.provider.get_many(missing))
+                    n_requests = 1
+                except TransientStorageError:
+                    with self._lock:
+                        self.stats["errors_transient"] += 1
+                    fetched = {}
+                    all_clean = False
+            if not fetched:
+                for k in missing:
+                    blob, first_try = self._issue(
+                        lambda k=k: self.provider.get(k), key=k)
+                    fetched[k] = blob
+                    all_clean = all_clean and first_try
+                n_requests += len(fetched)
             nbytes = sum(len(v) for v in fetched.values())
-            self._observe(len(fetched), 0, nbytes,
+            self._observe(n_requests, 0, nbytes,
                           time.perf_counter() - t0, clean=all_clean)
             if counters is not None:
-                counters["requests"] += len(fetched)
+                counters["requests"] += n_requests
                 counters["bytes"] += nbytes
             out.update(fetched)
         return out
@@ -717,8 +809,156 @@ class FetchEngine:
         a separate pool, so the wait always makes progress."""
         return self._ensure_pool("_work_pool", "fetch-work").submit(fn, *args)
 
-    def prefetch(self, key: str, owner: object = None,
-                 on_fetched=None) -> Future:
+    #: DRR scheduling quantum: bytes of dispatch credit each tenant earns
+    #: per scheduler cycle (roughly one chunk-group's worth)
+    DRR_QUANTUM = 1 << 20
+
+    def register_tenant(self, tenant: str,
+                        byte_budget: Optional[int] = None) -> None:
+        """Declare (or re-budget) a tenant for fair prefetch scheduling.
+        ``byte_budget`` bounds the tenant's staged bytes (in-flight +
+        unconsumed resident); None = unlimited (fair ordering only)."""
+        with self._lock:
+            st = self._tenants.get(tenant)
+            if st is None:
+                self._tenants[tenant] = _TenantState(byte_budget)
+            else:
+                st.budget = byte_budget
+        self._kick()
+
+    def tenant_stats(self, tenant: str) -> Dict[str, int]:
+        """Point-in-time copy of one tenant's prefetch-plane split
+        (``engine_*`` counters scoped to the tenant) plus live staging
+        state."""
+        with self._lock:
+            st = self._tenants[tenant]
+            out = dict(st.stats)
+            out["staged_bytes"] = st.staged
+            out["staged_peak_bytes"] = st.staged_peak
+            out["queued"] = len(st.queue)
+            return out
+
+    def tenants_snapshot(self) -> Dict[str, Dict[str, int]]:
+        with self._lock:
+            names = list(self._tenants)
+        return {t: self.tenant_stats(t) for t in names}
+
+    def _tenant_release(self, key: str) -> None:
+        """Release a key's staged-byte charge (lock held) and let the
+        scheduler re-fill the freed headroom."""
+        ent = self._key_tenant.pop(key, None)
+        if ent is None:
+            return
+        name, est = ent
+        st = self._tenants.get(name)
+        if st is not None:
+            st.staged = max(0, st.staged - est)
+            if st.queue:
+                self._kick()
+
+    def _drr_collect(self) -> List[tuple]:
+        """One deficit-round-robin sweep (lock held): pop every queued
+        prefetch that fits its tenant's credit and budget, cycling until
+        a full round makes no progress."""
+        todo: List[tuple] = []
+        progress = True
+        while progress:
+            progress = False
+            for name, st in list(self._tenants.items()):
+                if not st.queue:
+                    st.deficit = 0.0
+                    continue
+                st.deficit = min(st.deficit + self.DRR_QUANTUM,
+                                 8.0 * self.DRR_QUANTUM)
+                while st.queue:
+                    key, owner, on_fetched, est, proxy = st.queue[0]
+                    if proxy.cancelled():
+                        st.queue.popleft()
+                        continue
+                    # budget gate: always admit one item into an empty
+                    # stage so a budget below the chunk size can't deadlock
+                    if (st.budget is not None and st.staged > 0
+                            and st.staged + est > st.budget):
+                        break
+                    if st.deficit < est:
+                        break
+                    st.queue.popleft()
+                    st.deficit -= est
+                    st.staged += est
+                    st.staged_peak = max(st.staged_peak, st.staged)
+                    todo.append((name, key, owner, on_fetched, est, proxy))
+                    progress = True
+        return todo
+
+    def _kick(self) -> None:
+        """Drain dispatchable tenant queues.  Re-entrant-safe: a nested
+        call (e.g. a dispatch consuming a resident blob) only flags a
+        re-run for the outer loop."""
+        with self._lock:
+            if self._dispatching:
+                self._drr_rerun = True
+                return
+            self._dispatching = True
+        try:
+            while True:
+                with self._lock:
+                    self._drr_rerun = False
+                    todo = self._drr_collect()
+                for item in todo:
+                    self._dispatch_one(*item)
+                with self._lock:
+                    if not todo and not self._drr_rerun:
+                        return
+        finally:
+            with self._lock:
+                self._dispatching = False
+
+    def _dispatch_one(self, tenant: str, key: str, owner: object,
+                      on_fetched, est: int, proxy: Future) -> None:
+        """Issue one scheduled tenant prefetch and tie its outcome to the
+        proxy future handed out at enqueue time."""
+        st = self._tenants[tenant]
+
+        def counted(nbytes: int) -> None:
+            with self._lock:
+                st.stats["bytes_fetched"] += nbytes
+            if on_fetched is not None:
+                on_fetched(nbytes)
+
+        with self._lock:
+            st.stats["prefetch_dispatched"] += 1
+            # charge the staged bytes against the key so consumption /
+            # eviction / discard releases them; a key already charged to
+            # another tenant is not double-charged
+            if key in self._key_tenant:
+                st.staged = max(0, st.staged - est)
+            else:
+                self._key_tenant[key] = (tenant, est)
+        real = self._prefetch_now(key, owner, counted)
+
+        def _copy(f: Future) -> None:
+            if f.cancelled():
+                with self._lock:
+                    self._tenant_release(key)
+                proxy.cancel()
+            elif f.exception() is not None:
+                with self._lock:
+                    self._tenant_release(key)
+                if not proxy.cancelled():
+                    proxy.set_exception(f.exception())
+            else:
+                if not proxy.cancelled():
+                    proxy.set_result(f.result())
+
+        real.add_done_callback(_copy)
+        # dedup against an already-consumed resident blob: nothing will
+        # ever release the charge, so drop it now
+        with self._lock:
+            if key not in self._inflight and key not in self._unconsumed:
+                self._tenant_release(key)
+
+    def prefetch(self, key: str, owner: object = None, on_fetched=None, *,
+                 tenant: Optional[str] = None, est_bytes: int = 0) -> Future:
         """Schedule a whole-chunk fetch; dedups in-flight keys.
 
         The completed blob is parked in the resident store (unless an LRU
@@ -726,14 +966,55 @@ class FetchEngine:
         ``owner`` scopes cancellation: :meth:`cancel_pending` with the
         same owner cancels only that owner's still-queued futures, so one
         consumer's teardown never drops another's prefetches.  A key
-        already in flight keeps its first owner.  ``on_fetched(nbytes)``
-        fires only when THIS call causes a physical fetch (never on
-        resident/in-flight dedup), so issuers can attribute the I/O to
-        their own accounting.
+        already in flight gains the caller's owner as an additional owner
+        — the future is only cancellable once every owner has cancelled.
+        ``on_fetched(nbytes)`` fires only when THIS call causes a physical
+        fetch (never on resident/in-flight dedup), so issuers can
+        attribute the I/O to their own accounting.
+
+        ``tenant`` (registered via :meth:`register_tenant`) routes the
+        request through the fair deficit-round-robin scheduler under the
+        tenant's staging-byte budget; ``est_bytes`` is the charge
+        (estimated blob size).  Untagged calls dispatch immediately.
         """
+        if tenant is not None:
+            with self._lock:
+                st = self._tenants.get(tenant)
+                if st is None:
+                    st = self._tenants[tenant] = _TenantState(None)
+                st.stats["prefetch_requests"] += 1
+                # dedup before queuing: an in-flight or resident key needs
+                # no scheduling (and no staged-byte charge)
+                entry = self._inflight.get(key)
+                if entry is not None:
+                    entry[1].add(owner)
+                    st.stats["prefetch_hits"] += 1
+                    return entry[0]
+                data = self._resident.get(key)
+                if data is not None:
+                    st.stats["prefetch_hits"] += 1
+                    done: Future = Future()
+                    done.set_result(data)
+                    return done
+                if (st.budget is not None and st.staged > 0
+                        and st.staged + max(0, est_bytes) > st.budget):
+                    st.stats["throttle_events"] += 1
+                proxy: Future = Future()
+                st.queue.append((key, owner, on_fetched,
+                                 max(0, int(est_bytes)), proxy))
+                st.stats["queued_peak"] = max(st.stats["queued_peak"],
+                                              len(st.queue))
+            self._kick()
+            return proxy
+        return self._prefetch_now(key, owner, on_fetched)
+
+    def _prefetch_now(self, key: str, owner: object = None,
+                      on_fetched=None) -> Future:
+        """Unscheduled prefetch dispatch (the pre-serving behavior)."""
         with self._lock:
             entry = self._inflight.get(key)
             if entry is not None:
+                entry[1].add(owner)
                 return entry[0]
             data = self._resident.get(key)
         if data is not None:
@@ -759,9 +1040,10 @@ class FetchEngine:
         with self._lock:
             entry = self._inflight.get(key)
             if entry is not None:
+                entry[1].add(owner)
                 return entry[0]
             fut = pool.submit(work)
-            self._inflight[key] = (fut, owner)
+            self._inflight[key] = (fut, {owner})
 
         def _done(f: Future, key: str = key) -> None:
             with self._lock:
@@ -771,6 +1053,8 @@ class FetchEngine:
                     del self._inflight[key]
                 consumed = key in self._inflight_consumed
                 self._inflight_consumed.discard(key)
+                if current and (f.cancelled() or f.exception() is not None):
+                    self._tenant_release(key)
             # admit only while still current: a discard() (writer rewrote
             # the key) or supersession while in flight abandons the result
             if not current or f.cancelled():
@@ -877,10 +1161,30 @@ class FetchEngine:
         """Cancel queued-but-not-started prefetches; running fetches
         complete and park normally.  ``owner`` restricts cancellation to
         futures issued with that owner (None cancels everything — only
-        for full engine shutdown).  Returns #cancelled."""
+        for full engine shutdown) — and an in-flight key wanted by OTHER
+        owners too is left alone: the owner is merely removed from the
+        entry, and the future is cancelled only when no owner remains,
+        so one pipeline's teardown never drops a blob a concurrent
+        consumer is waiting on.  Returns #cancelled."""
+        futs: List[Future] = []
         with self._lock:
-            futs = [f for f, o in self._inflight.values()
-                    if owner is None or o is owner]
+            for f, owners in self._inflight.values():
+                if owner is None:
+                    futs.append(f)
+                    continue
+                owners.discard(owner)
+                if not owners:
+                    futs.append(f)
+            # still-queued tenant prefetches by this owner are dequeued
+            # outright (their proxy futures cancel; nothing was staged yet)
+            for st in self._tenants.values():
+                kept = deque()
+                for item in st.queue:
+                    if owner is None or item[1] is owner:
+                        futs.append(item[4])
+                    else:
+                        kept.append(item)
+                st.queue = kept
         return sum(1 for f in futs if f.cancel())
 
     def close(self) -> None:

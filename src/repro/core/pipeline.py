@@ -110,11 +110,13 @@ class _PrefetchWindow:
 
     def __init__(self, engine: "fetchlib.FetchEngine",
                  plan: List[List[Tuple[str, int]]], owner: object,
-                 on_fetched: Optional[Callable[[int], None]] = None) -> None:
+                 on_fetched: Optional[Callable[[int], None]] = None,
+                 tenant: Optional[str] = None) -> None:
         self.engine = engine
         self.plan = plan
         self.owner = owner
         self.on_fetched = on_fetched
+        self.tenant = tenant
         self.budget = (engine.cache_above or engine.resident_bytes) // 2
         self._step_bytes = [sum(b for _, b in step) for step in plan]
         self._next = 0                      # first step not yet queued
@@ -152,9 +154,11 @@ class _PrefetchWindow:
                     return  # the rest is fetched (coalesced) on demand
                 self.outstanding += nb
                 self._next += 1
-            for key, _est in self.plan[step]:
+            for key, est in self.plan[step]:
                 fut = self.engine.prefetch(key, owner=self.owner,
-                                           on_fetched=self.on_fetched)
+                                           on_fetched=self.on_fetched,
+                                           tenant=self.tenant,
+                                           est_bytes=est)
                 fut.add_done_callback(self._note_result)
 
     def release(self, step: int) -> None:
@@ -202,12 +206,14 @@ class ScanPipeline:
 
     def __init__(self, view, tensors: Sequence[str], *,
                  owner: object = None,
-                 on_fetched: Optional[Callable[[int], None]] = None) -> None:
+                 on_fetched: Optional[Callable[[int], None]] = None,
+                 tenant: Optional[str] = None) -> None:
         self.view = view
         self.names = [n for n in tensors
                       if n not in view.derived and n in view.tensor_names]
         self.owner = owner if owner is not None else self
         self.on_fetched = on_fetched
+        self.tenant = tenant
         self.engine = fetchlib.engine_for(view.dataset.storage)
         self.active = (fetchlib.coalescing_enabled()
                        and fetchlib.provider_cost_params(
@@ -220,11 +226,12 @@ class ScanPipeline:
     # ------------------------------------------------------------ query mode
     @classmethod
     def for_query(cls, view, tensors: Sequence[str],
-                  owner: object = None) -> Optional["ScanPipeline"]:
+                  owner: object = None,
+                  tenant: Optional[str] = None) -> Optional["ScanPipeline"]:
         """Pipeline over the chunk groups of ``view`` (rows grouped by the
         tuple of chunks they live in across ``tensors``, in first-
         appearance order).  None when no base tensor is scannable."""
-        pipe = cls(view, tensors, owner=owner)
+        pipe = cls(view, tensors, owner=owner, tenant=tenant)
         if not pipe.names or not len(view):
             return None
         ord_cols = []
@@ -293,7 +300,8 @@ class ScanPipeline:
         pipeline's still-queued prefetches."""
         if self.active and self._window is None:
             self._window = _PrefetchWindow(self.engine, self._query_keyplan(),
-                                           self.owner, self.on_fetched)
+                                           self.owner, self.on_fetched,
+                                           self.tenant)
         try:
             for gi, positions in enumerate(self._groups):
                 if self._window is not None:
@@ -306,6 +314,102 @@ class ScanPipeline:
                 if self._window is not None:
                     self._window.release(gi)
         finally:
+            self.close()
+
+    #: sharded-stream backpressure: a worker may run at most this many
+    #: groups (x shards) ahead of the consumer before parking
+    _SHARD_LEAD = 4
+
+    def stream_sharded(self, eval_fn: Callable[[np.ndarray, Any], Any], *,
+                       shards: int, skip=None
+                       ) -> Iterator[Tuple[int, np.ndarray, Any]]:
+        """Parallel chunk-group scan: evaluate ``eval_fn(positions,
+        subview)`` per group on ``shards`` worker threads, yielding
+        ``(group_index, positions, result)`` **in plan order** — results
+        are byte-identical to a serial :meth:`stream` + scatter because
+        the group partition of the view's rows (and the consumer's
+        plan-order merge) is independent of evaluation order.
+
+        Groups are assigned worker-round-robin in plan order
+        (:func:`repro.distributed.sharding.shard_groups`), so every worker
+        starts near the head of the schedule and the ordered re-merge
+        never waits on a worker busy with far-future groups.  ``skip(gi)``
+        — checked immediately before a group is evaluated, i.e. against
+        the *freshest* shared state — lets the top-k executor drop groups
+        whose bound can no longer beat the shared cutoff; skipped groups
+        yield ``result=None``.  Workers are dedicated threads, never the
+        engine's work pool: group evaluation itself blocks on that pool
+        (``read_batch`` lookahead), and nesting would deadlock it.
+        Closing the generator early (top-k termination) stops workers at
+        their next group boundary and cancels this pipeline's remaining
+        prefetches.
+        """
+        from ..distributed.sharding import shard_groups
+
+        n = self.n_groups
+        shards = max(1, min(int(shards), n))
+        if self.active and self._window is None:
+            self._window = _PrefetchWindow(self.engine, self._query_keyplan(),
+                                           self.owner, self.on_fetched,
+                                           self.tenant)
+        results: Dict[int, Any] = {}
+        errors: List[BaseException] = []
+        stop = threading.Event()
+        cond = threading.Condition()
+        emitted = [0]                      # groups the consumer has taken
+
+        def worker(w: int, my_groups: List[int]) -> None:
+            with telemetry.span(f"serve.shard[{w}]", groups=len(my_groups)):
+                for gi in my_groups:
+                    with cond:
+                        # bounded run-ahead; the next-needed group's worker
+                        # always passes (its gi IS the emit floor)
+                        cond.wait_for(lambda: stop.is_set() or gi < emitted[0]
+                                      + self._SHARD_LEAD * shards)
+                    if stop.is_set():
+                        return
+                    if self._window is not None:
+                        self._window.top_up(gi + shards)
+                    positions = self._groups[gi]
+                    try:
+                        if skip is not None and skip(gi):
+                            out = None
+                        else:
+                            with telemetry.gspan(gi, "deliver",
+                                                 rows=len(positions)):
+                                out = eval_fn(positions, self.view[positions])
+                    except BaseException as e:  # noqa: BLE001 - relayed
+                        with cond:
+                            errors.append(e)
+                            cond.notify_all()
+                        return
+                    if self._window is not None:
+                        self._window.release(gi)
+                    with cond:
+                        results[gi] = out
+                        cond.notify_all()
+
+        threads = [threading.Thread(target=worker, args=(w, grp),
+                                    name=f"scan-shard-{w}", daemon=True)
+                   for w, grp in enumerate(shard_groups(n, shards))]
+        for t in threads:
+            t.start()
+        try:
+            for gi in range(n):
+                with cond:
+                    cond.wait_for(lambda: gi in results or errors)
+                    if errors:
+                        raise errors[0]
+                    out = results.pop(gi)
+                    emitted[0] = gi + 1
+                    cond.notify_all()
+                yield gi, self._groups[gi], out
+        finally:
+            stop.set()
+            with cond:
+                cond.notify_all()
+            for t in threads:
+                t.join()
             self.close()
 
     # ----------------------------------------------------------- loader mode

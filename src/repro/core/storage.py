@@ -657,6 +657,7 @@ class SimulatedS3Provider(StorageProvider):
             "ranged_requests": 0,     # round-trips that carried a byte range
             "coalesced_requests": 0,  # physical spans issued by get_ranges
             "batched_ranges": 0,      # logical ranges served by get_ranges
+            "batched_objects": 0,     # whole objects served by get_many
             "meta_requests": 0,       # exists/num_bytes/list_keys round-trips
             "put_requests": 0,        # upload round-trips (incl. faulted)
             "cas_requests": 0,        # conditional-put round-trips (manifest)
@@ -785,6 +786,28 @@ class SimulatedS3Provider(StorageProvider):
         with self._lock:
             self.stats["batched_ranges"] += len(ranges)
         return slice_spans(ranges, spans, assign, payloads)
+
+    def get_many(self, keys: Sequence[str]) -> Dict[str, bytes]:
+        """Multi-object batch read: ONE latency charge for the whole
+        fan-out plus the summed transfer bytes — the batched counterpart
+        of :meth:`get_ranges` for whole objects (tile fan-outs, manifest
+        segment prefetch).  Faults draw per key; the first hard fault
+        aborts the round after charging the wasted round-trip (partial
+        results are discarded — the caller retries per key), and straggle
+        overtime accumulates into the fault bucket."""
+        out: Dict[str, bytes] = {}
+        with self._sem:
+            fault_extra = 0.0
+            for k in keys:
+                if k in out:
+                    continue
+                fault_extra += self._maybe_fault(k)
+                out[k] = self.base.get(k)
+            self._charge(sum(len(v) for v in out.values()),
+                         fault_sim=fault_extra)
+            with self._lock:
+                self.stats["batched_objects"] += len(out)
+        return out
 
     def put(self, key: str, data: bytes) -> None:
         with self._sem:

@@ -27,6 +27,13 @@ spans embed the group/unit index in brackets. The wired-in names:
                                     (args: shape=adopt|relocate)
     loader.stall                    consumer blocked waiting for a ready unit
                                     (args: cause=fetch|decode|buffer_full)
+    serve.admit                     whole handling of one QueryService query
+                                    (args: tenant, cache=hit|miss|uncacheable)
+    serve.queue                     time blocked on the admission semaphore
+                                    (args: tenant, wait_s)
+    serve.flight_wait               follower waiting on a single-flight leader
+    serve.shard[k]                  one shard worker of a parallel chunk-group
+                                    scan (args: groups)
 
 ``Tracer.report()`` aggregates by name with bracketed indices normalised
 to ``[*]`` so per-query/per-epoch reports stay compact.
@@ -52,7 +59,9 @@ name's first dot-component; ``ts`` is relative to the tracer epoch.
 Metrics registry
 ----------------
 ``registry()`` returns the process-wide :class:`MetricsRegistry`. Metric
-names are dot-separated (``commit.rebases``, ``storage.wasted_upload_bytes``);
+names are dot-separated (``commit.rebases``, ``storage.wasted_upload_bytes``,
+``tql.plans``, ``serve.cache.hits`` / ``serve.cache.misses`` /
+``serve.plan_cache.hits``, per-tenant ``serve.tenant.<t>.*``);
 ``snapshot()`` flattens them to underscore keys (``commit_rebases``) so they
 can be recorded as ``BENCH_io.json`` leaves. ``provider_snapshot(provider)``
 is the one snapshot API the benches share: numeric provider stats merged

@@ -47,6 +47,7 @@ Clause order matches the paper's example: WHERE → ORDER BY → ARRANGE BY
 from __future__ import annotations
 
 import math
+import threading
 import zlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -65,6 +66,11 @@ from .planner import (ScanPlan, _referenced, group_key_intervals, plan_where)
 
 class Unvectorizable(Exception):
     pass
+
+
+class _NonScalarKeys(Exception):
+    """Sharded top-k found non-scalar sort keys mid-stream: abort the
+    pushdown and let the legacy whole-view sort run."""
 
 
 def _truthy(x: Any) -> bool:
@@ -343,9 +349,33 @@ def _substitute(node: Node, aliases: Dict[str, Node]) -> Node:
 
 
 class Executor:
+    """One query execution.
+
+    **Sharded scan mode** (``shards`` > 1): the per-chunk-group WHERE and
+    top-k loops are pure maps over chunk groups, so they run on
+    :meth:`ScanPipeline.stream_sharded` — a worker-thread pool with
+    groups assigned round-robin in plan order and results re-merged *in
+    plan order*, which keeps masks and top-k selections byte-identical
+    to the serial scan (scattering a mask is order-independent; the
+    top-k merge applies the exact legacy comparator to a candidate set
+    that only ever gains strictly-worse extras).  Top-k shards share one
+    cutoff: each worker consults the freshest merged cutoff right before
+    evaluating a group and skips it when its bound strictly cannot beat
+    the cutoff — the shared cutoff only tightens as the merge advances,
+    so a sharded skip is always a group the serial scan would also have
+    skipped, and early termination still fires at the exact group the
+    serial scan terminates on.  ``tenant`` tags the pipeline's
+    prefetches for the engine's fair multi-tenant scheduler;
+    ``scan_plan_hint`` (the serving tier's plan cache) skips
+    ``plan_where`` entirely on a repeat query of an immutable version.
+    """
+
     def __init__(self, query: Query, engine: str = "auto",
                  use_stats: bool = True,
-                 stream: Optional[bool] = None) -> None:
+                 stream: Optional[bool] = None,
+                 shards: Optional[int] = None,
+                 tenant: Optional[str] = None,
+                 scan_plan_hint: Optional[ScanPlan] = None) -> None:
         self.query = query
         self.engine = engine
         self.use_stats = use_stats
@@ -353,6 +383,9 @@ class Executor:
         #: multiple chunk groups), False = whole-view column stack (the
         #: pre-pipeline path, kept for A/B equivalence), True = force
         self.stream = stream
+        self.shards = shards
+        self.tenant = tenant
+        self.scan_plan_hint = scan_plan_hint
         self.scan_plan: Optional[ScanPlan] = None  # set by run() when planned
         self.topk_plan: Optional[dict] = None      # set when top-k pushed down
         self.seed = _query_seed(repr(query))
@@ -404,14 +437,23 @@ class Executor:
                  if n not in view.derived and n in view.tensor_names]
         if not names:
             return self._mask_of(view, node)
-        pipe = ScanPipeline.for_query(view, names, owner=self)
+        pipe = ScanPipeline.for_query(view, names, owner=self,
+                                      tenant=self.tenant)
         if pipe is None or (self.stream is None and pipe.n_groups <= 1):
             if pipe is not None:
                 pipe.close()
             return self._mask_of(view, node)
         mask = np.zeros(len(view), dtype=bool)
-        for positions, sub in pipe.stream():
-            mask[positions] = self._mask_of(sub, node)
+        if self.shards is not None and self.shards > 1 and pipe.n_groups > 1:
+            # sharded map: each group's sub-mask scatters into disjoint
+            # positions, so evaluation order cannot change the result
+            for _gi, positions, res in pipe.stream_sharded(
+                    lambda pos, sub: self._mask_of(sub, node),
+                    shards=self.shards):
+                mask[positions] = res
+        else:
+            for positions, sub in pipe.stream():
+                mask[positions] = self._mask_of(sub, node)
         return mask
 
     def _mask_of(self, view: DatasetView, node: Node) -> np.ndarray:
@@ -471,7 +513,8 @@ class Executor:
                  if n not in view.derived and n in view.tensor_names]
         if not names:
             return None
-        pipe = ScanPipeline.for_query(view, names, owner=self)
+        pipe = ScanPipeline.for_query(view, names, owner=self,
+                                      tenant=self.tenant)
         if pipe is None or pipe.n_groups <= 1:
             if pipe is not None:
                 pipe.close()
@@ -482,6 +525,8 @@ class Executor:
         order = sorted(range(len(bounds)), key=lambda g: bounds[g].sort_key)
         pipe.reorder(order)  # prefetch window now follows bound priority
         bounds = [bounds[g] for g in order]
+        if self.shards is not None and self.shards > 1:
+            return self._topk_sharded(view, q, pipe, bounds, k, desc, names)
         k_keys: Optional[np.ndarray] = None
         k_pos = np.empty(0, dtype=np.int64)
         cutoff = None
@@ -512,6 +557,63 @@ class Executor:
             "k": k, "order_desc": int(desc), "tensors": list(names)}
         return view[k_pos[q.offset:]]
 
+    def _topk_sharded(self, view: DatasetView, q: Query, pipe: ScanPipeline,
+                      bounds: List[_GroupBound], k: int, desc: bool,
+                      names: List[str]) -> Optional[DatasetView]:
+        """Shard-parallel tail of :meth:`_order_limit_topk`: workers
+        evaluate group sort keys concurrently under one shared cutoff
+        (checked freshest-first via ``skip``), while this thread merges
+        candidates in plan order with the exact serial comparator —
+        see the class docstring for the byte-parity argument."""
+        lock = threading.Lock()
+        shared = {"cutoff": None}
+
+        def skip(gi: int) -> bool:
+            with lock:
+                c = shared["cutoff"]
+            return c is not None and not bounds[gi].can_beat(c)
+
+        def eval_keys(positions: np.ndarray, sub: DatasetView) -> np.ndarray:
+            keys_g = self._order_keys(sub, q.order_by)
+            if keys_g.ndim != 1 or len(keys_g) != len(positions):
+                raise _NonScalarKeys()  # legacy whole-view sort takes over
+            return keys_g
+
+        k_keys: Optional[np.ndarray] = None
+        k_pos = np.empty(0, dtype=np.int64)
+        cutoff = None
+        scanned = 0
+        terminated = False
+        it = pipe.stream_sharded(eval_keys, shards=self.shards, skip=skip)
+        try:
+            for gi, positions, keys_g in it:
+                # a worker-side skip means the group's bound could not beat
+                # an *earlier* (looser) cutoff — the serial scan, whose
+                # cutoff here is at least as tight, terminates too
+                if keys_g is None or (cutoff is not None
+                                      and not bounds[gi].can_beat(cutoff)):
+                    terminated = True
+                    break
+                scanned += 1
+                ck = keys_g if k_keys is None \
+                    else np.concatenate([k_keys, keys_g])
+                cp = np.concatenate([k_pos, positions])
+                k_keys, k_pos = _topk_select(ck, cp, k, desc)
+                if len(k_pos) >= k:
+                    cutoff = k_keys[-1]
+                    with lock:
+                        shared["cutoff"] = cutoff
+        except _NonScalarKeys:
+            return None
+        finally:
+            it.close()
+        self.topk_plan = {
+            "groups": pipe.n_groups, "groups_scanned": scanned,
+            "groups_skipped": pipe.n_groups - scanned,
+            "terminated_early": int(terminated), "shards": int(self.shards),
+            "k": k, "order_desc": int(desc), "tensors": list(names)}
+        return view[k_pos[q.offset:]]
+
     def run(self, base: DatasetView) -> DatasetView:
         q = self.query
         view = base
@@ -519,8 +621,13 @@ class Executor:
         if q.where is not None:
             if len(view):
                 with telemetry.span("query.plan") as plan_sp:
-                    plan = plan_where(view, q.where) if self.use_stats \
-                        else None
+                    # a cached plan (serving tier, immutable committed
+                    # version) makes the repeat query pay zero planner work
+                    if self.scan_plan_hint is not None and self.use_stats:
+                        plan = self.scan_plan_hint
+                    else:
+                        plan = plan_where(view, q.where) if self.use_stats \
+                            else None
                     self.scan_plan = plan
                     if plan is not None:
                         plan_sp.set(effective=int(plan.effective),
@@ -621,7 +728,9 @@ class Executor:
 
 def execute_query(source: Union["Dataset", DatasetView], text: str,
                   engine: str = "auto", use_stats: bool = True,
-                  stream: Optional[bool] = None) -> DatasetView:
+                  stream: Optional[bool] = None,
+                  shards: Optional[int] = None,
+                  tenant: Optional[str] = None) -> DatasetView:
     q = parse(text)
     if isinstance(source, DatasetView):
         if q.version:
@@ -635,5 +744,5 @@ def execute_query(source: Union["Dataset", DatasetView], text: str,
                if t not in base.tensor_names and t not in aliases]
     if missing:
         raise KeyError(f"query references unknown tensors: {missing}")
-    return Executor(q, engine=engine, use_stats=use_stats,
-                    stream=stream).run(base)
+    return Executor(q, engine=engine, use_stats=use_stats, stream=stream,
+                    shards=shards, tenant=tenant).run(base)

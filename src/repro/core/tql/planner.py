@@ -52,6 +52,7 @@ from typing import Dict, FrozenSet, List, Optional
 
 import numpy as np
 
+from .. import telemetry
 from .ast_nodes import (BinOp, Call, ListExpr, Literal, Node, TensorRef,
                         UnaryOp)
 from ..chunks import ChunkStats, _hi_bound, _lo_bound
@@ -586,6 +587,9 @@ def plan_where(view, where: Node) -> Optional[ScanPlan]:
     returned plan is always sound: pruned rows are certainly False, sure rows
     certainly True, under the executor's `_truthy` row semantics.
     """
+    # registry counter, not ad-hoc: the serving bench asserts a cached
+    # plan's repeat query performs zero planner work via this exact key
+    telemetry.registry().counter("tql.plans").inc()
     if where is None or len(view) == 0 or where.calls("RANDOM"):
         return None
     names = [n for n in _referenced(where)

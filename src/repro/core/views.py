@@ -178,10 +178,11 @@ class DatasetView:
 
     # --------------------------------------------------------------- chaining
     def query(self, tql: str, engine: str = "auto", use_stats: bool = True,
-              stream: Optional[bool] = None) -> "DatasetView":
+              stream: Optional[bool] = None, shards: Optional[int] = None,
+              tenant: Optional[str] = None) -> "DatasetView":
         from .tql import execute_query
         return execute_query(self, tql, engine=engine, use_stats=use_stats,
-                             stream=stream)
+                             stream=stream, shards=shards, tenant=tenant)
 
     def dataloader(self, **kw):
         from .dataloader import DeepLakeLoader

@@ -13,7 +13,8 @@ from .fault_tolerance import (FailureInjector, HostFailure, StragglerDetector,
 _COLLECTIVES = {"collective_wire_bytes", "make_quantized_allreduce",
                 "quantized_psum"}
 _SHARDING = {"batch_specs", "fit_spec", "make_rules", "make_shard_fn",
-             "pspec_for_specs", "sharding_for_specs", "spec_for"}
+             "pspec_for_specs", "shard_groups", "shard_of",
+             "sharding_for_specs", "spec_for"}
 
 __all__ = ["FailureInjector", "HostFailure", "StragglerDetector",
            "run_resilient"] + sorted(_COLLECTIVES | _SHARDING)

@@ -11,24 +11,56 @@ Per-cell rule selection:
   "model", seq unsharded;
 * long_500k (global_batch=1): batch unshardable -> the KV/latent cache's
   *sequence* axis takes ("pod","data") instead (sequence-parallel decode).
+
+jax (and the model param registry) are imported lazily inside the
+functions that need them: the dependency-free partitioners at the top
+(``shard_groups``, ``shard_of``) are reused by the lakehouse serving tier
+(:mod:`repro.core.serving`, ``ScanPipeline.stream_sharded``) for
+chunk-group -> worker assignment, and pure-I/O paths must not drag jax in
+(same contract as :mod:`repro.distributed.fault_tolerance`).
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
-import jax
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.param import DEFAULT_RULES, ParamSpec, logical_to_spec, tree_map_specs
+# ---------------------------------------------------------------------------
+# dependency-free work partitioners (no jax; safe for repro.core imports)
 
+def shard_groups(n_items: int, n_shards: int) -> List[List[int]]:
+    """Partition ``range(n_items)`` across ``n_shards`` workers round-robin
+    in item order: shard ``w`` owns items ``w, w + n_shards, ...``.
+
+    Round-robin (rather than contiguous blocks) keeps the *earliest* items
+    at the head of every shard's list, so when items are chunk groups in
+    plan order each worker starts on the group the consumer needs soonest —
+    the serving tier's ordered re-merge then never waits on a worker that
+    is busy with far-future groups.  Empty shards are dropped.
+    """
+    if n_items < 0 or n_shards <= 0:
+        raise ValueError(f"invalid partition: {n_items} items, "
+                         f"{n_shards} shards")
+    shards = [list(range(w, n_items, n_shards)) for w in range(n_shards)]
+    return [s for s in shards if s]
+
+
+def shard_of(item: int, n_shards: int) -> int:
+    """Inverse of :func:`shard_groups`: which shard owns ``item``."""
+    if n_shards <= 0:
+        raise ValueError(f"invalid shard count {n_shards}")
+    return item % n_shards
+
+
+# ---------------------------------------------------------------------------
+# jax-backed mesh sharding (imports deferred to first use)
 
 def make_rules(kind: str = "train", *, long_context: bool = False,
                fsdp: bool = True, seq_shard=None) -> Dict[str, Any]:
     """``seq_shard``: None | mesh-axis name for the cache sequence dim.
     Decode with batch on (pod, data) can hand "model" to the cache sequence
     (beyond-paper H2b: keeps 32k caches sharded when kv_heads < model axis)."""
+    from repro.models.param import DEFAULT_RULES
     rules = dict(DEFAULT_RULES)
     if not fsdp:
         rules["fsdp"] = None
@@ -43,7 +75,7 @@ def make_rules(kind: str = "train", *, long_context: bool = False,
     return rules
 
 
-def axis_size(mesh: Mesh, entry) -> int:
+def axis_size(mesh, entry) -> int:
     if entry is None:
         return 1
     axes = entry if isinstance(entry, (tuple, list)) else (entry,)
@@ -54,8 +86,9 @@ def axis_size(mesh: Mesh, entry) -> int:
     return size
 
 
-def fit_spec(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> P:
+def fit_spec(shape: Tuple[int, ...], spec, mesh):
     """Drop mesh axes from dims they don't divide (GSPMD-safe fallback)."""
+    from jax.sharding import PartitionSpec as P
     out = []
     for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
         if entry is None:
@@ -67,26 +100,34 @@ def fit_spec(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> P:
 
 
 def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
-             mesh: Mesh, rules: Dict[str, Any]) -> P:
+             mesh, rules: Dict[str, Any]):
+    from repro.models.param import logical_to_spec
     return fit_spec(shape, logical_to_spec(axes, rules, mesh), mesh)
 
 
-def sharding_for_specs(specs, mesh: Mesh, rules: Dict[str, Any]):
+def sharding_for_specs(specs, mesh, rules: Dict[str, Any]):
     """ParamSpec pytree -> NamedSharding pytree (divisibility-safe)."""
+    from jax.sharding import NamedSharding
+
+    from repro.models.param import tree_map_specs
     return tree_map_specs(
         lambda s: NamedSharding(mesh, spec_for(s.shape, s.axes, mesh, rules)),
         specs)
 
 
-def pspec_for_specs(specs, mesh: Mesh, rules: Dict[str, Any]):
+def pspec_for_specs(specs, mesh, rules: Dict[str, Any]):
+    from repro.models.param import tree_map_specs
     return tree_map_specs(
         lambda s: spec_for(s.shape, s.axes, mesh, rules), specs)
 
 
-def make_shard_fn(mesh: Optional[Mesh], rules: Dict[str, Any]) -> Callable:
+def make_shard_fn(mesh, rules: Dict[str, Any]) -> Callable:
     """Activation-sharding-constraint callback threaded through the models."""
     if mesh is None:
         return lambda x, axes=None: x
+
+    import jax
+    from jax.sharding import NamedSharding
 
     def shard(x, axes=None):
         if axes is None:
@@ -97,9 +138,13 @@ def make_shard_fn(mesh: Optional[Mesh], rules: Dict[str, Any]) -> Callable:
     return shard
 
 
-def batch_specs(cfg, shape_cfg, mesh: Mesh, rules: Dict[str, Any]):
+def batch_specs(cfg, shape_cfg, mesh, rules: Dict[str, Any]):
     """(ShapeDtypeStruct pytree, NamedSharding pytree) for a train/prefill
     batch of the given architecture and shape point."""
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding
+
     B, S = shape_cfg.global_batch, shape_cfg.seq_len
     specs: Dict[str, jax.ShapeDtypeStruct] = {}
     ax: Dict[str, Tuple[Optional[str], ...]] = {}

@@ -169,3 +169,59 @@ def test_linked_tensor_roundtrip_and_materialize():
     out = materialize(DatasetView.full(ds), registry=reg)
     np.testing.assert_array_equal(out.limg[4], arrs[4])
     assert not out["limg"].is_link
+
+
+# ------------------------------------------------- pipeline-aware shuffle
+def _group_order(loader, plan):
+    """First-visit order of primary-tensor chunk ordinals in a plan."""
+    enc = loader.view._base_tensor(loader._primary_tensor()).encoder
+    seen, order = set(), []
+    for pos in plan:
+        k = enc.chunk_ord_of(int(loader.view.indices[pos]))
+        if k not in seen:
+            seen.add(k)
+            order.append(k)
+    return order
+
+
+def _evict_engine(ds):
+    eng = dl.engine_for(ds.storage)
+    for name in ds.tensor_names:
+        t = ds._tensor(name)
+        for nm in t.encoder.chunk_names():
+            eng.discard(t._chunk_key(nm))
+
+
+def test_warm_first_shuffle_cold_plan_is_seeded_baseline():
+    """On a cold engine every has_blob probe misses, so the pipeline-aware
+    reorder is the identity: the plan is exactly the seed+epoch shuffle
+    and repeat calls are deterministic."""
+    ds, _ = _image_ds(n=120, remote=True, chunk=8 << 10)
+    loader = ds.dataloader(shuffle=True, seed=5)
+    _evict_engine(ds)
+    p1 = loader._plan(np.random.default_rng(42))
+    _evict_engine(ds)
+    p2 = loader._plan(np.random.default_rng(42))
+    assert p1 == p2
+
+
+def test_warm_first_shuffle_prefers_resident_groups():
+    """Warming a late group of the first window moves it to the window's
+    front — while the epoch still visits exactly the same samples and
+    groups (local reorder only, sample set unchanged)."""
+    ds, _ = _image_ds(n=120, remote=True, chunk=8 << 10)
+    loader = ds.dataloader(shuffle=True, seed=5)
+    _evict_engine(ds)
+    cold = loader._plan(np.random.default_rng(9))
+    cold_groups = _group_order(loader, cold)
+    assert len(cold_groups) >= 3
+    window = cold_groups[: DeepLakeLoader.WARM_WINDOW]
+    target = window[-1]                      # last group of the first window
+    eng = dl.engine_for(ds.storage)
+    t = loader.view._base_tensor(loader._primary_tensor())
+    eng.prefetch(t._chunk_key(t.encoder.name_of(target))).result(timeout=5)
+    warm = loader._plan(np.random.default_rng(9))
+    warm_groups = _group_order(loader, warm)
+    assert warm_groups[0] == target          # warm group served first
+    assert sorted(warm) == sorted(cold)      # same epoch sample set
+    assert set(warm_groups[: len(window)]) == set(window)  # window-local

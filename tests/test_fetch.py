@@ -495,3 +495,69 @@ def test_stats_snapshot_consistent_under_threads():
     final = engine.stats_snapshot()
     assert final["requests"] == n_threads * per_thread
     assert final["bytes"] == n_threads * per_thread * K
+
+
+# --------------------------------------------------- multi-object batching
+def test_fetch_many_batches_into_one_request():
+    """A tile fan-out of N whole objects costs ONE provider round on a
+    batching provider (PR-9 multi-object batching), byte-identical to the
+    per-object path."""
+    s3 = dl.SimulatedS3Provider(time_scale=0)
+    expect = {}
+    for i in range(6):
+        expect[f"tile{i}"] = bytes([i]) * 128
+        s3.put(f"tile{i}", expect[f"tile{i}"])
+    eng = FetchEngine(s3)
+    s3.reset_stats()
+    counters = {}
+    out = eng.fetch_many(list(expect), counters=counters)
+    assert out == expect
+    assert counters["requests"] == 1
+    assert s3.stats["requests"] == 1
+    assert s3.stats["batched_objects"] == 6
+    # the A/B switch still forces the old per-object path
+    s3.reset_stats()
+    with fetch.coalescing_disabled():
+        out2 = eng.fetch_many(list(expect), counters=(c2 := {}))
+    assert out2 == expect
+    assert c2["requests"] == 6
+    assert s3.stats["requests"] == 6
+    eng.close()
+
+
+def test_fetch_many_transient_batch_falls_back_per_key():
+    """A transient anywhere in the batch must cost at most one wasted
+    round: the engine retries per key, never re-reads the whole batch."""
+    class FlakyBatch(dl.SimulatedS3Provider):
+        batch_calls = 0
+
+        def get_many(self, keys):
+            type(self).batch_calls += 1
+            raise dl.TransientStorageError("batch round lost")
+
+    p = FlakyBatch(time_scale=0)
+    expect = {f"k{i}": bytes([i]) * 64 for i in range(4)}
+    for k, v in expect.items():
+        p.put(k, v)
+    eng = FetchEngine(p)
+    out = eng.fetch_many(list(expect), counters=(c := {}))
+    assert out == expect
+    assert FlakyBatch.batch_calls == 1       # exactly one wasted round
+    assert c["requests"] == 4                # then per-key convergence
+    assert eng.stats_snapshot()["errors_transient"] >= 1
+    eng.close()
+
+
+def test_fetch_many_serves_resident_blobs_for_free():
+    s3 = dl.SimulatedS3Provider(time_scale=0)
+    for i in range(4):
+        s3.put(f"b{i}", b"z" * 32)
+    eng = FetchEngine(s3)
+    eng.prefetch("b0").result(timeout=5)
+    eng.prefetch("b1").result(timeout=5)
+    s3.reset_stats()
+    out = eng.fetch_many([f"b{i}" for i in range(4)], counters=(c := {}))
+    assert set(out) == {f"b{i}" for i in range(4)}
+    assert c["requests"] == 1                # one batch for the two misses
+    assert s3.stats["batched_objects"] == 2
+    eng.close()

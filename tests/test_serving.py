@@ -1,0 +1,286 @@
+"""Sharded query serving (core/serving.py) + fair multi-tenant fetch.
+
+Covers the PR-9 contract: an N-thread query storm returns byte-identical
+results to the serial path, per-tenant staging budgets actually bound one
+tenant's footprint, any commit rolls the result/plan cache key, the
+shard-parallel top-k scan stays byte-identical (NaN keys included), and
+owner-scoped cancellation never drops another tenant's in-flight blobs.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+import repro.core as dl
+from repro.core import telemetry
+from repro.core.fetch import FetchEngine, engine_for
+from repro.core.pipeline import ScanPipeline
+from repro.core.serving import QueryService
+
+
+def _make_ds(n=400, bands=True, seed=0, chunk=1 << 11):
+    prov = dl.SimulatedS3Provider(time_scale=0)
+    ds = dl.Dataset(prov)
+    ds.create_tensor("val", dtype="float32", min_chunk_size=chunk // 2,
+                     max_chunk_size=chunk)
+    ds.create_tensor("label", dtype="int32")
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        v = rng.standard_normal(16).astype(np.float32)
+        if bands:
+            v += np.float32(10 * (i // (n // 8)))
+        ds.append({"val": v, "label": np.int32(i % 7)})
+    ds.commit("seed")
+    return ds, prov
+
+
+# ------------------------------------------------------------ query storm
+def test_query_storm_parity_vs_serial():
+    """8 threads x same committed query: every result byte-identical to
+    the serial dataset.query, and the storm costs at most 2x one client's
+    provider requests (single-flight + result cache)."""
+    ds, prov = _make_ds()
+    q = "SELECT * WHERE label == 3 AND MAX(val) > 20"
+    expect = ds.query(q, stream=False).indices.tolist()
+
+    svc = QueryService(ds, max_concurrent=4, shards=2)
+    prov.reset_stats()
+    assert svc.query(q).indices.tolist() == expect
+    one_client = prov.stats["requests"]
+
+    svc2 = QueryService(ds, max_concurrent=4, shards=2)
+    svc2.clear_cache()
+    prov.reset_stats()
+    results, errors = [None] * 8, []
+
+    def client(i):
+        try:
+            results[i] = svc2.query(q, tenant=f"t{i % 2}").indices.tolist()
+        except Exception as e:  # pragma: no cover - diagnostic
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors
+    for r in results:
+        assert r == expect
+    assert prov.stats["requests"] <= max(2 * one_client, one_client + 2)
+    st = svc2.stats()
+    assert st["queries"] == 8
+    assert st["cache_misses"] == 1          # single-flight: one leader
+    assert st["cache_hits"] == 7            # every follower served cached
+
+
+def test_distinct_queries_storm_parity():
+    ds, _ = _make_ds()
+    svc = QueryService(ds, max_concurrent=3, shards=2)
+    queries = [f"SELECT * WHERE label == {k}" for k in range(6)]
+    expect = [ds.query(q).indices.tolist() for q in queries]
+    results, errors = [None] * 6, []
+
+    def client(i):
+        try:
+            results[i] = svc.query(queries[i], tenant=f"t{i}").indices.tolist()
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors
+    assert results == expect
+
+
+# ------------------------------------------------------------ cache keying
+def test_cache_hit_zero_requests_zero_planner_work():
+    ds, prov = _make_ds()
+    svc = QueryService(ds)
+    q = "SELECT * WHERE MIN(val) > 35 ORDER BY label LIMIT 20"
+    first = svc.query(q)
+    prov.reset_stats()
+    plans0 = telemetry.registry().snapshot().get("tql_plans", 0)
+    again = svc.query(q)
+    assert again.indices.tolist() == first.indices.tolist()
+    assert prov.stats["requests"] == 0
+    assert telemetry.registry().snapshot().get("tql_plans", 0) == plans0
+    assert svc.stats()["cache_hits"] == 1
+    # normalization: same query, different spelling, same entry
+    assert svc.query(q.replace(" WHERE", "   where")).indices.tolist() \
+        == first.indices.tolist()
+    assert svc.stats()["cache_hits"] == 2
+
+
+def test_commit_rolls_cache_key():
+    ds, _ = _make_ds(n=100, bands=False)
+    svc = QueryService(ds)
+    q = "SELECT * WHERE label == 2"
+    before = svc.query(q)
+    assert svc.query(q).indices.tolist() == before.indices.tolist()
+    assert svc.stats()["cache_hits"] == 1
+    # dirty head: results reflect the new row and are never cached
+    ds.append({"val": np.zeros(16, np.float32), "label": np.int32(2)})
+    mid = svc.query(q)
+    assert len(mid) == len(before) + 1
+    assert svc.stats()["uncacheable"] == 1
+    # commit publishes a new manifest segment -> old entry unreachable
+    ds.commit("one more row")
+    after = svc.query(q)
+    assert after.indices.tolist() == mid.indices.tolist()
+    assert svc.stats()["cache_misses"] >= 2
+    # and the post-commit entry is itself served from cache
+    hits = svc.stats()["cache_hits"]
+    assert svc.query(q).indices.tolist() == after.indices.tolist()
+    assert svc.stats()["cache_hits"] == hits + 1
+
+
+def test_version_pinned_query_cacheable_on_dirty_head():
+    ds, _ = _make_ds(n=100, bands=False)
+    node = ds.vc.resolve_ref(ds.vc.current.parent or ds.vc.current.id)
+    q = f'SELECT * FROM dataset VERSION "{node}" WHERE label == 1'
+    svc = QueryService(ds)
+    pinned = svc.query(q)
+    ds.append({"val": np.zeros(16, np.float32), "label": np.int32(1)})
+    again = svc.query(q)   # dirty head, but the pinned node is sealed
+    assert again.indices.tolist() == pinned.indices.tolist()
+    assert svc.stats()["cache_hits"] == 1
+
+
+# ------------------------------------------------------- tenant isolation
+def _evict_all(ds):
+    """Drop every chunk blob from the engine so prefetches really stage."""
+    eng = engine_for(ds.storage)
+    for name in ds.tensor_names:
+        t = ds._tensor(name)
+        for nm in t.encoder.chunk_names():
+            eng.discard(t._chunk_key(nm))
+
+
+def test_tenant_budget_bounds_staging_and_throttles():
+    ds, _ = _make_ds(n=800, chunk=1 << 12)
+    eng = engine_for(ds.storage)
+    budget = 2 << 12   # room for ~2 chunks of prefetch staging
+    eng.register_tenant("small", byte_budget=budget)
+    _evict_all(ds)
+    svc = QueryService(ds, max_concurrent=2)
+    # use_stats=False forces the streamed per-chunk-group WHERE over the
+    # many-chunk val tensor, so the tenant's prefetch window actually
+    # exercises the staging budget
+    out = svc.query("SELECT * WHERE MAX(val) > -1000", tenant="small",
+                    stream=True, use_stats=False)
+    assert len(out) == 800
+    st = eng.tenant_stats("small")
+    assert st["prefetch_requests"] > 0
+    assert st["staged_peak_bytes"] <= budget
+    assert st["throttle_events"] > 0       # the budget actually pushed back
+    # an unbudgeted tenant on the same engine is not throttled
+    svc.clear_cache()
+    _evict_all(ds)
+    out2 = svc.query("SELECT * WHERE MIN(val) > -1000", tenant="big",
+                     stream=True, use_stats=False)
+    assert len(out2) == 800
+    assert eng.tenant_stats("big")["throttle_events"] == 0
+
+
+# --------------------------------------------------------- sharded top-k
+@pytest.mark.parametrize("desc", [False, True])
+def test_sharded_topk_byte_parity_with_nans(desc):
+    prov = dl.SimulatedS3Provider(time_scale=0)
+    ds = dl.Dataset(prov)
+    ds.create_tensor("key", dtype="float32", min_chunk_size=1 << 9,
+                     max_chunk_size=1 << 10)
+    rng = np.random.default_rng(3)
+    for i in range(600):
+        v = np.float32(rng.standard_normal() + 5 * (i // 75))
+        if i % 37 == 0:
+            v = np.float32("nan")
+        ds.append({"key": v})
+    ds.commit("c")
+    order = "DESC" if desc else "ASC"
+    q = f"SELECT * ORDER BY key {order} LIMIT 25"
+    legacy = ds.query(q, stream=False)
+    sharded = dl.Dataset(prov).query(q, shards=4)
+    assert sharded.indices.tolist() == legacy.indices.tolist()
+    assert sharded.topk_plan["shards"] == 4
+    # sharded early termination still fires: not every group was scanned
+    if sharded.topk_plan.get("terminated_early"):
+        assert sharded.topk_plan["groups_scanned"] \
+            < sharded.topk_plan["groups"]
+
+
+def test_sharded_where_parity_and_shard_spans():
+    ds, _ = _make_ds()
+    q = "SELECT * WHERE MAX(val) > 30 AND label != 5"
+    expect = ds.query(q, stream=False).indices.tolist()
+    with telemetry.tracing() as tr:
+        got = ds.query(q, shards=3)
+    assert got.indices.tolist() == expect
+    assert tr.count("serve.shard[") > 0
+
+
+# ------------------------------------------------- owner-scoped cancel fix
+def test_owner_scoped_cancel_keeps_shared_inflight_blob():
+    """Regression: cancelling tenant A's pending prefetches must not drop
+    a blob tenant B is also waiting on (shared in-flight entry)."""
+    gate, started = threading.Event(), threading.Event()
+
+    class Gated(dl.MemoryProvider):
+        def get(self, key):
+            started.set()
+            gate.wait(timeout=5)
+            return super().get(key)
+
+    p = Gated()
+    p.put("shared", b"v" * 64)
+    p.put("queued", b"w" * 64)
+    eng = FetchEngine(p, max_workers=1)
+    try:
+        fa = eng.prefetch("shared", owner="A")
+        assert started.wait(timeout=5)
+        fb = eng.prefetch("shared", owner="B")   # dedup joins the entry
+        assert fb is fa
+        # the queued key (worker busy) is also co-owned
+        fq = eng.prefetch("queued", owner="A")
+        eng.prefetch("queued", owner="B")
+        eng.cancel_pending("A")                  # A tears down its pipeline
+        assert not fa.cancelled()                # B still owns both
+        assert not fq.cancelled()
+        gate.set()
+        assert fa.result(timeout=5) == b"v" * 64
+        assert fq.result(timeout=5) == b"w" * 64
+        assert eng.resident("shared") == b"v" * 64
+        # now B goes away too: sole-owner cancel may drop queued work
+        f2 = eng.prefetch("q2", owner="B")
+        del f2
+        eng.cancel_pending("B")
+    finally:
+        gate.set()
+        eng.close()
+
+
+def test_two_interleaved_pipelines_one_engine():
+    """Closing pipeline A mid-stream (owner-scoped cancel) must leave
+    pipeline B's stream byte-identical."""
+    ds, _ = _make_ds(n=600)
+    view = dl.DatasetView.full(ds)
+    expect = [v.tolist() for v in ds._tensor("val").read_batch(
+        np.arange(600))]
+    pa = ScanPipeline.for_query(view, ["val"], owner="A")
+    pb = ScanPipeline.for_query(view, ["val"], owner="B")
+    ga, gb = pa.stream(), pb.stream()
+    next(ga)          # A starts prefetching ahead
+    got = {}
+    for i, (positions, sub) in enumerate(gb):
+        if i == 1:
+            pa.close()     # A cancels ITS pending prefetches mid-flight
+        vals = sub.tensor("val").numpy()
+        for p, v in zip(positions, vals):
+            got[int(p)] = np.asarray(v).tolist()
+    assert len(got) == 600
+    for i in range(600):
+        assert got[i] == expect[i]
