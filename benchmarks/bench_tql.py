@@ -342,6 +342,101 @@ def _bench_tile_fanout() -> List[str]:
     io_report.record("tile_fanout", results)
     lines.append(row("tql_tile_fanout_savings", 0.0,
                      f"req{per['requests']}to{bat['requests']}"))
+    lines.extend(_bench_aggregation_pushdown())
+    return lines
+
+
+def _bench_aggregation_pushdown() -> List[str]:
+    """GROUP BY / aggregate pushdown over simulated S3 (the PR-10 datapoint).
+
+    Same clustered fixture shape as the pushdown bench.  Two gates:
+
+    * ungrouped ``COUNT()/SUM/MIN/MAX/AVG`` over a committed dataset with
+      full statistics is answered entirely from the manifest's chunk
+      records: **zero** payload requests beyond the cold open, every
+      chunk group stats-answered;
+    * ``GROUP BY lab`` with single-tensor aggregates: interior chunks are
+      single-valued (dictionary sketch answers them), only band-boundary
+      chunks fetch+fold — the streamed aggregate's request count must be
+      **strictly below** the legacy whole-view fold's (``stream=False``),
+      with value-identical group rows (int sums are exact on both paths).
+    """
+    from repro.core.storage import MemoryProvider, SimulatedS3Provider
+
+    from . import io_report
+
+    rng = np.random.default_rng(11)
+    base = MemoryProvider()
+    ds = dl.Dataset(base)
+    ds.create_tensor("val", dtype="float32", min_chunk_size=1 << 12,
+                     max_chunk_size=1 << 13)
+    ds.create_tensor("lab", htype="class_label", min_chunk_size=256,
+                     max_chunk_size=512)
+    for i in range(4000):
+        band = i // 247  # NOT a multiple of the chunk row capacity: band
+        ds.append({       # boundaries straddle chunks, so some groups fold
+            "val": (rng.standard_normal(16).astype(np.float32)
+                    + np.float32(100 * band)),
+            "lab": np.int64(band)})
+    ds.commit("aggregation bench")
+
+    lines = []
+    # gate 1: ungrouped aggregate, stats-only — zero payload requests
+    s3 = SimulatedS3Provider(base, time_scale=0.0)
+    remote = dl.Dataset(s3)
+    s3.reset_stats()
+    q_scalar = ("SELECT COUNT() AS c, SUM(val) AS s, MIN(val) AS mn, "
+                "MAX(val) AS mx, AVG(val) AS av FROM dataset")
+    with Timer() as t:
+        view = remote.query(q_scalar, engine="numpy")
+    scalar = io_report.provider_snapshot(s3)
+    plan = view.scan_plan
+    assert view.derived["c"][0] == 4000
+    assert s3.stats["requests"] == 0, \
+        f"stats-only aggregate fetched payloads ({s3.stats['requests']})"
+    assert plan["agg_groups_stats_answered"] == plan["agg_groups"] > 0, \
+        f"aggregate groups fell back to fold: {plan}"
+    lines.append(row("tql_agg_scalar_s3", t.elapsed * 1e6,
+                     f"groups{plan['agg_groups']}"
+                     f"_statsanswered{plan['agg_groups_stats_answered']}"
+                     f"_req{scalar['requests']}"))
+
+    # gate 2: grouped streaming vs legacy whole-view fold
+    q_group = ("SELECT lab, COUNT() AS c, SUM(lab) AS s, AVG(lab) AS av "
+               "FROM dataset GROUP BY lab")
+    results = {}
+    for label, stream in (("agg_legacy", False), ("agg_streamed", None)):
+        s3 = SimulatedS3Provider(base, time_scale=0.0)
+        remote = dl.Dataset(s3)
+        s3.reset_stats()
+        with Timer() as t:
+            gv = remote.query(q_group, engine="numpy", stream=stream)
+        stats = io_report.provider_snapshot(s3)
+        results[label] = (gv, stats)
+        plan = gv.scan_plan or {}
+        lines.append(row(f"tql_{label}_s3", t.elapsed * 1e6,
+                         f"groups{len(gv)}_req{stats['requests']}"
+                         f"_statsanswered"
+                         f"{plan.get('agg_groups_stats_answered', 0)}"
+                         f"_down{stats['bytes_down']}"))
+    legacy_view, legacy = results["agg_legacy"]
+    stream_view, streamed = results["agg_streamed"]
+    for col in ("lab", "c", "s", "av"):
+        assert list(stream_view.derived[col]) == list(legacy_view.derived[col]), \
+            f"streamed aggregation changed column {col!r}"
+    assert stream_view.scan_plan["agg_groups_stats_answered"] > 0, \
+        "no grouped chunk was answered from the dictionary sketch"
+    assert streamed["requests"] < legacy["requests"], \
+        (f"grouped aggregation pushdown gained nothing on requests: "
+         f"{legacy['requests']} -> {streamed['requests']}")
+    io_report.record("aggregation_pushdown", {
+        "scalar_stats_only": scalar, "grouped_legacy": legacy,
+        "grouped_streamed": streamed})
+    lines.append(row(
+        "tql_agg_pushdown_savings", 0.0,
+        f"req{legacy['requests']}to{streamed['requests']}"
+        f"_statsanswered{stream_view.scan_plan['agg_groups_stats_answered']}"
+        f"of{stream_view.scan_plan['agg_groups']}"))
     return lines
 
 

@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # One-command gate: tier-1 test suite + TQL pruning/coalescing benchmark
 # (smoke mode, incl. the top-k gate: ORDER BY + LIMIT must fetch <= half
-# the legacy chunk groups, and sketch-pruned membership queries must issue
-# zero payload requests) + cold-open budget & maintenance smoke (backfill
+# the legacy chunk groups, sketch-pruned membership queries must issue
+# zero payload requests, and the aggregation-pushdown gate: ungrouped
+# COUNT/SUM/MIN/MAX/AVG over committed stats answers with zero payload
+# requests, grouped streaming aggregation value-identical to the legacy
+# whole-view fold at strictly fewer requests) + cold-open budget & maintenance smoke (backfill
 # -> prune-parity, GC dry-run, compaction) + fig6 streaming smoke with a
 # stall-seconds budget (cross-unit prefetch must keep compute the
 # bottleneck) + chaos smoke (seeded storage faults: byte-identical stream

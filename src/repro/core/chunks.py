@@ -78,11 +78,39 @@ to lift them (a null sketch on a *sketched* record is a definitive
 * empty samples contribute no values; membership verdicts must therefore
   derive the empty-sample outcome from ``min_elems``, never the sketch.
 
+Partial aggregates (GROUP BY / aggregate pushdown)
+--------------------------------------------------
+
+TQL's aggregation path can answer COUNT/SUM/MIN/MAX/AVG for a chunk
+straight from its stats record — zero payload fetches — but only under
+rules as strict as the sketch rules above, because a partial aggregate
+that is merely *approximate* silently corrupts the merged total (there is
+no "verify" second chance once a number is folded in):
+
+* the record must be ``exact`` and the querying view must cover **every**
+  row of the chunk exactly once — a partially covered chunk must be
+  fetched and folded instead (its stats describe rows the query excluded);
+* ``COUNT`` needs only the covered row count; ``SUM`` uses the ``sum``
+  field (None on legacy records → fetch+fold), accumulated NaN-skipping
+  in float64 for float dtypes and exactly (native integer width) for
+  bool/int dtypes; ``AVG`` is ``sum / (n_elements - nan_count)``;
+* ``MIN``/``MAX`` use ``lo``/``hi`` only while ``|lo|``/``|hi|`` < 2**53:
+  beyond that the outward float widening that keeps *pruning* sound makes
+  the bounds unusable as *values* (they may not equal any element);
+* a chunk with no numeric values (all samples empty, or all elements NaN)
+  contributes the fold identities: 0 to COUNT-of-elements-style sums,
+  nothing to MIN/MAX/AVG;
+* the grouped fast path additionally requires the grouping key chunk to
+  be single-valued: an exact dictionary sketch with exactly one entry and
+  scalar samples (``min_elems == 1 and n_elements == count``, no NaNs for
+  the int domain), so every row of the chunk provably belongs to that one
+  group.
+
 Stats are persisted per tensor per version as a JSON sidecar under the
 existing :class:`~repro.core.storage.StorageProvider` key protocol:
 
     versions/{node}/tensors/{t}/chunk_stats.json
-        {"chunks": {chunk_name: {count, nbytes, lo, hi, nan_count,
+        {"chunks": {chunk_name: {count, nbytes, lo, hi, sum, nan_count,
                                  true_count, n_elements, min_elems, exact,
                                  sketched, dom, dct, bloom}}}
 
@@ -177,6 +205,11 @@ class ChunkStats:
     nbytes: int = 0         # encoded payload bytes
     lo: Optional[float] = None
     hi: Optional[float] = None
+    #: NaN-skipping total of every numeric element (float64 accumulation
+    #: for float dtypes, exact native-integer for bool/int); 0 when the
+    #: chunk has no numeric values, None on inexact or legacy records.
+    #: Consumed by the aggregate fast path (module docstring).
+    sum: Optional[float] = None
     nan_count: int = 0      # NaN elements seen
     true_count: int = 0     # non-zero elements seen
     n_elements: int = 0     # total elements across samples
@@ -189,7 +222,7 @@ class ChunkStats:
 
     def to_json(self) -> dict:
         return {"count": self.count, "nbytes": self.nbytes,
-                "lo": self.lo, "hi": self.hi,
+                "lo": self.lo, "hi": self.hi, "sum": self.sum,
                 "nan_count": self.nan_count, "true_count": self.true_count,
                 "n_elements": self.n_elements, "min_elems": self.min_elems,
                 "exact": self.exact, "sketched": self.sketched,
@@ -233,6 +266,7 @@ class _StatsAccumulator:
         self.count = 0
         self.lo = np.inf
         self.hi = -np.inf
+        self.sum = 0                    # Python int/float: exact for ints
         self.nan_count = 0
         self.true_count = 0
         self.n_elements = 0
@@ -303,8 +337,12 @@ class _StatsAccumulator:
             self.nan_count += nan
             if nan == size:
                 return
+            self.sum += float(np.nansum(arr, dtype=np.float64))
             lo, hi = float(np.nanmin(arr)), float(np.nanmax(arr))
         else:
+            # per-sample native-width sum, cross-sample Python-int (exact)
+            self.sum += int(arr.sum(dtype=np.uint64 if kind == "u"
+                                    else np.int64))
             lo = _lo_bound(int(arr.min()))
             hi = _hi_bound(int(arr.max()))
         self.lo = min(self.lo, lo)
@@ -336,6 +374,7 @@ class _StatsAccumulator:
             count=self.count, nbytes=int(nbytes),
             lo=self.lo if has_range else None,
             hi=self.hi if has_range else None,
+            sum=self.sum if self.exact else None,
             nan_count=self.nan_count, true_count=self.true_count,
             n_elements=self.n_elements,
             min_elems=int(self.min_elems or 0),

@@ -89,6 +89,9 @@ class LoaderStats:
     rows_pruned: int = 0
     chunks_pruned: int = 0
     stats_groups_decided: int = 0
+    # aggregation pushdown: chunk groups whose partial aggregates were
+    # answered from ChunkStats alone (zero payload fetches)
+    agg_groups_stats_answered: int = 0
     # ORDER BY + LIMIT top-k accounting (view's topk plan): chunk groups the
     # bound cutoff proved irrelevant, terminated before fetch or decode
     topk_groups_skipped: int = 0
@@ -169,6 +172,8 @@ class DeepLakeLoader:
             self.stats.rows_pruned = plan.get("rows_pruned", 0)
             self.stats.chunks_pruned = plan.get("chunks_pruned", 0)
             self.stats.stats_groups_decided = plan.get("groups_decided", 0)
+            self.stats.agg_groups_stats_answered = plan.get(
+                "agg_groups_stats_answered", 0)
             self.costs.note("chunks_pruned", self.stats.chunks_pruned)
             self.costs.note("rows_pruned", self.stats.rows_pruned)
         topk = getattr(view, "topk_plan", None)

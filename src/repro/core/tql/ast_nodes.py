@@ -75,6 +75,23 @@ class Index(Node):
     parts: List[SliceSpec]
 
 
+#: aggregate functions recognised in SELECT items (GROUP BY queries and
+#: all-aggregate ungrouped selects).  These are *query-level* folds over
+#: every element of every row in a group -- distinct from the per-row
+#: element reductions of the same name in :mod:`.functions` (``SUM(x)``
+#: in a WHERE clause still reduces one sample; ``MEAN`` stays per-row,
+#: the aggregate spelling of the arithmetic mean is ``AVG``).
+AGGREGATE_FUNCS = ("COUNT", "SUM", "MIN", "MAX", "AVG")
+
+
+@dataclass
+class Aggregate(Node):
+    """A resolved aggregate SELECT item: COUNT() / SUM(x) / MIN(x) /
+    MAX(x) / AVG(x).  ``arg`` is None only for COUNT."""
+    func: str
+    arg: Optional[Node] = None
+
+
 @dataclass
 class SelectItem(Node):
     expr: Node           # may be Literal('*') for star
@@ -91,6 +108,7 @@ class Query(Node):
     source: str = "dataset"
     version: Optional[str] = None
     where: Optional[Node] = None
+    group_by: Optional[List[Node]] = None
     order_by: Optional[Node] = None
     order_desc: bool = False
     arrange_by: Optional[Node] = None
@@ -98,6 +116,14 @@ class Query(Node):
     sample_replace: bool = True
     limit: Optional[int] = None
     offset: int = 0
+
+    @property
+    def is_aggregate(self) -> bool:
+        """True when the query runs the aggregation path: it has a GROUP BY
+        clause, or every SELECT item is a bare aggregate call (ungrouped
+        scalar aggregation, e.g. ``SELECT COUNT(), MAX(x) FROM ds``)."""
+        return self.group_by is not None or any(
+            isinstance(it.expr, Aggregate) for it in self.items)
 
     def referenced_tensors(self) -> List[str]:
         names = []

@@ -40,8 +40,23 @@ bound can beat or tie the running (m+k)-th-element cutoff — the last
 whole-column stacking in the read path is gone.  Skipped groups are never
 fetched; results stay byte-identical to the legacy sort (``stream=False``).
 
-Clause order matches the paper's example: WHERE → ORDER BY → ARRANGE BY
-(stable regroup) → SAMPLE BY → LIMIT/OFFSET → SELECT projections.
+``GROUP BY`` (and ungrouped all-aggregate selects) run as a **streaming
+aggregation** on the same pipeline (:meth:`Executor._aggregate`): each
+chunk group folds per-group *partial* aggregates (count / sum / min /
+max / mean-as-sum+count, NaN-skipping) into a bounded hash of group
+states, so peak memory is one chunk group plus the group-state table —
+never a whole column.  Chunk groups that fully cover their chunks and
+have exact statistics are answered straight from :class:`ChunkStats`
+(the ``sum``/``lo``/``hi``/element-count fields) with **zero payload
+fetches** — the soundness gates live in :mod:`repro.core.chunks`; the
+rest fall back to fetch+fold.  ``stream=False`` keeps a whole-view fold
+for A/B equivalence (float sums may differ in the last ulp from the
+streamed fold's per-group accumulation order; COUNT/MIN/MAX are exact
+either way).
+
+Clause order matches the paper's example: WHERE → GROUP BY aggregation →
+ORDER BY → ARRANGE BY (stable regroup) → SAMPLE BY → LIMIT/OFFSET →
+SELECT projections.
 """
 
 from __future__ import annotations
@@ -57,8 +72,9 @@ from .. import telemetry
 from ..chunks import _hi_bound, _lo_bound
 from ..pipeline import ScanPipeline
 from ..views import DatasetView
-from .ast_nodes import (BinOp, Call, Index, ListExpr, Literal, Node, Query,
-                        SelectItem, SliceSpec, TensorRef, UnaryOp)
+from .ast_nodes import (Aggregate, BinOp, Call, Index, ListExpr, Literal,
+                        Node, Query, SelectItem, SliceSpec, TensorRef,
+                        UnaryOp)
 from .functions import get_function
 from .parser import parse
 from .planner import (ScanPlan, _referenced, group_key_intervals, plan_where)
@@ -348,6 +364,90 @@ def _substitute(node: Node, aliases: Dict[str, Node]) -> Node:
     return node
 
 
+# -------------------------------------------------------------- aggregation
+#: canonical grouping key for a NaN key value: one shared float object so
+#: every NaN row lands in the same hash bucket (dict lookups hit on
+#: identity before equality, and NaN != NaN would otherwise split groups)
+_NAN_KEY = float("nan")
+
+#: |lo|/|hi| bounds beyond this are unusable as MIN/MAX *values*: the
+#: outward widening of ``_lo_bound``/``_hi_bound`` (sound for pruning)
+#: may make them unequal to any element (see chunks.py soundness rules)
+_EXACT_FLOAT_INT = float(2 ** 53)
+
+
+def _canon_key(v) -> Any:
+    """Hashable canonical form of one row's grouping-key value: 1-D uint8
+    samples decode to the text htype's string (matching the str sketch
+    domain), scalars become Python scalars (NaN canonicalized), anything
+    larger becomes a tuple of its elements."""
+    a = np.asarray(v)
+    if a.dtype == np.uint8 and a.ndim == 1:
+        return a.tobytes().decode(errors="replace")
+    if a.size == 1:
+        x = a.reshape(()).item()
+        if isinstance(x, float) and math.isnan(x):
+            return _NAN_KEY
+        return x
+    return tuple(a.ravel().tolist())
+
+
+def _new_agg_state() -> dict:
+    """Partial-aggregate state of one (group, aggregate) pair: mergeable
+    across chunk groups and with stats-answered contributions.  ``sum``
+    stays a Python number (exact int accumulation for integer tensors,
+    float64 for floats); ``n`` counts non-NaN elements (AVG denominator);
+    ``min``/``max`` are float64, None until a value is seen."""
+    return {"rows": 0, "sum": 0, "n": 0, "min": None, "max": None}
+
+
+def _flat_elements(vals, sel: np.ndarray) -> np.ndarray:
+    """All elements of rows ``sel`` of a per-row value column, flattened
+    (object columns hold ragged samples)."""
+    if isinstance(vals, np.ndarray) and vals.dtype != object:
+        return np.asarray(vals)[sel].reshape(-1)
+    parts = [np.asarray(vals[int(i)]).ravel() for i in sel]
+    if not parts:
+        return np.empty(0)
+    return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+
+def _fold_flat(st: dict, flat: np.ndarray) -> None:
+    """Fold a flat element array into a partial-aggregate state
+    (NaN-skipping, like the stats accumulator)."""
+    if flat.size == 0:
+        return
+    kind = flat.dtype.kind
+    if kind == "f":
+        flat = flat[~np.isnan(flat)]
+        if flat.size == 0:
+            return
+        st["sum"] += float(np.sum(flat, dtype=np.float64))
+    elif kind in "biu":
+        st["sum"] += int(flat.sum(dtype=np.uint64 if kind == "u"
+                                  else np.int64))
+    else:
+        raise TypeError(f"cannot aggregate values of dtype {flat.dtype}")
+    st["n"] += int(flat.size)
+    mn, mx = float(flat.min()), float(flat.max())
+    st["min"] = mn if st["min"] is None else min(st["min"], mn)
+    st["max"] = mx if st["max"] is None else max(st["max"], mx)
+
+
+def _agg_result(func: str, st: dict):
+    """Final value of one aggregate from its merged partial state, with
+    the empty-input identities of :mod:`.functions`: COUNT/SUM of nothing
+    are 0, MIN/MAX/AVG of nothing are NaN."""
+    if func == "COUNT":
+        return int(st["rows"])
+    if func == "SUM":
+        return st["sum"]
+    if func == "AVG":
+        return st["sum"] / st["n"] if st["n"] else float("nan")
+    v = st["min"] if func == "MIN" else st["max"]
+    return float("nan") if v is None else v
+
+
 class Executor:
     """One query execution.
 
@@ -388,15 +488,23 @@ class Executor:
         self.scan_plan_hint = scan_plan_hint
         self.scan_plan: Optional[ScanPlan] = None  # set by run() when planned
         self.topk_plan: Optional[dict] = None      # set when top-k pushed down
+        self.agg_plan: Optional[dict] = None       # set when aggregation ran
         self.seed = _query_seed(repr(query))
         self.rng = np.random.default_rng(self.seed)
+        # Aggregate-valued aliases never substitute: an aggregate has no
+        # per-row value, so referencing one from WHERE/ORDER/... is an
+        # unknown-tensor error, not a silent HAVING.
         aliases = {it.alias: it.expr for it in query.items
-                   if it.alias and not it.is_star}
+                   if it.alias and not it.is_star
+                   and not isinstance(it.expr, Aggregate)}
         if aliases:
             for attr in ("where", "order_by", "arrange_by", "sample_by"):
                 node = getattr(query, attr)
                 if node is not None:
                     setattr(query, attr, _substitute(node, aliases))
+            if query.group_by is not None:
+                query.group_by = [_substitute(k, aliases)
+                                  for k in query.group_by]
 
     # evaluate an expression for every row of `view`, preferring vector path
     def eval_all(self, view: DatasetView, node: Node) -> np.ndarray:
@@ -614,6 +722,246 @@ class Executor:
             "k": k, "order_desc": int(desc), "tensors": list(names)}
         return view[k_pos[q.offset:]]
 
+    # --------------------------------------------------------- aggregation
+    def _agg_output_items(self, q: Query) -> Tuple[
+            List[Tuple[str, Tuple[str, int]]], List[Aggregate]]:
+        """Resolve SELECT items of an aggregation query into output specs:
+        ``(column_name, ("key", key_index) | ("agg", agg_index))`` plus the
+        ordered aggregate list.  The parser validated shapes already; key
+        matching mirrors its rules (structural repr, or alias/name against
+        a TensorRef key)."""
+        keys = q.group_by or []
+        key_reprs = [repr(k) for k in keys]
+        aggs: List[Aggregate] = []
+        specs: List[Tuple[str, Tuple[str, int]]] = []
+        used: set = set()
+        for k, it in enumerate(q.items):
+            if isinstance(it.expr, Aggregate):
+                name = it.alias or it.expr.func.lower()
+                spec = ("agg", len(aggs))
+                aggs.append(it.expr)
+            else:
+                j = None
+                r = repr(it.expr)
+                if r in key_reprs:
+                    j = key_reprs.index(r)
+                else:
+                    for kj, kn in enumerate(keys):
+                        if isinstance(kn, TensorRef) and kn.name in (
+                                it.alias, getattr(it.expr, "name", None)):
+                            j = kj
+                            break
+                if j is None:  # unreachable post-parse; stay defensive
+                    raise ValueError(
+                        f"SELECT item {it!r} matches no GROUP BY key")
+                name = it.alias or (it.expr.name
+                                    if isinstance(it.expr, TensorRef)
+                                    else f"col_{k}")
+                spec = ("key", j)
+            if name in used:
+                name = f"col_{k}"
+            used.add(name)
+            specs.append((name, spec))
+        return specs, aggs
+
+    def _agg_group_from_stats(self, keys: List[Node], aggs: List[Aggregate],
+                              recs: Dict[str, Any]) -> Optional[tuple]:
+        """Key tuple of a chunk group answerable from statistics alone, or
+        None when any gate fails (see the soundness rules in chunks.py).
+        The caller already checked every record exists, is exact, and is
+        fully covered by the group's rows."""
+        for a in aggs:
+            if a.func == "COUNT":
+                continue
+            if not isinstance(a.arg, TensorRef):
+                return None
+            rec = recs.get(a.arg.name)
+            if rec is None:
+                return None
+            if a.func in ("SUM", "AVG") and rec.sum is None:
+                return None
+            if a.func in ("MIN", "MAX") and rec.lo is not None and (
+                    abs(rec.lo) >= _EXACT_FLOAT_INT
+                    or abs(rec.hi) >= _EXACT_FLOAT_INT):
+                return None
+        if not keys:
+            return ()
+        if len(keys) != 1 or not isinstance(keys[0], TensorRef):
+            return None
+        kr = recs.get(keys[0].name)
+        if kr is None or not (kr.sketched and kr.dct is not None
+                              and len(kr.dct) == 1 and kr.min_elems >= 1):
+            return None  # key chunk not provably single-valued
+        if kr.dom == "int":
+            # scalar samples only: a multi-element sample would make the
+            # row key a tuple, not the dictionary's one value
+            if not (kr.min_elems == 1 and kr.n_elements == kr.count
+                    and kr.nan_count == 0):
+                return None
+            return (int(kr.dct[0]),)
+        if kr.dom == "str":  # text htype: one whole-sample string per row
+            return (str(kr.dct[0]),)
+        return None
+
+    def _agg_apply_stats(self, states: List[dict], aggs: List[Aggregate],
+                         recs: Dict[str, Any], nrows: int) -> None:
+        """Merge one stats-answered chunk group into the group states."""
+        for a, st in zip(aggs, states):
+            st["rows"] += nrows
+            if a.func == "COUNT":
+                continue
+            rec = recs[a.arg.name]
+            if rec.lo is not None:
+                st["min"] = rec.lo if st["min"] is None \
+                    else min(st["min"], rec.lo)
+                st["max"] = rec.hi if st["max"] is None \
+                    else max(st["max"], rec.hi)
+            nvalid = rec.n_elements - rec.nan_count
+            if rec.sum is not None and nvalid > 0:
+                st["sum"] += rec.sum
+                st["n"] += nvalid
+
+    def _agg_fold(self, sub: DatasetView, orig_positions: np.ndarray,
+                  keys: List[Node], aggs: List[Aggregate],
+                  states: Dict[tuple, List[dict]],
+                  firsts: Dict[tuple, int]) -> None:
+        """Fetch+fold one chunk group (or the whole view in legacy mode)
+        into the group states.  Only ``sub``'s columns are resident."""
+        n = len(sub)
+        if not n:
+            return
+        if keys:
+            cols = [self.eval_all(sub, kx) for kx in keys]
+            bykey: Dict[tuple, List[int]] = {}
+            for i in range(n):
+                kt = tuple(_canon_key(c[i]) for c in cols)
+                bykey.setdefault(kt, []).append(i)
+        else:
+            bykey = {(): list(range(n))}
+        argcols: Dict[str, Any] = {}
+        for a in aggs:
+            if a.arg is not None and repr(a.arg) not in argcols:
+                argcols[repr(a.arg)] = self.eval_all(sub, a.arg)
+        for kt, rows in bykey.items():
+            sel = np.asarray(rows, dtype=np.int64)
+            sts = states.get(kt)
+            if sts is None:
+                sts = states[kt] = [_new_agg_state() for _ in aggs]
+            fp = int(orig_positions[sel].min())
+            if kt not in firsts or fp < firsts[kt]:
+                firsts[kt] = fp
+            for a, st in zip(aggs, sts):
+                st["rows"] += len(sel)
+                if a.func != "COUNT":
+                    _fold_flat(st, _flat_elements(argcols[repr(a.arg)], sel))
+
+    def _aggregate(self, view: DatasetView, q: Query) -> DatasetView:
+        """GROUP BY / ungrouped aggregation over ``view``: stats-answered
+        chunk groups contribute partials with zero payload fetches, the
+        rest stream through the scan pipeline one chunk group at a time
+        (module docstring).  Returns a derived-only view, one row per
+        group in first-appearance (view) order — a single identity row
+        for an ungrouped aggregate over an empty view."""
+        specs, aggs = self._agg_output_items(q)
+        keys = q.group_by or []
+        names = []
+        for node in list(keys) + [a.arg for a in aggs if a.arg is not None]:
+            for nm in _referenced(node):
+                if nm not in names and nm not in view.derived \
+                        and nm in view.tensor_names:
+                    names.append(nm)
+        rand = any(c.name.upper() == "RANDOM" for c in q.find(Call))
+        streamable = self.stream is not False and not rand
+        unique_rows = len(np.unique(view.indices)) == len(view.indices)
+        states: Dict[tuple, List[dict]] = {}
+        firsts: Dict[tuple, int] = {}
+        total_groups = answered = 0
+        pipe = ScanPipeline.for_query(view, names, owner=self,
+                                      tenant=self.tenant) \
+            if streamable and names and len(view) else None
+        fold_positions = np.arange(len(view), dtype=np.int64)
+        if pipe is not None:
+            total_groups = pipe.n_groups
+            fold_parts: List[np.ndarray] = []
+            if self.use_stats and unique_rows:
+                srcs = {nm: view.scan_source(nm) for nm in pipe.names}
+                for g in range(pipe.n_groups):
+                    positions = pipe.group_positions(g)
+                    recs: Dict[str, Any] = {}
+                    for nm, o in zip(pipe.names, pipe.group_ords(g)):
+                        rec = srcs[nm].stats_of(int(o))
+                        # full coverage: every row of the chunk, exactly
+                        # once (rows are globally unique) — partial
+                        # coverage means the stats describe excluded rows
+                        if rec is None or not rec.exact \
+                                or rec.count != len(positions):
+                            recs = {}
+                            break
+                        recs[nm] = rec
+                    kt = self._agg_group_from_stats(keys, aggs, recs) \
+                        if recs else None
+                    if kt is None:
+                        fold_parts.append(positions)
+                        continue
+                    answered += 1
+                    sts = states.get(kt)
+                    if sts is None:
+                        sts = states[kt] = [_new_agg_state() for _ in aggs]
+                    fp = int(positions.min())
+                    if kt not in firsts or fp < firsts[kt]:
+                        firsts[kt] = fp
+                    self._agg_apply_stats(sts, aggs, recs, len(positions))
+                pipe.close()
+                fold_positions = np.sort(np.concatenate(fold_parts)) \
+                    if fold_parts else np.empty(0, dtype=np.int64)
+            else:
+                pipe.close()
+        # fetch+fold the remainder, streamed one chunk group at a time
+        if len(fold_positions):
+            sub = view[fold_positions] if len(fold_positions) != len(view) \
+                else view
+            fold_pipe = ScanPipeline.for_query(sub, names, owner=self,
+                                               tenant=self.tenant) \
+                if streamable and names else None
+            if fold_pipe is not None and (self.stream or
+                                          fold_pipe.n_groups > 1):
+                if not total_groups:
+                    total_groups = fold_pipe.n_groups
+                for positions, gsub in fold_pipe.stream():
+                    self._agg_fold(gsub, fold_positions[positions], keys,
+                                   aggs, states, firsts)
+            else:
+                if fold_pipe is not None:
+                    fold_pipe.close()
+                if not total_groups:
+                    total_groups = 1 if len(sub) else 0
+                self._agg_fold(sub, fold_positions, keys, aggs, states,
+                               firsts)
+        if not keys and not states:  # empty input: one identity row
+            states[()] = [_new_agg_state() for _ in aggs]
+            firsts[()] = 0
+        out_keys = sorted(states, key=lambda kt: firsts[kt])
+        derived: Dict[str, List[Any]] = {}
+        for name, (kind, j) in specs:
+            if kind == "key":
+                derived[name] = [kt[j] for kt in out_keys]
+            else:
+                derived[name] = [_agg_result(aggs[j].func, states[kt][j])
+                                 for kt in out_keys]
+        self.agg_plan = {
+            "agg_rows": int(len(view)),
+            "agg_groups": int(total_groups),
+            "agg_groups_stats_answered": int(answered),
+            "agg_groups_folded": int(total_groups - answered),
+            "agg_out_groups": int(len(out_keys)),
+            "grouped": int(bool(keys))}
+        if self.scan_plan is not None:
+            self.scan_plan.agg_groups_stats_answered = answered
+        telemetry.registry().counter("tql.aggregates").inc()
+        return DatasetView(view.dataset,
+                           np.arange(len(out_keys), dtype=np.int64),
+                           view.node_id, tensors=[], derived=derived)
+
     def run(self, base: DatasetView) -> DatasetView:
         q = self.query
         view = base
@@ -649,6 +997,24 @@ class Executor:
                     else:
                         keep = self._where_mask(view, q.where)
                         view = view[np.nonzero(keep)[0]]
+        # GROUP BY / aggregation ---------------------------------------------
+        if q.is_aggregate:
+            with telemetry.span("query.aggregate") as agg_sp:
+                out = self._aggregate(view, q)
+                if self.agg_plan:
+                    agg_sp.set(**{k: v for k, v in self.agg_plan.items()
+                                  if isinstance(v, (int, float))})
+            # LIMIT/OFFSET slice the aggregated group rows; ORDER/ARRANGE/
+            # SAMPLE were rejected at parse time, projection already done
+            if q.offset:
+                out = out[q.offset:]
+            if q.limit is not None:
+                out = out[: q.limit]
+            report = self.scan_plan.report() if self.scan_plan is not None \
+                else {}
+            report.update(self.agg_plan or {})
+            out.scan_plan = report
+            return out
         # ORDER BY ----------------------------------------------------------
         if q.order_by is not None and len(view):
             with telemetry.span("query.topk") as topk_sp:

@@ -37,14 +37,25 @@ def get_function(name: str) -> FunctionSpec:
             from None
 
 
-def _reduce_all(np_reduce):
+def _reduce_all(np_reduce, empty):
+    """Whole-sample reduction with an explicit empty-input identity.
+
+    SUM of nothing is 0; MEAN/STD/MIN/MAX of nothing have no value and
+    yield NaN (np.min/np.max raise on empty input, so the identity must
+    be supplied rather than delegated).  The batched path returns the
+    same identity per empty row so both execution paths agree.
+    """
     def row(x):
-        return np_reduce(np.asarray(x)) if np.asarray(x).size else 0.0
+        a = np.asarray(x)
+        return np_reduce(a) if a.size else empty
 
     def batched(x, xp=np):
         a = x
-        axes = tuple(range(1, a.ndim))
-        return np_reduce(a, axis=axes) if a.ndim > 1 else a
+        if a.ndim <= 1:
+            return a
+        if 0 in a.shape[1:]:  # every row's reduced slice is empty
+            return xp.full((a.shape[0],), empty, dtype="float64")
+        return np_reduce(a, axis=tuple(range(1, a.ndim)))
     return row, batched
 
 
@@ -92,9 +103,10 @@ def contains(haystack, needle) -> bool:
 
 
 def _register_defaults() -> None:
-    for name, red in (("MEAN", np.mean), ("SUM", np.sum), ("MAX", np.max),
-                      ("MIN", np.min), ("STD", np.std)):
-        row, batched = _reduce_all(red)
+    for name, red, empty in (("MEAN", np.mean, np.nan), ("SUM", np.sum, 0.0),
+                             ("MAX", np.max, np.nan), ("MIN", np.min, np.nan),
+                             ("STD", np.std, np.nan)):
+        row, batched = _reduce_all(red, empty)
         register_function(name, row, batched)
     register_function("ABS", lambda x: np.abs(np.asarray(x)),
                       lambda x, xp=np: xp.abs(x))

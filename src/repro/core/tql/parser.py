@@ -2,10 +2,13 @@
 
 Grammar (SQL subset + tensor extensions):
 
-    query      := SELECT items FROM IDENT [VERSION STRING]
-                  [WHERE expr] [ORDER BY expr [ASC|DESC]] [ARRANGE BY expr]
-                  [SAMPLE BY expr [REPLACE (TRUE|FALSE)]]
-                  [LIMIT NUMBER [OFFSET NUMBER]]
+    query      := SELECT items FROM IDENT [VERSION STRING] clause* EOF
+    clause     := WHERE expr
+                | GROUP BY expr (',' expr)*
+                | ORDER BY expr [ASC|DESC]
+                | ARRANGE BY expr
+                | SAMPLE BY expr [REPLACE (TRUE|FALSE)]
+                | LIMIT INT [OFFSET INT]
     items      := '*' | expr [AS IDENT] (',' expr [AS IDENT])*
     expr       := or_expr
     or_expr    := and_expr (OR and_expr)*
@@ -18,14 +21,38 @@ Grammar (SQL subset + tensor extensions):
     postfix    := primary ('[' subscripts ']')*
     primary    := NUMBER | STRING | TRUE|FALSE|NULL | list | call | tensor | '(' expr ')'
     subscripts := sub (',' sub)* ; sub := expr | [expr]':'[expr][':'[expr]]
+
+Each clause may appear at most once (a duplicate raises
+:class:`TQLSyntaxError` instead of silently overwriting the first), and
+``LIMIT``/``OFFSET`` operands must be non-negative integers.
+
+GROUP BY is genuine aggregation, not a reorder alias:
+
+* with ``GROUP BY k1, k2, ...`` every SELECT item must be either a
+  grouping-key expression (by structure, or by alias naming a key) or a
+  bare aggregate call -- ``COUNT()`` (zero arguments), ``SUM(e)``,
+  ``MIN(e)``, ``MAX(e)``, ``AVG(e)`` (exactly one argument).  There is no
+  HAVING clause, so that key-coverage rule is the whole validation story.
+* an ungrouped query whose SELECT items are *all* aggregate calls
+  (``SELECT COUNT(), MAX(x) FROM ds``) aggregates the entire result set
+  into a single row.
+* aggregation queries reject ``ORDER BY`` / ``ARRANGE BY`` / ``SAMPLE
+  BY`` (there are no per-row results left to order or sample); ``LIMIT``
+  and ``OFFSET`` apply to the aggregated group rows.
+
+Outside aggregation SELECT items, ``SUM``/``MIN``/``MAX``/``MEAN`` keep
+their per-row element-reduction meaning from :mod:`.functions` (e.g. in a
+WHERE clause, ``SUM(x) > 4`` reduces one sample at a time); ``AVG`` and
+zero-argument ``COUNT`` exist only as aggregates.
 """
 
 from __future__ import annotations
 
 from typing import List, Optional
 
-from .ast_nodes import (BinOp, Call, Index, ListExpr, Literal, Node, Query,
-                        SelectItem, SliceSpec, TensorRef, UnaryOp)
+from .ast_nodes import (AGGREGATE_FUNCS, Aggregate, BinOp, Call, Index,
+                        ListExpr, Literal, Node, Query, SelectItem, SliceSpec,
+                        TensorRef, UnaryOp)
 from .lexer import Token, TQLSyntaxError, tokenize
 
 
@@ -69,36 +96,124 @@ class Parser:
             q.source = self.expect("IDENT").value
             if self.kw("VERSION"):
                 q.version = self.expect("STRING").value
-        if self.kw("WHERE"):
-            q.where = self.parse_expr()
-        if self.kw("GROUP"):
-            # GROUP BY is aliased to ARRANGE BY (TQL has no aggregation joins)
-            self.expect("KEYWORD", "BY")
-            q.arrange_by = self.parse_expr()
-        if self.kw("ORDER"):
-            self.expect("KEYWORD", "BY")
-            q.order_by = self.parse_expr()
-            if self.kw("DESC"):
-                q.order_desc = True
+        seen: set = set()
+
+        def once(clause: str) -> None:
+            if clause in seen:
+                raise TQLSyntaxError(f"duplicate {clause} clause")
+            seen.add(clause)
+
+        while True:
+            if self.kw("WHERE"):
+                once("WHERE")
+                q.where = self.parse_expr()
+            elif self.kw("GROUP"):
+                once("GROUP BY")
+                self.expect("KEYWORD", "BY")
+                q.group_by = [self.parse_expr()]
+                while self.accept("OP", ","):
+                    q.group_by.append(self.parse_expr())
+            elif self.kw("ORDER"):
+                once("ORDER BY")
+                self.expect("KEYWORD", "BY")
+                q.order_by = self.parse_expr()
+                if self.kw("DESC"):
+                    q.order_desc = True
+                else:
+                    self.kw("ASC")
+            elif self.kw("ARRANGE"):
+                once("ARRANGE BY")
+                self.expect("KEYWORD", "BY")
+                q.arrange_by = self.parse_expr()
+            elif self.kw("SAMPLE"):
+                once("SAMPLE BY")
+                self.expect("KEYWORD", "BY")
+                q.sample_by = self.parse_expr()
+                if self.kw("REPLACE"):
+                    tok = self.expect("KEYWORD")
+                    if tok.value not in ("TRUE", "FALSE"):
+                        raise TQLSyntaxError("REPLACE expects TRUE or FALSE")
+                    q.sample_replace = tok.value == "TRUE"
+            elif self.kw("LIMIT"):
+                once("LIMIT")
+                q.limit = self._int_operand("LIMIT")
+                if self.kw("OFFSET"):
+                    q.offset = self._int_operand("OFFSET")
             else:
-                self.kw("ASC")
-        if self.kw("ARRANGE"):
-            self.expect("KEYWORD", "BY")
-            q.arrange_by = self.parse_expr()
-        if self.kw("SAMPLE"):
-            self.expect("KEYWORD", "BY")
-            q.sample_by = self.parse_expr()
-            if self.kw("REPLACE"):
-                tok = self.expect("KEYWORD")
-                if tok.value not in ("TRUE", "FALSE"):
-                    raise TQLSyntaxError("REPLACE expects TRUE or FALSE")
-                q.sample_replace = tok.value == "TRUE"
-        if self.kw("LIMIT"):
-            q.limit = int(float(self.expect("NUMBER").value))
-            if self.kw("OFFSET"):
-                q.offset = int(float(self.expect("NUMBER").value))
+                break
         self.expect("EOF")
+        self._resolve_aggregation(q)
         return q
+
+    def _int_operand(self, clause: str) -> int:
+        tok = self.expect("NUMBER")
+        v = float(tok.value)
+        if not v.is_integer():
+            raise TQLSyntaxError(
+                f"{clause} expects an integer, got {tok.value!r}")
+        n = int(v)
+        if n < 0:
+            raise TQLSyntaxError(f"{clause} must be non-negative, got {n}")
+        return n
+
+    # --------------------------------------------------- aggregation shaping
+    def _resolve_aggregation(self, q: Query) -> None:
+        """Turn aggregate SELECT items into :class:`Aggregate` nodes and
+        validate the aggregation query shape (see module docstring)."""
+
+        def as_aggregate(expr: Node) -> Optional[Aggregate]:
+            if not (isinstance(expr, Call) and expr.name in AGGREGATE_FUNCS):
+                return None
+            if expr.name == "COUNT":
+                if expr.args:
+                    raise TQLSyntaxError(
+                        "COUNT() takes no arguments (it counts group rows)")
+                return Aggregate("COUNT", None)
+            if len(expr.args) != 1:
+                raise TQLSyntaxError(
+                    f"aggregate {expr.name} takes exactly one argument")
+            return Aggregate(expr.name, expr.args[0])
+
+        aggs = [as_aggregate(it.expr) for it in q.items]
+        grouped = q.group_by is not None
+        # Ungrouped: aggregation semantics only when EVERY item is an
+        # aggregate call (so `SELECT SUM(x) ...` aggregates but the legacy
+        # per-row `SELECT MEAN(images) / 255.0 ...` is untouched).  COUNT()
+        # can only be an aggregate, so a mixed ungrouped select is an error.
+        if not grouped:
+            if all(a is not None for a in aggs) and aggs:
+                for it, a in zip(q.items, aggs):
+                    it.expr = a
+            elif any(a is not None and a.func == "COUNT" for a in aggs):
+                raise TQLSyntaxError(
+                    "COUNT() outside GROUP BY requires every SELECT item "
+                    "to be an aggregate")
+            return
+
+        # GROUP BY present: items are aggregates or grouping keys.
+        if q.arrange_by is not None:
+            raise TQLSyntaxError("ARRANGE BY cannot be combined with GROUP BY")
+        if q.order_by is not None:
+            raise TQLSyntaxError("ORDER BY cannot be combined with GROUP BY")
+        if q.sample_by is not None:
+            raise TQLSyntaxError("SAMPLE BY cannot be combined with GROUP BY")
+        keys = q.group_by
+        key_reprs = {repr(k) for k in keys}
+        key_names = {k.name for k in keys if isinstance(k, TensorRef)}
+        for it, a in zip(q.items, aggs):
+            if it.is_star:
+                raise TQLSyntaxError("SELECT * cannot be used with GROUP BY")
+            if a is not None:
+                it.expr = a
+                continue
+            matches_key = (repr(it.expr) in key_reprs
+                           or (it.alias is not None and it.alias in key_names)
+                           or (isinstance(it.expr, TensorRef)
+                               and it.expr.name in key_names))
+            if not matches_key:
+                raise TQLSyntaxError(
+                    "non-aggregated SELECT item must appear in GROUP BY "
+                    f"(offending item: {it.alias or repr(it.expr)})")
 
     def parse_select_items(self) -> List[SelectItem]:
         if self.accept("OP", "*"):

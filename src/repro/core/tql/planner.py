@@ -447,12 +447,8 @@ class _Analyzer:
             else:
                 lo, hi = (a.lo, a.hi) if a.has_values else (math.inf,
                                                             -math.inf)
-            # reductions of an empty sample: 0.0 on the row path, NaN on the
-            # vectorized path -> admit both outcomes
-            if a.maybe_empty and lo <= hi:
-                lo, hi = min(lo, 0.0), max(hi, 0.0)
-            elif a.maybe_empty:
-                lo, hi = 0.0, 0.0
+            # reductions of an empty sample yield NaN on both execution
+            # paths (functions._reduce_all), folded into has_nan below
             if name in ("MEAN", "STD") and lo <= hi:
                 # accumulating reductions round beyond the element bounds
                 padded = _pad(lo, hi, _EPS_MEAN if name == "MEAN" else _EPS_STD)
@@ -530,6 +526,10 @@ class ScanPlan:
     chunks_consulted: int = 0      # distinct (tensor, chunk) stats lookups
     chunks_stats_missing: int = 0  # lookups without a usable (exact) record
     chunks_sketchless: int = 0     # usable records predating the sketches
+    # aggregation pushdown (set by the executor after the fold): chunk
+    # groups whose partial aggregates came straight from ChunkStats with
+    # zero payload fetches
+    agg_groups_stats_answered: int = 0
 
     @property
     def effective(self) -> bool:
@@ -566,6 +566,7 @@ class ScanPlan:
             "chunks_consulted": self.chunks_consulted,
             "chunks_stats_missing": self.chunks_stats_missing,
             "chunks_sketchless": self.chunks_sketchless,
+            "agg_groups_stats_answered": self.agg_groups_stats_answered,
             "stats_coverage": self.stats_coverage,
             "sketch_coverage": self.sketch_coverage,
             "tensors": list(self.tensors),

@@ -1,0 +1,529 @@
+"""GROUP BY / aggregate TQL queries: value parity against a numpy/dict
+reference, the stats-only fast path (zero payload fetches), streaming-fold
+memory bounds, and the parser's aggregation-shape validation.
+
+Every aggregation query must return identical values across use_stats
+on/off and stream on/off/auto (COUNT/MIN/MAX exactly; SUM/AVG to float64
+tolerance — accumulation order differs between the per-chunk partial folds
+and a whole-view fold), over clustered ints, NaN columns, ragged tensors
+with empty samples, text keys, and v1/v2/v3 manifest formats.
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+import repro.core as dl
+from repro.core.manifest import MANIFEST_KEY
+from repro.core.pipeline import ScanPipeline
+from repro.core.tql import TQLSyntaxError, execute_query, parse
+from repro.core.tql.executor import Executor
+from repro.core.tql.functions import get_function
+from repro.core.views import DatasetView
+
+
+def _build(storage=None, n=240):
+    """Clustered dataset: 8 bands of 30 rows, every tensor chunked small so
+    one query spans many chunk groups (the streaming fold has granularity)."""
+    rng = np.random.default_rng(17)
+    ds = dl.Dataset(storage)
+    ds.create_tensor("val", dtype="float32", min_chunk_size=512,
+                     max_chunk_size=1024)
+    ds.create_tensor("lab", htype="class_label", min_chunk_size=128,
+                     max_chunk_size=256)
+    ds.create_tensor("m3", dtype="int64", min_chunk_size=128,
+                     max_chunk_size=256)
+    ds.create_tensor("nanny", dtype="float32", min_chunk_size=128,
+                     max_chunk_size=256)
+    ds.create_tensor("rag", dtype="float32", strict=False,
+                     min_chunk_size=256, max_chunk_size=512)
+    ds.create_tensor("txt", htype="text")
+    rows = []
+    for i in range(n):
+        band = i // 30
+        nanny = np.float32(np.nan) if i % 7 == 0 else np.float32(band + 0.5)
+        row = {
+            "val": (rng.standard_normal(8).astype(np.float32)
+                    + np.float32(band * 10)),
+            "lab": np.int64(band),
+            "m3": np.int64(i % 3),
+            "nanny": np.asarray([nanny], np.float32),
+            "rag": rng.uniform(1, 2, (i % 5,)).astype(np.float32),
+            "txt": np.frombuffer(f"band {band}".encode(),
+                                 dtype=np.uint8).copy(),
+        }
+        ds.append(row)
+        rows.append(row)
+    ds.commit("agg fixture")
+    return ds, rows
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    return _build()
+
+
+def _ref_groups(rows, keyf):
+    """Group row dicts by key in first-appearance order."""
+    groups, order = {}, []
+    for r in rows:
+        k = keyf(r)
+        if k not in groups:
+            groups[k] = []
+            order.append(k)
+        groups[k].append(r)
+    return order, groups
+
+
+def _ref_agg(samples, func):
+    """Reference aggregate over all elements of a group's samples,
+    NaN-skipping, with the executor's empty identities."""
+    flat = (np.concatenate([np.asarray(s, np.float64).ravel()
+                            for s in samples])
+            if samples else np.empty(0))
+    valid = flat[~np.isnan(flat)]
+    if func == "COUNT":
+        return len(samples)
+    if func == "SUM":
+        return float(valid.sum()) if valid.size else 0
+    if not valid.size:
+        return float("nan")
+    return {"MIN": valid.min, "MAX": valid.max, "AVG": valid.mean}[func]()
+
+
+def _assert_close(got, want, exact):
+    if isinstance(want, float) and math.isnan(want):
+        assert math.isnan(float(got))
+    elif exact:
+        assert got == want
+    else:
+        assert np.isclose(float(got), float(want), rtol=1e-6, atol=1e-9)
+
+
+MODES = [(True, None), (True, True), (True, False),
+         (False, None), (False, True), (False, False)]
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("use_stats,stream", MODES)
+def test_grouped_aggregates_match_reference(fixture, use_stats, stream):
+    ds, rows = fixture
+    v = execute_query(
+        ds, "SELECT lab, COUNT() AS c, SUM(val) AS s, MIN(val) AS mn, "
+        "MAX(val) AS mx, AVG(val) AS av FROM dataset GROUP BY lab",
+        use_stats=use_stats, stream=stream)
+    order, groups = _ref_groups(rows, lambda r: int(r["lab"]))
+    assert [int(k) for k in v.derived["lab"]] == order
+    for j, k in enumerate(order):
+        samples = [r["val"] for r in groups[k]]
+        for col, func, exact in (("c", "COUNT", True), ("s", "SUM", False),
+                                 ("mn", "MIN", True), ("mx", "MAX", True),
+                                 ("av", "AVG", False)):
+            _assert_close(v.derived[col][j], _ref_agg(samples, func), exact)
+
+
+@pytest.mark.parametrize("use_stats,stream", MODES)
+def test_ungrouped_aggregates_match_reference(fixture, use_stats, stream):
+    ds, rows = fixture
+    v = execute_query(
+        ds, "SELECT COUNT() AS c, SUM(val) AS s, MIN(val) AS mn, "
+        "MAX(val) AS mx, AVG(val) AS av FROM dataset",
+        use_stats=use_stats, stream=stream)
+    assert len(v) == 1
+    samples = [r["val"] for r in rows]
+    for col, func, exact in (("c", "COUNT", True), ("s", "SUM", False),
+                             ("mn", "MIN", True), ("mx", "MAX", True),
+                             ("av", "AVG", False)):
+        _assert_close(v.derived[col][0], _ref_agg(samples, func), exact)
+
+
+@pytest.mark.parametrize("use_stats", [True, False])
+def test_nan_values_skipped_and_nan_keys_share_a_group(fixture, use_stats):
+    ds, rows = fixture
+    # NaN *values* are skipped by SUM/MIN/MAX/AVG (stats accumulate the
+    # same way), but COUNT still counts the rows
+    v = execute_query(
+        ds, "SELECT lab, COUNT() AS c, SUM(nanny) AS s, AVG(nanny) AS av "
+        "FROM dataset GROUP BY lab", use_stats=use_stats)
+    order, groups = _ref_groups(rows, lambda r: int(r["lab"]))
+    for j, k in enumerate(order):
+        samples = [r["nanny"] for r in groups[k]]
+        _assert_close(v.derived["c"][j], _ref_agg(samples, "COUNT"), True)
+        _assert_close(v.derived["s"][j], _ref_agg(samples, "SUM"), False)
+        _assert_close(v.derived["av"][j], _ref_agg(samples, "AVG"), False)
+    # NaN *keys* land in one shared group (NaN != NaN must not split it)
+    vk = execute_query(ds, "SELECT nanny, COUNT() AS c FROM dataset "
+                       "GROUP BY nanny", use_stats=use_stats)
+    nan_rows = [j for j, k in enumerate(vk.derived["nanny"])
+                if math.isnan(float(k))]
+    assert len(nan_rows) == 1
+    want = sum(1 for r in rows if math.isnan(float(r["nanny"][0])))
+    assert vk.derived["c"][nan_rows[0]] == want
+
+
+@pytest.mark.parametrize("use_stats", [True, False])
+def test_ragged_and_empty_samples(fixture, use_stats):
+    ds, rows = fixture
+    v = execute_query(
+        ds, "SELECT m3, COUNT() AS c, SUM(rag) AS s, MIN(rag) AS mn, "
+        "AVG(rag) AS av FROM dataset GROUP BY m3", use_stats=use_stats)
+    order, groups = _ref_groups(rows, lambda r: int(r["m3"]))
+    assert [int(k) for k in v.derived["m3"]] == order
+    for j, k in enumerate(order):
+        samples = [r["rag"] for r in groups[k]]
+        _assert_close(v.derived["c"][j], _ref_agg(samples, "COUNT"), True)
+        _assert_close(v.derived["s"][j], _ref_agg(samples, "SUM"), False)
+        _assert_close(v.derived["mn"][j], _ref_agg(samples, "MIN"), True)
+        _assert_close(v.derived["av"][j], _ref_agg(samples, "AVG"), False)
+
+
+def test_all_empty_group_yields_identities():
+    ds = dl.Dataset()
+    ds.create_tensor("k", dtype="int64")
+    ds.create_tensor("r", dtype="float32", strict=False)
+    for i in range(20):
+        # group 1's samples are ALL empty: SUM 0, MIN/MAX/AVG NaN
+        ds.append({"k": np.int64(i % 2),
+                   "r": (np.empty(0, np.float32) if i % 2 else
+                         np.full(3, 2.0, np.float32))})
+    ds.commit("c")
+    v = execute_query(ds, "SELECT k, COUNT() AS c, SUM(r) AS s, "
+                      "MIN(r) AS mn, AVG(r) AS av FROM dataset GROUP BY k")
+    assert [int(k) for k in v.derived["k"]] == [0, 1]
+    assert v.derived["c"] == [10, 10]
+    assert v.derived["s"][1] == 0
+    assert math.isnan(v.derived["mn"][1])
+    assert math.isnan(v.derived["av"][1])
+
+
+def test_text_and_expression_and_composite_keys(fixture):
+    ds, rows = fixture
+    # text-htype key: uint8 samples decode to strings
+    v = execute_query(ds, "SELECT txt, COUNT() AS c FROM dataset GROUP BY txt")
+    order, groups = _ref_groups(rows, lambda r: r["txt"].tobytes().decode())
+    assert list(v.derived["txt"]) == order
+    assert v.derived["c"] == [len(groups[k]) for k in order]
+    # expression key, matched structurally by the SELECT item
+    v = execute_query(ds, "SELECT lab % 2 AS par, COUNT() AS c "
+                      "FROM dataset GROUP BY lab % 2")
+    order, groups = _ref_groups(rows, lambda r: int(r["lab"]) % 2)
+    assert [int(k) for k in v.derived["par"]] == order
+    assert v.derived["c"] == [len(groups[k]) for k in order]
+    # composite key
+    v = execute_query(ds, "SELECT lab, m3, COUNT() AS c FROM dataset "
+                      "GROUP BY lab, m3")
+    order, groups = _ref_groups(rows, lambda r: (int(r["lab"]), int(r["m3"])))
+    got = list(zip((int(k) for k in v.derived["lab"]),
+                   (int(k) for k in v.derived["m3"])))
+    assert got == order
+    assert v.derived["c"] == [len(groups[k]) for k in order]
+
+
+@pytest.mark.parametrize("use_stats", [True, False])
+def test_where_then_group_by(fixture, use_stats):
+    ds, rows = fixture
+    v = execute_query(ds, "SELECT lab, COUNT() AS c, MAX(val) AS mx "
+                      "FROM dataset WHERE lab >= 3 AND m3 != 0 GROUP BY lab",
+                      use_stats=use_stats)
+    kept = [r for r in rows if int(r["lab"]) >= 3 and int(r["m3"]) != 0]
+    order, groups = _ref_groups(kept, lambda r: int(r["lab"]))
+    assert [int(k) for k in v.derived["lab"]] == order
+    for j, k in enumerate(order):
+        assert v.derived["c"][j] == len(groups[k])
+        _assert_close(v.derived["mx"][j],
+                      _ref_agg([r["val"] for r in groups[k]], "MAX"), True)
+
+
+def test_limit_offset_slice_group_rows(fixture):
+    ds, rows = fixture
+    full = execute_query(ds, "SELECT lab, COUNT() AS c FROM dataset "
+                         "GROUP BY lab")
+    v = execute_query(ds, "SELECT lab, COUNT() AS c FROM dataset "
+                      "GROUP BY lab LIMIT 3 OFFSET 2")
+    assert list(v.derived["lab"]) == list(full.derived["lab"])[2:5]
+    assert list(v.derived["c"]) == list(full.derived["c"])[2:5]
+
+
+def test_view_order_and_duplicate_rows(fixture):
+    ds, rows = fixture
+    rng = np.random.default_rng(4)
+    perm = rng.permutation(len(rows))
+    view = DatasetView.full(ds)[perm]
+    v = execute_query(view, "SELECT lab, COUNT() AS c FROM view GROUP BY lab")
+    order, groups = _ref_groups([rows[i] for i in perm],
+                                lambda r: int(r["lab"]))
+    assert [int(k) for k in v.derived["lab"]] == order
+    assert v.derived["c"] == [len(groups[k]) for k in order]
+    # duplicated rows: stats path must stand down (full-coverage gate) and
+    # COUNT must count every occurrence
+    dup = DatasetView.full(ds)[np.asarray([0, 0, 1, 31, 31, 31])]
+    vd = execute_query(dup, "SELECT lab, COUNT() AS c FROM view GROUP BY lab")
+    assert [int(k) for k in vd.derived["lab"]] == [0, 1]
+    assert vd.derived["c"] == [3, 3]
+    assert vd.scan_plan["agg_groups_stats_answered"] == 0
+
+
+def test_empty_view_identity_row_and_empty_groups(fixture):
+    ds, _rows = fixture
+    v = execute_query(ds, "SELECT COUNT() AS c, SUM(val) AS s, MIN(val) AS mn "
+                      "FROM dataset WHERE lab > 1000")
+    assert len(v) == 1
+    assert v.derived["c"] == [0] and v.derived["s"] == [0]
+    assert math.isnan(v.derived["mn"][0])
+    vg = execute_query(ds, "SELECT lab, COUNT() AS c FROM dataset "
+                       "WHERE lab > 1000 GROUP BY lab")
+    assert len(vg) == 0 and vg.derived["c"] == []
+
+
+def test_int_sum_is_exact_above_float53(monkeypatch):
+    """Integer SUM accumulates as Python int: values whose float64 sum
+    would round stay exact, on both the fold and the stats paths."""
+    big = 2 ** 53
+    ds = dl.Dataset()
+    ds.create_tensor("b", dtype="int64", min_chunk_size=256,
+                     max_chunk_size=512)
+    for _ in range(40):
+        ds.append({"b": np.asarray([big, 1], np.int64)})
+    ds.commit("c")
+    want = 40 * (big + 1)
+    for use_stats in (True, False):
+        v = execute_query(ds, "SELECT SUM(b) AS s, COUNT() AS c FROM dataset",
+                          use_stats=use_stats)
+        assert v.derived["s"][0] == want       # float64 would give 40*big
+        assert v.derived["c"][0] == 40
+    # ...and MIN/MAX beyond 2**53 refuse the stats answer (widened bounds)
+    v = execute_query(ds, "SELECT MIN(b) AS mn, MAX(b) AS mx FROM dataset")
+    assert v.derived["mn"][0] == float(1)
+    assert v.derived["mx"][0] == float(big)
+
+
+# --------------------------------------------------------- stats fast path
+def test_ungrouped_aggregate_is_answered_with_zero_requests():
+    base = dl.MemoryProvider()
+    _ds, rows = _build(base)
+    s3 = dl.SimulatedS3Provider(base, time_scale=0)
+    cold = dl.Dataset(s3)
+    open_requests = s3.stats["requests"]
+    v = execute_query(cold, "SELECT COUNT() AS c, SUM(val) AS s, "
+                      "MIN(val) AS mn, MAX(val) AS mx, AVG(val) AS av "
+                      "FROM dataset")
+    assert s3.stats["requests"] == open_requests, \
+        "stats-only aggregate fetched payloads"
+    plan = v.scan_plan
+    assert plan["agg_groups"] > 0
+    assert plan["agg_groups_stats_answered"] == plan["agg_groups"]
+    assert plan["agg_groups_folded"] == 0
+    samples = [r["val"] for r in rows]
+    for col, func, exact in (("c", "COUNT", True), ("s", "SUM", False),
+                             ("mn", "MIN", True), ("mx", "MAX", True),
+                             ("av", "AVG", False)):
+        _assert_close(v.derived[col][0], _ref_agg(samples, func), exact)
+
+
+def test_grouped_single_valued_key_chunks_answer_from_sketch():
+    """A constant-label dataset: every key chunk's dictionary sketch has
+    exactly one entry, so the whole grouped aggregate is stats-answered
+    with zero payload fetches."""
+    base = dl.MemoryProvider()
+    ds = dl.Dataset(base)
+    ds.create_tensor("lab", htype="class_label", min_chunk_size=128,
+                     max_chunk_size=256)
+    for _ in range(200):
+        ds.append({"lab": np.int64(5)})
+    ds.commit("c")
+    s3 = dl.SimulatedS3Provider(base, time_scale=0)
+    cold = dl.Dataset(s3)
+    open_requests = s3.stats["requests"]
+    v = execute_query(cold, "SELECT lab, COUNT() AS c, SUM(lab) AS s, "
+                      "AVG(lab) AS av FROM dataset GROUP BY lab")
+    assert s3.stats["requests"] == open_requests
+    plan = v.scan_plan
+    assert plan["agg_groups"] > 1
+    assert plan["agg_groups_stats_answered"] == plan["agg_groups"]
+    assert [int(k) for k in v.derived["lab"]] == [5]
+    assert v.derived["c"] == [200]
+    assert v.derived["s"][0] == 200 * 5
+    assert v.derived["av"][0] == 5.0
+
+
+def test_multi_band_grouped_mixes_stats_and_fold(fixture):
+    """Band-clustered labels: interior chunks are single-valued (stats-
+    answered), band-boundary chunks fold — values stay identical to the
+    all-fold run."""
+    ds, rows = fixture
+    on = execute_query(ds, "SELECT lab, COUNT() AS c, SUM(lab) AS s "
+                       "FROM dataset GROUP BY lab", use_stats=True)
+    off = execute_query(ds, "SELECT lab, COUNT() AS c, SUM(lab) AS s "
+                        "FROM dataset GROUP BY lab", use_stats=False)
+    assert on.scan_plan["agg_groups_stats_answered"] > 0
+    assert list(on.derived["lab"]) == list(off.derived["lab"])
+    assert on.derived["c"] == off.derived["c"]
+    assert on.derived["s"] == off.derived["s"]
+
+
+def test_aggregate_plan_reaches_dataloader_stats(fixture):
+    ds, _rows = fixture
+    v = execute_query(ds, "SELECT lab, COUNT() AS c FROM dataset "
+                      "WHERE lab >= 0 GROUP BY lab")
+    assert v.scan_plan["agg_groups_stats_answered"] >= 0
+    assert "rows" in v.scan_plan  # WHERE plan and agg plan share the report
+
+
+# ------------------------------------------------------- streaming memory
+def test_streaming_fold_holds_one_chunk_group_at_a_time(fixture, monkeypatch):
+    ds, rows = fixture
+    view = DatasetView.full(ds)
+    pipe = ScanPipeline.for_query(view, ["lab", "val"])
+    sizes = [len(pipe.group_positions(g)) for g in range(pipe.n_groups)]
+    pipe.close()
+    assert max(sizes) < len(rows)
+    seen = []
+    orig = Executor._agg_fold
+
+    def spy(self, sub, positions, *a, **k):
+        seen.append(len(sub))
+        return orig(self, sub, positions, *a, **k)
+
+    monkeypatch.setattr(Executor, "_agg_fold", spy)
+    v = execute_query(ds, "SELECT lab, COUNT() AS c, SUM(val) AS s "
+                      "FROM dataset GROUP BY lab",
+                      use_stats=False, stream=True)
+    assert len(v) == 8
+    assert len(seen) > 1, "fold did not stream per chunk group"
+    assert max(seen) <= max(sizes), \
+        f"fold held {max(seen)} rows resident; largest group is {max(sizes)}"
+
+
+# ------------------------------------------------- manifest compatibility
+def _strip_stats_fields(base, fields, marker=None, drop_stats=False):
+    """Rewrite the persisted manifest (and loose sidecars) without the
+    given per-chunk stats fields — simulates records written before the
+    field existed (e.g. v2 manifests predate ``sum``)."""
+    ptr = json.loads(base.get(MANIFEST_KEY).decode())
+    if marker:
+        ptr["format"] = marker
+    for seg_key in ptr["segments"]:
+        seg = json.loads(base.get(seg_key).decode())
+        if marker:
+            seg["format"] = marker
+        for node in seg["nodes"].values():
+            if drop_stats:
+                node.pop("stats", None)
+                continue
+            for cs in node.get("stats", {}).values():
+                for rec in cs.get("chunks", []):
+                    if rec:
+                        for f in fields:
+                            rec.pop(f, None)
+        base.put(seg_key, json.dumps(seg).encode())
+    base.put(MANIFEST_KEY, json.dumps(ptr).encode())
+    for key in list(base.list_keys()):
+        if key.endswith("chunk_stats.json"):
+            doc = json.loads(base.get(key).decode())
+            for rec in doc.get("chunks", {}).values():
+                for f in fields:
+                    rec.pop(f, None)
+            base.put(key, json.dumps(doc).encode())
+
+
+def test_v2_manifest_without_sum_field_folds_but_stays_correct():
+    base = dl.MemoryProvider()
+    _ds, rows = _build(base, n=120)
+    _strip_stats_fields(base, ("sum",), marker="deeplake-repro-manifest-v2")
+    ds2 = dl.Dataset(base)
+    v = execute_query(ds2, "SELECT COUNT() AS c, SUM(val) AS s, "
+                      "MIN(val) AS mn FROM dataset")
+    samples = [r["val"] for r in rows]
+    _assert_close(v.derived["c"][0], _ref_agg(samples, "COUNT"), True)
+    _assert_close(v.derived["s"][0], _ref_agg(samples, "SUM"), False)
+    _assert_close(v.derived["mn"][0], _ref_agg(samples, "MIN"), True)
+    # SUM needs the missing field: every group folds...
+    assert v.scan_plan["agg_groups_stats_answered"] == 0
+    # ...but a sum-free aggregate still answers from the v2 bounds
+    v2 = execute_query(ds2, "SELECT COUNT() AS c, MIN(val) AS mn, "
+                       "MAX(val) AS mx FROM dataset")
+    assert v2.scan_plan["agg_groups_stats_answered"] \
+        == v2.scan_plan["agg_groups"] > 0
+
+
+def test_v1_manifest_without_stats_still_aggregates():
+    base = dl.MemoryProvider()
+    _ds, rows = _build(base, n=120)
+    _strip_stats_fields(base, ("sum",), marker="deeplake-repro-manifest-v1",
+                        drop_stats=True)
+    ds2 = dl.Dataset(base)
+    v = execute_query(ds2, "SELECT lab, COUNT() AS c, AVG(val) AS av "
+                      "FROM dataset GROUP BY lab")
+    order, groups = _ref_groups(rows, lambda r: int(r["lab"]))
+    assert [int(k) for k in v.derived["lab"]] == order
+    for j, k in enumerate(order):
+        assert v.derived["c"][j] == len(groups[k])
+        _assert_close(v.derived["av"][j],
+                      _ref_agg([r["val"] for r in groups[k]], "AVG"), False)
+
+
+# ------------------------------------------------------------------ parser
+@pytest.mark.parametrize("q", [
+    "SELECT * FROM ds LIMIT 3.7",
+    "SELECT * FROM ds LIMIT -1",
+    "SELECT * FROM ds LIMIT 5 OFFSET 1.5",
+    "SELECT * FROM ds LIMIT 5 OFFSET -2",
+    "SELECT * FROM ds WHERE x > 0 WHERE x < 5",
+    "SELECT * FROM ds LIMIT 5 LIMIT 6",
+    "SELECT lab, COUNT() FROM ds GROUP BY lab GROUP BY lab",
+    "SELECT lab, COUNT() FROM ds GROUP BY lab ARRANGE BY lab",
+    "SELECT lab, COUNT() FROM ds GROUP BY lab ORDER BY lab",
+    "SELECT lab, COUNT() FROM ds GROUP BY lab SAMPLE BY lab",
+    "SELECT lab, COUNT(x) FROM ds GROUP BY lab",
+    "SELECT lab, SUM() FROM ds GROUP BY lab",
+    "SELECT lab, SUM(x, y) FROM ds GROUP BY lab",
+    "SELECT x FROM ds GROUP BY lab",
+    "SELECT * FROM ds GROUP BY lab",
+    "SELECT COUNT(), x FROM ds",
+])
+def test_parser_rejects_malformed_queries(q):
+    with pytest.raises(TQLSyntaxError):
+        parse(q)
+
+
+def test_parser_accepts_and_shapes_aggregates():
+    q = parse("SELECT lab, COUNT() AS c, AVG(val) AS av FROM ds "
+              "GROUP BY lab LIMIT 4 OFFSET 1")
+    assert q.is_aggregate and q.limit == 4 and q.offset == 1
+    assert len(q.group_by) == 1
+    q2 = parse("SELECT COUNT() FROM ds")
+    assert q2.is_aggregate
+    # mixed per-row select without COUNT() stays legacy (MEAN/SUM keep
+    # their per-row element-reduction meaning outside aggregation)
+    q3 = parse("SELECT MEAN(x) AS m, lab FROM ds LIMIT 3")
+    assert not q3.is_aggregate
+
+
+def test_legacy_per_row_reductions_untouched(fixture):
+    ds, rows = fixture
+    v = execute_query(ds, "SELECT MIN(rag) AS mn, SUM(rag) AS s, lab "
+                      "FROM dataset LIMIT 10")
+    assert len(v) == 10
+    for j in range(10):
+        r = rows[j]["rag"]
+        if r.size:
+            assert np.isclose(float(v.derived["mn"][j]), float(r.min()))
+            assert np.isclose(float(v.derived["s"][j]), float(r.sum()),
+                              rtol=1e-6)
+        else:  # empty sample: MIN is NaN, SUM is 0 (not 0.0-for-MIN)
+            assert math.isnan(float(v.derived["mn"][j]))
+            assert float(v.derived["s"][j]) == 0.0
+
+
+def test_reduce_all_empty_identities_row_and_batched_agree():
+    for name in ("MIN", "MAX", "MEAN", "STD"):
+        spec = get_function(name)
+        assert math.isnan(float(spec.row(np.empty(0, np.float32))))
+        b = spec.batched(np.zeros((3, 0), np.float32))
+        assert b.shape == (3,) and np.isnan(b).all()
+    spec = get_function("SUM")
+    assert float(spec.row(np.empty(0, np.float32))) == 0.0
+    b = spec.batched(np.zeros((2, 0), np.float32))
+    assert b.shape == (2,) and (b == 0.0).all()
